@@ -1,0 +1,60 @@
+"""Render the roofline table (markdown) from experiments/dryrun.jsonl.
+
+Run:  PYTHONPATH=src python -m benchmarks.roofline_report [--mesh 16x16]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+
+def load(path: str):
+    recs = []
+    with open(path) as f:
+        for line in f:
+            recs.append(json.loads(line))
+    return recs
+
+
+def fmt_table(recs, mesh: str) -> str:
+    rows = []
+    head = ("| arch | shape | kind | t_comp (s) | t_mem (s) | t_coll (s) | "
+            "dominant | mem/dev (GiB) | MODEL/HLO flops | roofline | note |")
+    sep = "|" + "---|" * 11
+    rows.append(head)
+    rows.append(sep)
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "skipped":
+            rows.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | — "
+                        f"| — | — | SKIP: {r['reason']} |")
+            continue
+        if r["status"] != "ok":
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['kind']} "
+                        f"| — | — | — | — | — | — | — | FAIL {r['error'][:60]} |")
+            continue
+        a = r["analytic"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} "
+            f"| {a['t_compute_s']:.4f} | {a['t_memory_s']:.4f} "
+            f"| {a['t_collective_s']:.4f} | {a['dominant']} "
+            f"| {r['bytes_per_device']/2**30:.2f} "
+            f"| {a['useful_flops_frac']:.2f} | {a['roofline_frac']:.1%} "
+            f"| n_micro={r.get('n_micro','—')} coll_ops={r['collectives']['count']} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--path", default=os.path.join(
+        os.path.dirname(__file__), "..", "experiments", "dryrun.jsonl"))
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    recs = load(args.path)
+    print(fmt_table(recs, args.mesh))
+
+
+if __name__ == "__main__":
+    main()

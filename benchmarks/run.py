@@ -1,0 +1,187 @@
+"""Benchmark harness — one function per paper table. Prints
+``name,us_per_call,derived`` CSV rows (derived = the table's headline metric).
+
+Run:  PYTHONPATH=src python -m benchmarks.run [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+
+def _timeit(fn, *args, reps: int = 3, **kw):
+    fn(*args, **kw)  # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args, **kw)
+    return (time.perf_counter() - t0) / reps * 1e6, out
+
+
+def table1_cells():
+    """Table I: approximate cell truth tables, error rate, error probability."""
+    from repro.core import pe
+    us, cases = _timeit(pe.error_cases, pe.approx_ppc, nppc=False)
+    num, den = pe.cell_error_probability(pe.approx_ppc, nppc=False)
+    print(f"table1_ppc_error_rate,{us:.1f},{len(cases)}/16")
+    print(f"table1_ppc_error_prob,{us:.1f},{num}/{den}")
+    num_n, _ = pe.cell_error_probability(pe.approx_nppc, nppc=True)
+    print(f"table1_nppc_error_prob,{us:.1f},{num_n}/{den}")
+
+
+def table2_cells():
+    """Table II: cell-level PDP + the paper's savings claims."""
+    from repro.core import energy
+    us, claims = _timeit(energy.cell_energy_claims)
+    for k, v in claims.items():
+        print(f"table2_{k},{us:.1f},{v:.3f}")
+
+
+def table3_pe():
+    """Table III: PE-level energy/PADP savings."""
+    from repro.core import energy
+    us, claims = _timeit(energy.pe_energy_claims)
+    for k, v in claims.items():
+        print(f"table3_{k},{us:.1f},{v:.3f}")
+
+
+def table4_sa(fast: bool = False):
+    """Table IV: SA-level PDP across sizes + GEMM energy extrapolation."""
+    from repro.core import energy
+    us, claims = _timeit(energy.sa_energy_claims)
+    for k, v in claims.items():
+        print(f"table4_{k},{us:.1f},{v:.3f}")
+    for sa in (8, 16):
+        e_ex = energy.gemm_energy_estimate(256, 256, 256, design="exact_ref6",
+                                           sa_dim=sa)
+        e_ap = energy.gemm_energy_estimate(256, 256, 256,
+                                           design="proposed_approx", sa_dim=sa)
+        print(f"table4_gemm256_sa{sa}_saving,0.0,"
+              f"{1 - e_ap['energy_nJ'] / e_ex['energy_nJ']:.3f}")
+
+
+def table5_errors(fast: bool = False):
+    """Table V: NMED/MRED of the 8-bit PE vs k (ours vs paper)."""
+    from repro.core import errors
+    paper_signed = {2: (0.0001, 0.0037), 4: (0.0004, 0.0130),
+                    6: (0.0022, 0.0481), 8: (0.0081, 0.2418)}
+    ks = (2, 6) if fast else (2, 4, 6, 8)
+    for k in ks:
+        us, m = _timeit(errors.pe_error_metrics, 8, k, True, reps=1)
+        pn, pm = paper_signed[k]
+        print(f"table5_signed_k{k}_nmed,{us:.0f},{m['NMED']:.5f} (paper {pn})")
+        print(f"table5_signed_k{k}_mred,{us:.0f},{m['MRED']:.5f} (paper {pm})")
+
+
+def table6_apps(fast: bool = False):
+    """Table VI: DCT / edge / BDCN application quality."""
+    from repro.apps import bdcn, dct, edge
+    size = 64 if fast else 128
+    ks = (2, 8) if fast else (2, 4, 6, 8)
+    us, res = _timeit(dct.run, size, ks, reps=1)
+    for k, v in res.items():
+        print(f"table6_dct_k{k},{us:.0f},psnr={v['psnr']:.2f}dB ssim={v['ssim']:.3f}")
+    us, res = _timeit(edge.run, size, ks, reps=1)
+    for k, v in res.items():
+        print(f"table6_edge_k{k},{us:.0f},psnr={v['psnr']:.2f}dB ssim={v['ssim']:.3f}")
+    us, res = _timeit(bdcn.run, 48 if fast else 64, ks, reps=1)
+    for k, v in res.items():
+        print(f"table6_bdcn_k{k},{us:.0f},psnr={v['psnr']:.2f}dB ssim={v['ssim']:.3f}")
+
+
+def fig9_fig10_pareto(fast: bool = False):
+    """Figs. 9/10: PDP vs NMED/MRED trade-off of the signed 8-bit PE vs k.
+    PDP from the energy model (approx cells in the low-k columns, exact above),
+    error from the exhaustive sweep."""
+    from repro.core import energy, errors
+    from repro.core.emulate import nppc_count, ppc_count
+    ks = (2, 6) if fast else (2, 4, 5, 6, 8)
+    n = 8
+    exact_pdp = energy.pe_energy_from_cells("proposed_exact", n)
+    for k in ks:
+        frac = min(1.0, k / (2 * n - 1))     # fraction of columns approximated
+        pdp = ((1 - frac) * energy.pe_energy_from_cells("proposed_exact", n)
+               + frac * energy.pe_energy_from_cells("proposed_approx", n))
+        m = errors.pe_error_metrics(n, k, signed=True)
+        print(f"fig9_k{k},0.0,pdp={pdp:.0f}aJ({pdp/exact_pdp:.2f}x) "
+              f"nmed={m['NMED']:.5f} mred={m['MRED']:.5f}")
+
+
+def latency_wavefront():
+    """Latency formula 3N-2 [11] from the cycle-accurate SA model."""
+    from repro.core import systolic
+    rng = np.random.default_rng(0)
+    for n in (3, 4, 8):
+        a = rng.integers(-8, 8, (n, n))
+        b = rng.integers(-8, 8, (n, n))
+        us, (out, cycles) = _timeit(systolic.simulate, a, b, reps=1)
+        ok = np.array_equal(out, a @ b)
+        print(f"latency_sa{n},{us:.0f},{cycles}cyc(3N-2={3*n-2}) exact={ok}")
+
+
+def kernels_bench(fast: bool = False):
+    """Pallas kernels (interpret mode on CPU): exact vs approx vs onehot."""
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    from repro.core import lut
+    rng = np.random.default_rng(0)
+    m = 128 if fast else 256
+    a = jnp.asarray(rng.integers(-128, 128, (m, m)), jnp.int32)
+    b = jnp.asarray(rng.integers(-128, 128, (m, m)), jnp.int32)
+    us, _ = _timeit(lambda: np.asarray(ops.systolic_matmul(a, b)), reps=2)
+    print(f"kernel_exact_{m}cube,{us:.0f},int8->int32")
+    us, _ = _timeit(lambda: np.asarray(ops.approx_matmul(a, b, k=4)), reps=2)
+    print(f"kernel_approx_lut_{m}cube,{us:.0f},k=4")
+    tb = lut.build_onehot_weights(np.asarray(b), k=4)
+    us, _ = _timeit(lambda: np.asarray(lut.onehot_matmul(a, tb)), reps=2)
+    print(f"kernel_approx_onehot_{m}cube,{us:.0f},k=4 (MXU rewrite)")
+
+
+def roofline_summary():
+    """Dry-run roofline table (reads experiments/dryrun.jsonl if present)."""
+    import json
+    import os
+    path = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "dryrun.jsonl")
+    if not os.path.exists(path):
+        print("roofline_summary,0,skipped (run repro.launch.dryrun --all first)")
+        return
+    n_ok = n_skip = n_err = 0
+    worst = (None, 1e9)
+    with open(path) as f:
+        for line in f:
+            r = json.loads(line)
+            if r["status"] == "ok":
+                n_ok += 1
+                rf = r.get("analytic", {}).get("roofline_frac", 0)
+                if r["mesh"] == "16x16" and rf < worst[1]:
+                    worst = (f"{r['arch']}x{r['shape']}", rf)
+            elif r["status"] == "skipped":
+                n_skip += 1
+            else:
+                n_err += 1
+    print(f"roofline_cells,0,{n_ok}ok/{n_skip}skip/{n_err}fail")
+    if worst[0]:
+        print(f"roofline_worst_cell,0,{worst[0]}@{worst[1]:.1%}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    table1_cells()
+    table2_cells()
+    table3_pe()
+    table4_sa(args.fast)
+    table5_errors(args.fast)
+    table6_apps(args.fast)
+    fig9_fig10_pareto(args.fast)
+    latency_wavefront()
+    kernels_bench(args.fast)
+    roofline_summary()
+
+
+if __name__ == "__main__":
+    main()

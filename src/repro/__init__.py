@@ -1,0 +1,6 @@
+"""repro — energy-efficient exact/approximate systolic-array matmul, in JAX.
+
+Reproduction + TPU-native extension of Jaswal et al., "Energy Efficient Exact and
+Approximate Systolic Array Architecture for Matrix Multiplication" (VLSID 2026).
+"""
+__version__ = "0.1.0"

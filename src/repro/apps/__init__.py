@@ -1,0 +1,1 @@
+from . import bdcn, dct, edge, images  # noqa: F401

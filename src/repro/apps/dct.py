@@ -1,0 +1,91 @@
+"""8x8 integer-scaled DCT image compression through the approximate systolic GEMM
+(paper §V-A; integer DCT per Meher et al. [18], HEVC T8 matrix).
+
+Pipeline (all multiplies are 8-bit PE GEMMs):
+  X (centered int8 block) -> T. X  (>>7, saturate int8) -> . T^T (>>7) = coeffs
+  reconstruction uses the exact transpose pipeline; PSNR/SSIM measured against
+  the exact-arithmetic output of the same pipeline, as in the paper.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.core import emulate, errors
+from . import images
+
+# HEVC-style 8x8 integer DCT matrix (fits signed 8-bit operands)
+T8 = np.array([
+    [64, 64, 64, 64, 64, 64, 64, 64],
+    [89, 75, 50, 18, -18, -50, -75, -89],
+    [83, 36, -36, -83, -83, -36, 36, 83],
+    [75, -18, -89, -50, 50, 89, 18, -75],
+    [64, -64, -64, 64, 64, -64, -64, 64],
+    [50, -89, 18, 75, -75, -18, 89, 50],
+    [36, -83, 83, -36, -36, 83, -83, 36],
+    [18, -50, 89, -75, 75, -89, 50, -18]], dtype=np.int32)
+
+
+def _gemm(a: np.ndarray, b: np.ndarray, k: int, *, fused: bool = True) -> np.ndarray:
+    """Batched 8x8 approximate GEMM. `fused=True` chains the bit-level PE
+    (faithful to the paper's fused-MAC simulation, including accumulator error);
+    False uses the faster product-table model."""
+    if fused:
+        acc = np.zeros(a.shape[:-1] + (b.shape[-1],), np.int32)
+        for kk in range(a.shape[-1]):
+            acc = np.asarray(emulate.pe_mac(
+                a[..., :, kk][..., :, None], b[..., kk, :][..., None, :], acc,
+                n_bits=8, k=k, signed=True, acc_bits=24))
+        return acc
+    table = emulate.product_table(8, k, True, 24)
+    return table[a[..., :, :, None] & 255, b[..., None, :, :] & 255].sum(axis=-2)
+
+
+def _sat8(x: np.ndarray, shift: int) -> np.ndarray:
+    return np.clip(x >> shift, -128, 127).astype(np.int32)
+
+
+def forward_dct_blocks(blocks: np.ndarray, k: int) -> np.ndarray:
+    """blocks: (N, 8, 8) uint8 -> (N, 8, 8) int coefficients via approx GEMM."""
+    x = blocks.astype(np.int32) - 128
+    t = np.broadcast_to(T8, x.shape)
+    s1 = _sat8(_gemm(t, x, k), 7)                  # T . X, rescale to int8
+    coeff = _gemm(s1, np.broadcast_to(T8.T.copy(), x.shape), k)
+    return coeff
+
+
+def inverse_dct_blocks(coeff: np.ndarray) -> np.ndarray:
+    """Exact float inverse of the integer pipeline (shared by approx & exact).
+
+    Forward was C = (T.X >> 7) . T^T  ~=  T.X.T^T / 128, so
+    X = 128 * T^{-1} . C . (T^{-1})^T.
+    """
+    tinv = np.linalg.inv(T8.astype(np.float64))
+    x = 128.0 * np.einsum("ij,njk,kl->nil", tinv, coeff.astype(np.float64),
+                          tinv.T)
+    return x + 128.0
+
+
+def run(size: int = 256, ks=(0, 2, 4, 6, 8), seed: int = 0) -> Dict[int, Dict]:
+    """Returns {k: {psnr, ssim}} of approx-DCT reconstruction vs exact-DCT
+    reconstruction (the paper's methodology)."""
+    img = images.test_image(size, seed)
+    blocks = images.to_blocks(img)
+    h = w = size
+    recon = {}
+    for k in ks:
+        coeff = forward_dct_blocks(blocks, k)
+        rec = inverse_dct_blocks(coeff)
+        recon[k] = images.from_blocks(np.clip(rec, 0, 255), h, w)
+    exact = recon.get(0)
+    if exact is None:
+        coeff = forward_dct_blocks(blocks, 0)
+        exact = images.from_blocks(np.clip(inverse_dct_blocks(coeff), 0, 255), h, w)
+    out = {}
+    for k in ks:
+        if k == 0:
+            continue
+        out[k] = {"psnr": errors.psnr(exact, recon[k]),
+                  "ssim": errors.ssim(exact, recon[k])}
+    return out

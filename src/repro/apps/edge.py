@@ -1,0 +1,51 @@
+"""Kernel-based edge detection through the approximate systolic GEMM (paper §V-B).
+
+The Laplacian convolution is lowered to im2col GEMM — (H*W, 9) x (9, 1) — and
+executed with the approximate PE product-table model; output quality is measured
+against the exact-arithmetic output of the identical pipeline.
+"""
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from repro.core import emulate, errors
+from . import images
+
+LAPLACIAN = np.array([[0, 1, 0], [1, -4, 1], [0, 1, 0]], dtype=np.int32)
+LAPLACIAN8 = np.array([[1, 1, 1], [1, -8, 1], [1, 1, 1]], dtype=np.int32)
+
+
+def im2col(img: np.ndarray, kh: int = 3, kw: int = 3) -> np.ndarray:
+    from numpy.lib.stride_tricks import sliding_window_view
+    v = sliding_window_view(img, (kh, kw))           # (H-2, W-2, 3, 3)
+    return v.reshape(-1, kh * kw)
+
+
+def conv_gemm(img: np.ndarray, kernel: np.ndarray, k: int) -> np.ndarray:
+    """Approximate-GEMM convolution. img uint8 -> int32 response map."""
+    h, w = img.shape
+    cols = im2col(img.astype(np.int32) - 128)        # center into int8 range
+    kflat = kernel.reshape(-1, 1)
+    table = emulate.product_table(8, k, True, 24)
+    out = table[cols & 255, kflat[None, :, 0] & 255].sum(axis=1)
+    return out.reshape(h - 2, w - 2)
+
+
+def edge_map(resp: np.ndarray) -> np.ndarray:
+    mag = np.abs(resp).astype(np.float64)
+    mag = 255.0 * mag / max(mag.max(), 1.0)
+    return np.clip(mag, 0, 255)
+
+
+def run(size: int = 256, ks=(2, 4, 6, 8), seed: int = 0,
+        kernel: np.ndarray = LAPLACIAN) -> Dict[int, Dict]:
+    img = images.test_image(size, seed)
+    exact = edge_map(conv_gemm(img, kernel, 0))
+    out = {}
+    for k in ks:
+        approx = edge_map(conv_gemm(img, kernel, k))
+        out[k] = {"psnr": errors.psnr(exact, approx),
+                  "ssim": errors.ssim(exact, approx)}
+    return out

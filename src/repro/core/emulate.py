@@ -1,0 +1,206 @@
+"""Bit-level emulation of the paper's exact/approximate fused-MAC PE.
+
+The PE computes ``a*b + c`` (N-bit operands, ``acc_bits``-bit accumulator) via a
+carry-save array of PPC/NPPC cells; columns ``< k`` use the approximate cells of
+Table I, the rest are exact. This module emulates that array *bit-exactly* in a
+fully vectorized way:
+
+The carry-save state is packed into integer words ``S`` and ``C`` (uint32): bit ``w``
+of ``S``/``C`` is the sum/carry bit of column ``w``. One partial-product row is then
+absorbed into (S, C) with ~10 word-wide bitwise ops, processing every column of every
+batch element at once. The Baugh-Wooley decomposition supplies the NPPC positions
+(the ``2N-2`` sign-row cells) and the two's-complement correction constant.
+
+Cell-count check (validates the paper's quote of 50 PPC + 14 NPPC for N=8):
+PPC = (N-1)^2 + 1 = N^2 - 2N + 2 (the paper's prose "N^2-2N-2" is a sign typo; its own
+"50 PPC" quote matches +2), NPPC = 2N - 2.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+U32 = jnp.uint32
+
+
+class PEConfig(NamedTuple):
+    n_bits: int = 8        # operand width N
+    k: int = 0             # approximation factor: columns < k use approximate cells
+    signed: bool = True    # Baugh-Wooley signed vs plain unsigned array
+    acc_bits: int = 24     # fused accumulator width (two's complement when signed)
+
+
+def ppc_count(n_bits: int) -> int:
+    return (n_bits - 1) ** 2 + 1
+
+
+def nppc_count(n_bits: int) -> int:
+    return 2 * n_bits - 2
+
+
+def _rows_and_masks(cfg: PEConfig):
+    """Static per-row metadata: for row i, which columns hold PPC vs NPPC cells.
+
+    Returns (row_specs, const_word). row_specs[i] = (ppc_cols, nppc_cols) as python
+    lists of (col, a_bit, b_bit). const_word is the Baugh-Wooley correction constant
+    (already reduced modulo 2**acc_bits).
+    """
+    n, acc = cfg.n_bits, cfg.acc_bits
+    rows = []
+    if not cfg.signed:
+        for i in range(n):
+            rows.append(([(i + j, j, i) for j in range(n)], []))
+        const = 0
+    else:
+        for i in range(n - 1):
+            ppc = [(i + j, j, i) for j in range(n - 1)]
+            nppc = [(i + n - 1, n - 1, i)]          # ~(a_{N-1} b_i)
+            rows.append((ppc, nppc))
+        # row N-1: ~(a_j b_{N-1}) for j<N-1, plus a_{N-1}b_{N-1} at 2N-2
+        rows.append((
+            [(2 * n - 2, n - 1, n - 1)],
+            [(j + n - 1, j, n - 1) for j in range(n - 1)],
+        ))
+        # constant: +2^N - 2^{2N-1}  (mod 2^acc)
+        const = (2 ** n - 2 ** (2 * n - 1)) % (2 ** acc)
+    return rows, const
+
+
+def _absorb_row(s, c, e, m_ppc, m_nppc, ak, acc_mask):
+    """Absorb one addend row into the carry-save state (word-parallel cells).
+
+    s, c: current sum/carry words. e: effective addend bits (p at PPC positions,
+    ~p at NPPC positions, 0 where no cell). m_ppc/m_nppc: position masks. ak: mask of
+    approximate columns (already intersected with cell positions).
+    """
+    ex = ~ak & acc_mask
+    # exact full adder at every position (cell-less positions degenerate to HA on s,c)
+    x = s ^ e
+    s_exact = x ^ c
+    c_exact = (s & e) | (c & x)
+    # approximate PPC: S = (S|C)&~p ; C = p
+    sc = s | c
+    s_ap = sc & ~e
+    c_ap = e
+    # approximate NPPC (e already holds q=~p): C = (S|C)&q ; S = ~C
+    c_an = sc & e
+    s_an = ~c_an
+    ap = ak & m_ppc
+    an = ak & m_nppc
+    s_new = (s_exact & ex) | (s_ap & ap) | (s_an & an)
+    c_new = (c_exact & ex) | (c_ap & ap) | (c_an & an)
+    return s_new & acc_mask, ((c_new << 1) & acc_mask)
+
+
+@functools.partial(jax.jit, static_argnums=(3,))
+def _pe_mac_impl(a_u, b_u, c_u, cfg: PEConfig):
+    n, acc = cfg.n_bits, cfg.acc_bits
+    acc_mask = U32((1 << acc) - 1)
+    rows, const = _rows_and_masks(cfg)
+
+    s = (c_u + U32(const)) & acc_mask   # accumulator + BW constant seed the array
+    c = jnp.zeros_like(s)
+
+    for ppc, nppc in rows:
+        e = jnp.zeros_like(s)
+        m_ppc = 0
+        m_nppc = 0
+        for col, abit, bbit in ppc:
+            p = ((a_u >> abit) & 1) & ((b_u >> bbit) & 1)
+            e = e | (p << col)
+            m_ppc |= (1 << col)
+        for col, abit, bbit in nppc:
+            q = (((a_u >> abit) & 1) & ((b_u >> bbit) & 1)) ^ 1
+            e = e | (q << col)
+            m_nppc |= (1 << col)
+        m_ppc_w = U32(m_ppc)
+        m_nppc_w = U32(m_nppc)
+        k_mask = U32(((1 << cfg.k) - 1) if cfg.k > 0 else 0)
+        ak = k_mask & (m_ppc_w | m_nppc_w)
+        s, c = _absorb_row(s, c, e, m_ppc_w, m_nppc_w, ak, acc_mask)
+
+    out = (s + c) & acc_mask            # final carry-propagate add (exact CPA stage)
+    return out
+
+
+def _to_unsigned(x, n_bits):
+    return jnp.asarray(x, jnp.int32).astype(U32) & U32((1 << n_bits) - 1)
+
+
+def _from_unsigned(x, acc_bits, signed):
+    x = x.astype(jnp.int64) if acc_bits >= 32 else x.astype(jnp.int32)
+    if signed:
+        half = 1 << (acc_bits - 1)
+        full = 1 << acc_bits
+        x = jnp.where(x >= half, x - full, x)
+    return x.astype(jnp.int32)
+
+
+def pe_mac(a, b, c=0, *, n_bits: int = 8, k: int = 0, signed: bool = True,
+           acc_bits: int = 24):
+    """Emulate the PE's fused ``a*b + c``. Broadcasts over any batch shape.
+
+    a, b: integer arrays (interpreted mod 2^n_bits, two's complement if signed).
+    c: accumulator input (mod 2^acc_bits). Returns int32 (sign-extended if signed).
+    k=0 gives the exact PE; k>0 approximates columns < k per Table I.
+    """
+    cfg = PEConfig(n_bits, k, signed, acc_bits)
+    a_u = _to_unsigned(a, n_bits)
+    b_u = _to_unsigned(b, n_bits)
+    shape = jnp.broadcast_shapes(jnp.shape(a_u), jnp.shape(b_u), jnp.shape(c))
+    a_u = jnp.broadcast_to(a_u, shape)
+    b_u = jnp.broadcast_to(b_u, shape)
+    c_u = jnp.broadcast_to(jnp.asarray(c, jnp.int32).astype(U32), shape) & U32((1 << acc_bits) - 1)
+    out = _pe_mac_impl(a_u, b_u, c_u, cfg)
+    return _from_unsigned(out, acc_bits, signed)
+
+
+def matmul_oracle(a_mat, b_mat, *, n_bits: int = 8, k: int = 0, signed: bool = True,
+                  acc_bits: int = 24):
+    """GEMM through a chain of fused-MAC PEs — the systolic array's dataflow.
+
+    a_mat: (M, K) int, b_mat: (K, N) int. Accumulation order is k=0..K-1 through the
+    same approximate PE, exactly as partial sums flow through the array. Returns
+    (M, N) int32.
+    """
+    a_mat = jnp.asarray(a_mat, jnp.int32)
+    b_mat = jnp.asarray(b_mat, jnp.int32)
+    m_dim, k_dim = a_mat.shape
+    k2, n_dim = b_mat.shape
+    assert k_dim == k2, (a_mat.shape, b_mat.shape)
+
+    def step(acc, inputs):
+        a_col, b_row = inputs  # (M,), (N,)
+        a_bc = a_col[:, None]
+        b_bc = b_row[None, :]
+        acc = pe_mac(a_bc, b_bc, acc, n_bits=n_bits, k=k, signed=signed,
+                     acc_bits=acc_bits)
+        return acc, None
+
+    init = jnp.zeros((m_dim, n_dim), jnp.int32)
+    acc, _ = jax.lax.scan(step, init, (a_mat.T, b_mat))
+    return acc
+
+
+@functools.lru_cache(maxsize=32)
+def product_table(n_bits: int = 8, k: int = 0, signed: bool = True,
+                  acc_bits: int = 24) -> np.ndarray:
+    """(2^N, 2^N) int32 table T[a_u, b_u] = pe_mac(a, b, 0) — the approximate product.
+
+    Indexing is by the *unsigned bit pattern* of each operand, so signed operands are
+    looked up via ``x & (2^N - 1)``.
+    """
+    span = 1 << n_bits
+    av = np.arange(span, dtype=np.int32)
+    grid_a = np.repeat(av, span)
+    grid_b = np.tile(av, span)
+    # force eager evaluation even when called under an outer jit/scan trace
+    # (tables are compile-time constants; lru_cache memoizes them)
+    with jax.ensure_compile_time_eval():
+        out = pe_mac(grid_a, grid_b, 0, n_bits=n_bits, k=k, signed=signed,
+                     acc_bits=acc_bits)
+    return np.asarray(out, np.int32).reshape(span, span)

@@ -1,0 +1,182 @@
+"""Analytical area/power/delay/energy model from the paper's synthesis tables.
+
+Energy cannot be measured on CPU/TPU, so this module encodes the paper's Cadence
+Genus 90-nm UMC results (Tables II, III, IV) and recomputes every derived claim
+(cell/PE/SA-level savings) from the raw entries. It then extrapolates energy per
+GEMM for arbitrary problem sizes and SA dimensions, which the benchmark harness
+uses to report estimated energy per workload per backend.
+
+Units: area um^2, power uW (cells/PEs) or mW (SAs), delay ps (cells) or ns
+(PEs/SAs), PDP aJ (cells) or pJ (SAs), PADP um^2*fJ (PEs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Tuple
+
+from .emulate import nppc_count, ppc_count
+
+
+@dataclasses.dataclass(frozen=True)
+class HwPoint:
+    area: float
+    power: float
+    delay: float
+
+    @property
+    def pdp(self) -> float:
+        return self.power * self.delay
+
+    @property
+    def padp(self) -> float:
+        return self.area * self.power * self.delay
+
+
+# ---- Table II: cells (area um^2, power uW, delay ps) -----------------------
+CELLS: Dict[str, Dict[str, HwPoint]] = {
+    "ppc": {
+        "exact_ref6": HwPoint(25.81, 1.03, 262),
+        "proposed_exact": HwPoint(24.98, 0.99, 255),
+        "approx_ref6": HwPoint(13.32, 0.64, 187),
+        "approx_ref5": HwPoint(14.13, 0.58, 157),
+        "proposed_approx": HwPoint(10.19, 0.44, 110),
+    },
+    "nppc": {
+        "exact_ref6": HwPoint(24.92, 0.99, 238),
+        "proposed_exact": HwPoint(23.47, 0.99, 216),
+        "approx_ref6": HwPoint(12.54, 0.61, 156),
+        "approx_ref5": HwPoint(13.22, 0.60, 148),
+        "proposed_approx": HwPoint(9.40, 0.37, 147),
+    },
+}
+
+# ---- Table III: 8-bit signed PEs (area um^2, power uW, delay ns) ------------
+PE_SIGNED_8B: Dict[str, HwPoint] = {
+    "exact_ref6": HwPoint(1708.0, 183.4, 3.71),
+    "exact_ref5": HwPoint(1716.0, 190.3, 3.22),
+    "proposed_exact": HwPoint(1620.3, 170.6, 3.18),
+    "ha_fsa": HwPoint(2012.0, 465.0, 2.3),
+    "gemmini": HwPoint(1968.0, 344.0, 2.9),
+    "approx_ref6": HwPoint(1546.3, 216.0, 3.51),
+    "approx_ref12": HwPoint(1465.2, 207.9, 3.18),
+    "approx_ref5": HwPoint(975.5, 177.2, 2.50),
+    "proposed_approx": HwPoint(869.5, 155.2, 2.48),
+}
+
+# ---- Table IV: 8-bit signed SAs @250MHz (area mm^2, power mW, delay ns, PDP pJ)
+SA_8B: Dict[int, Dict[str, HwPoint]] = {
+    3: {
+        "exact_ref6": HwPoint(0.0191, 6.38, 3.36),
+        "proposed_exact": HwPoint(0.0184, 6.01, 3.25),
+        "approx_ref12": HwPoint(0.0155, 5.45, 2.97),
+        "approx_ref6": HwPoint(0.0142, 4.20, 2.70),
+        "approx_ref5": HwPoint(0.0135, 4.60, 2.50),
+        "proposed_approx": HwPoint(0.0110, 3.86, 2.42),
+    },
+    4: {
+        "exact_ref6": HwPoint(0.0345, 11.4, 3.56),
+        "proposed_exact": HwPoint(0.0333, 11.0, 3.42),
+        "approx_ref12": HwPoint(0.0301, 10.4, 3.31),
+        "approx_ref6": HwPoint(0.0290, 9.60, 2.90),
+        "approx_ref5": HwPoint(0.0285, 9.20, 2.55),
+        "proposed_approx": HwPoint(0.0249, 8.06, 2.40),
+    },
+    8: {
+        "exact_ref6": HwPoint(0.1363, 49.8, 3.61),
+        "proposed_exact": HwPoint(0.1302, 42.8, 3.51),
+        "approx_ref12": HwPoint(0.1151, 35.1, 3.02),
+        "approx_ref6": HwPoint(0.1050, 27.8, 2.96),
+        "approx_ref5": HwPoint(0.1020, 25.5, 2.80),
+        "proposed_approx": HwPoint(0.0895, 20.5, 2.74),
+    },
+    16: {
+        "exact_ref6": HwPoint(0.5841, 265.4, 3.91),
+        "proposed_exact": HwPoint(0.5498, 233.3, 3.82),
+        "approx_ref12": HwPoint(0.4424, 193.7, 3.88),
+        "approx_ref6": HwPoint(0.4200, 166.0, 3.70),
+        "approx_ref5": HwPoint(0.4000, 150.0, 3.40),
+        "proposed_approx": HwPoint(0.3513, 117.8, 3.28),
+    },
+}
+
+PAPER_PPC_COUNT_8B = 50   # paper quote; equals (N-1)^2 + 1 for N=8
+PAPER_NPPC_COUNT_8B = 14  # = 2N - 2
+
+
+def pdp_saving(base: HwPoint, new: HwPoint) -> float:
+    """Fractional PDP (energy) saving of `new` vs `base`."""
+    return 1.0 - new.pdp / base.pdp
+
+
+def padp_saving(base: HwPoint, new: HwPoint) -> float:
+    return 1.0 - new.padp / base.padp
+
+
+def cell_energy_claims() -> Dict[str, float]:
+    """Recompute the paper's headline cell-level savings.
+
+    * proposed exact PPC vs exact [6]: ~6.4% energy improvement
+    * proposed approx PPC vs best existing ([5]): 46.8%
+    * proposed approx NPPC vs best existing ([5]): 34.4%  (abstract quotes 34.4%)
+    """
+    c = CELLS
+    return {
+        "exact_ppc_vs_ref6": pdp_saving(c["ppc"]["exact_ref6"], c["ppc"]["proposed_exact"]),
+        "approx_ppc_vs_ref5": pdp_saving(c["ppc"]["approx_ref5"], c["ppc"]["proposed_approx"]),
+        "approx_nppc_vs_ref5": pdp_saving(c["nppc"]["approx_ref5"], c["nppc"]["proposed_approx"]),
+    }
+
+
+def pe_energy_claims() -> Dict[str, float]:
+    """PE-level: proposed exact vs [6] (24.37% energy), approx vs [5] (22.51%)."""
+    p = PE_SIGNED_8B
+    return {
+        "exact_pe_vs_ref6": pdp_saving(p["exact_ref6"], p["proposed_exact"]),
+        "approx_pe_vs_ref5": pdp_saving(p["approx_ref5"], p["proposed_approx"]),
+        "exact_pe_padp_vs_gemmini": padp_saving(p["gemmini"], p["proposed_exact"]),
+        "approx_pe_padp_vs_ref5": padp_saving(p["approx_ref5"], p["proposed_approx"]),
+    }
+
+
+def sa_energy_claims() -> Dict[str, float]:
+    """SA-level: 8x8 exact 16% / approx 68% vs exact [6]; 16x16 62.7% / 24.2%."""
+    sa8, sa16 = SA_8B[8], SA_8B[16]
+    return {
+        "sa8_exact_vs_ref6": pdp_saving(sa8["exact_ref6"], sa8["proposed_exact"]),
+        "sa8_approx_vs_exact_ref6": pdp_saving(sa8["exact_ref6"], sa8["proposed_approx"]),
+        "sa16_approx_vs_exact_ref6": pdp_saving(sa16["exact_ref6"], sa16["proposed_approx"]),
+        "sa16_approx_vs_ref5": pdp_saving(sa16["approx_ref5"], sa16["proposed_approx"]),
+    }
+
+
+def pe_energy_from_cells(design: str, n_bits: int = 8,
+                         use_paper_counts: bool = False) -> float:
+    """Bottom-up PE energy (aJ) = ppc_count*PDP_ppc + nppc_count*PDP_nppc."""
+    if use_paper_counts and n_bits == 8:
+        n_ppc, n_nppc = PAPER_PPC_COUNT_8B, PAPER_NPPC_COUNT_8B
+    else:
+        n_ppc, n_nppc = ppc_count(n_bits), nppc_count(n_bits)
+    return (n_ppc * CELLS["ppc"][design].pdp + n_nppc * CELLS["nppc"][design].pdp)
+
+
+def gemm_energy_estimate(m: int, k: int, n: int, *, design: str = "proposed_approx",
+                         sa_dim: int = 8, freq_mhz: float = 250.0) -> Dict[str, float]:
+    """Estimated energy (nJ) + latency (us) for an MxKxN int8 GEMM on a sa_dim^2 SA.
+
+    Tiling: output tiles of sa_dim x sa_dim, K streamed. Cycles per tile =
+    (3*sa_dim - 2) + (K - 1) wavefront latency [11]; SA power from Table IV.
+    """
+    sa = SA_8B[sa_dim][design]
+    tiles = math.ceil(m / sa_dim) * math.ceil(n / sa_dim)
+    cycles_per_tile = (3 * sa_dim - 2) + max(0, k - 1)
+    total_cycles = tiles * cycles_per_tile
+    secs = total_cycles / (freq_mhz * 1e6)
+    energy_nj = sa.power * 1e-3 * secs * 1e9   # mW * s -> nJ
+    macs = m * k * n
+    return {
+        "cycles": float(total_cycles),
+        "latency_us": secs * 1e6,
+        "energy_nJ": energy_nj,
+        "energy_per_mac_fJ": energy_nj * 1e6 / macs,
+    }

@@ -1,0 +1,97 @@
+"""GEMM backend registry — the paper's technique as a first-class framework feature.
+
+Every matmul in every model goes through `sa_dot(x, w, policy, layer=...)`. The
+policy selects, per layer, which arithmetic executes it:
+
+* ``exact``         — float dot (bf16/f32); the production path for training and
+                      the large-model dry-runs (the MXU *is* the exact PE array).
+* ``mxu_int8``      — symmetric int8 quantize -> exact int8 systolic GEMM (Pallas
+                      kernel on TPU, jnp fallback elsewhere) -> dequantize.
+* ``approx_lut``    — int8 quantize -> approximate GEMM via the PE product table at
+                      factor k (Pallas gather kernel / jnp fallback) -> dequantize.
+* ``approx_oracle`` — int8 quantize -> full fused bit-level PE-chain oracle.
+* ``approx_onehot`` — one-hot rewrite running the approximate GEMM on the exact MXU.
+
+The per-layer policy generalizes the paper's hybrid BDCN (approximate early blocks,
+exact later blocks) to arbitrary networks.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax.numpy as jnp
+
+from . import emulate, lut, quant
+
+BACKENDS = ("exact", "mxu_int8", "approx_lut", "approx_oracle", "approx_onehot")
+
+
+@dataclasses.dataclass(frozen=True)
+class GemmPolicy:
+    """Which backend executes each layer's matmuls.
+
+    `backend` is the default; `overrides` maps layer-name prefixes to backends
+    (longest prefix wins), mirroring the paper's hybrid early-approx/late-exact BDCN.
+    `k` is the approximation factor for approximate backends.
+    """
+    backend: str = "exact"
+    k: int = 4
+    n_bits: int = 8
+    acc_bits: int = 24
+    overrides: Optional[Dict[str, str]] = None
+
+    def resolve(self, layer: str = "") -> str:
+        if self.overrides:
+            best = ""
+            choice = self.backend
+            for prefix, be in self.overrides.items():
+                if layer.startswith(prefix) and len(prefix) > len(best):
+                    best, choice = prefix, be
+            return choice
+        return self.backend
+
+
+EXACT = GemmPolicy(backend="exact")
+
+
+def _int_gemm(x_q, w_q, backend: str, policy: GemmPolicy):
+    if backend == "mxu_int8":
+        from repro.kernels import ops
+        return ops.systolic_matmul(x_q, w_q)
+    if backend == "approx_lut":
+        from repro.kernels import ops
+        return ops.approx_matmul(x_q, w_q, k=policy.k, n_bits=policy.n_bits,
+                                 acc_bits=policy.acc_bits)
+    if backend == "approx_oracle":
+        return emulate.matmul_oracle(x_q, w_q, n_bits=policy.n_bits, k=policy.k,
+                                     acc_bits=policy.acc_bits)
+    if backend == "approx_onehot":
+        t_b = lut.build_onehot_weights(w_q, n_bits=policy.n_bits, k=policy.k,
+                                       acc_bits=policy.acc_bits)
+        return lut.onehot_matmul(x_q, t_b, n_bits=policy.n_bits)
+    raise ValueError(f"unknown integer backend {backend!r}")
+
+
+def sa_dot(x: jnp.ndarray, w: jnp.ndarray, policy: GemmPolicy = EXACT, *,
+           layer: str = "") -> jnp.ndarray:
+    """Systolic-array dot: (..., K) x (K, N) -> (..., N) under the layer's backend."""
+    backend = policy.resolve(layer)
+    if backend == "exact":
+        return jnp.matmul(x, w)
+    lead = x.shape[:-1]
+    k_dim = x.shape[-1]
+    x2 = x.reshape(-1, k_dim)
+    xq = quant.quantize(x2, n_bits=policy.n_bits)
+    wq = quant.quantize(w, n_bits=policy.n_bits, axis=0)   # per-output-channel
+    acc = _int_gemm(xq.values, wq.values, backend, policy)
+    out = acc.astype(jnp.float32) * xq.scale * wq.scale
+    return out.reshape(*lead, w.shape[-1]).astype(x.dtype)
+
+
+def int_matmul(x_q, w_q, policy: GemmPolicy, *, layer: str = ""):
+    """Integer-in/integer-out GEMM under the policy (no (de)quantization)."""
+    backend = policy.resolve(layer)
+    if backend == "exact":
+        return jnp.matmul(x_q.astype(jnp.int32), w_q.astype(jnp.int32))
+    return _int_gemm(x_q, w_q, backend, policy)

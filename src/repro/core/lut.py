@@ -1,0 +1,75 @@
+"""LUT-based fast functional model of the approximate GEMM.
+
+The fused bit-level oracle (`emulate.matmul_oracle`) is exact-to-the-netlist but
+slow. For application-scale workloads we factor the approximation:
+
+    approx(a*b + c)  ≈  approx_product(a, b) + c        ("multiplier-approx model")
+
+where approx_product is the 2^N x 2^N table of PE outputs at c = 0. This keeps the
+approximate-multiplier error exactly and drops only the (small) error component the
+fused accumulator contributes; tests quantify the residual against the oracle.
+
+Two execution strategies:
+
+* `lut_matmul`      — direct gather: out[m,n] = sum_k T[a[m,k], b[k,n]] (VPU path;
+                      also the reference for the Pallas approx kernel).
+* `onehot_matmul`   — beyond-paper TPU trick: one-hot-encode A against the table so
+                      the *approximate* GEMM runs on the *exact* MXU:
+                        out = onehot(A) @ T_B, with T_B[k*V + v, n] = T[v, b[k,n]].
+                      256x FLOP inflation, but MXU FLOPs are ~100x cheaper than VPU
+                      gathers — and for fixed weights T_B is precomputed once.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .emulate import product_table
+
+
+def _lut_for(n_bits: int, k: int, signed: bool, acc_bits: int) -> jnp.ndarray:
+    return jnp.asarray(product_table(n_bits, k, signed, acc_bits))
+
+
+def lut_matmul(a, b, *, n_bits: int = 8, k: int = 4, signed: bool = True,
+               acc_bits: int = 24):
+    """(M,K) x (K,N) approximate GEMM via product-table gathers, int32 accumulate."""
+    table = _lut_for(n_bits, k, signed, acc_bits)
+    span = 1 << n_bits
+    mask = span - 1
+    a_u = jnp.asarray(a, jnp.int32) & mask          # (M, K) unsigned patterns
+    b_u = jnp.asarray(b, jnp.int32) & mask          # (K, N)
+    flat = table.reshape(-1)                        # (span*span,)
+
+    def one_k(carry, inputs):
+        a_col, b_row = inputs                       # (M,), (N,)
+        idx = a_col[:, None] * span + b_row[None, :]
+        carry = carry + jnp.take(flat, idx, axis=0)
+        return carry, None
+
+    init = jnp.zeros((a_u.shape[0], b_u.shape[1]), jnp.int32)
+    out, _ = jax.lax.scan(one_k, init, (a_u.T, b_u))
+    return out
+
+
+def build_onehot_weights(b, *, n_bits: int = 8, k: int = 4, signed: bool = True,
+                         acc_bits: int = 24) -> jnp.ndarray:
+    """Precompute T_B (K*V, N) for `onehot_matmul` from weight matrix b (K, N)."""
+    table = np.asarray(product_table(n_bits, k, signed, acc_bits))  # (V, V)
+    span = 1 << n_bits
+    b_u = np.asarray(b, np.int32) & (span - 1)      # (K, N)
+    t_b = table[:, b_u]                             # (V, K, N)
+    t_b = np.transpose(t_b, (1, 0, 2))              # (K, V, N)
+    kk, _, nn = t_b.shape
+    return jnp.asarray(t_b.reshape(kk * span, nn), jnp.float32)
+
+
+def onehot_matmul(a, t_b, *, n_bits: int = 8):
+    """Approximate GEMM on the MXU: onehot(A) (M, K*V) @ T_B (K*V, N)."""
+    span = 1 << n_bits
+    a_u = jnp.asarray(a, jnp.int32) & (span - 1)    # (M, K)
+    m, kk = a_u.shape
+    onehot = jax.nn.one_hot(a_u, span, dtype=jnp.float32)   # (M, K, V)
+    out = onehot.reshape(m, kk * span) @ t_b                # exact MXU matmul
+    return out.astype(jnp.int32)

@@ -1,0 +1,121 @@
+"""Cell-level logic for the paper's Processing Element.
+
+Implements the four cells of Table I:
+
+* exact PPC   — full adder over (a·b,      S_in, C_in)
+* exact NPPC  — full adder over (NOT(a·b), S_in, C_in)   (Baugh-Wooley sign rows)
+* approx PPC  — C = a·b               ; S = (S_in|C_in) & ~(a·b)
+* approx NPPC — C = (S_in|C_in)&~(a·b); S = ~((S_in|C_in) & ~(a·b))
+
+NOTE (DESIGN.md §1): the prose Boolean equations in the paper are inconsistent with
+Table I; the truth table (whose 5/16 error rows and ED column are self-consistent) is
+taken as ground truth. These functions operate bitwise on integer arrays (0/1 valued,
+or full integer words when used as bit-sliced lanes), so they vectorize over any batch
+shape and over 32 bit-planes at once when fed packed words.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import Callable, NamedTuple, Tuple
+
+import jax.numpy as jnp
+
+Bits = jnp.ndarray  # integer array, each bit lane is an independent cell instance
+
+
+class CellOut(NamedTuple):
+    s: Bits
+    c: Bits
+
+
+def _and(x: Bits, y: Bits) -> Bits:
+    return x & y
+
+
+def exact_ppc(p: Bits, s_in: Bits, c_in: Bits) -> CellOut:
+    """Full adder of (p, s_in, c_in) where p = a&b is the partial-product bit."""
+    xor_ps = p ^ s_in
+    s = xor_ps ^ c_in
+    c = (p & s_in) | (c_in & xor_ps)
+    return CellOut(s, c)
+
+
+def exact_nppc(p: Bits, s_in: Bits, c_in: Bits, *, ones: Bits | int = 1) -> CellOut:
+    """Full adder of (~p, s_in, c_in). `ones` supplies the all-ones word for bit-slicing."""
+    return exact_ppc(p ^ ones, s_in, c_in)
+
+
+def approx_ppc(p: Bits, s_in: Bits, c_in: Bits) -> CellOut:
+    """Approximate PPC from Table I: C = p, S = (S_in|C_in) & ~p."""
+    s = (s_in | c_in) & ~p
+    c = p
+    return CellOut(s, c)
+
+
+def approx_nppc(p: Bits, s_in: Bits, c_in: Bits, *, ones: Bits | int = 1) -> CellOut:
+    """Approximate NPPC from Table I: C = (S_in|C_in)&~p, S = ~C (within the bit lane).
+
+    For multi-bit-lane (packed-word) use, complement is taken against `ones`.
+    """
+    c = (s_in | c_in) & ~p
+    s = c ^ ones
+    return CellOut(s, c)
+
+
+# ---------------------------------------------------------------------------
+# Truth-table utilities (pure python ints; used by tests and benchmarks)
+# ---------------------------------------------------------------------------
+
+def _as_int(x) -> int:
+    return int(x) & 1
+
+
+def truth_table(cell: Callable[..., CellOut], *, nppc: bool = False):
+    """Return rows (a, b, c_in, s_in, C, S, value) over all 16 input combos.
+
+    The cell's partial-product input is a&b for PPC cells and the *complement is applied
+    inside* exact_nppc/approx_nppc, so we always pass p = a&b here.
+    """
+    rows = []
+    for a, b, c_in, s_in in itertools.product((0, 1), repeat=4):
+        p = a & b
+        out = cell(jnp.uint32(p), jnp.uint32(s_in), jnp.uint32(c_in))
+        s, c = _as_int(out.s), _as_int(out.c)
+        rows.append((a, b, c_in, s_in, c, s, 2 * c + s))
+    return rows
+
+
+def exact_value(a: int, b: int, c_in: int, s_in: int, *, nppc: bool) -> int:
+    p = (a & b) ^ 1 if nppc else (a & b)
+    return p + c_in + s_in
+
+
+def error_cases(approx_cell: Callable[..., CellOut], *, nppc: bool):
+    """(inputs, ED) for every row where the approximate cell deviates from exact."""
+    cases = []
+    for a, b, c_in, s_in in itertools.product((0, 1), repeat=4):
+        p = a & b
+        out = approx_cell(jnp.uint32(p), jnp.uint32(s_in), jnp.uint32(c_in))
+        got = 2 * _as_int(out.c) + _as_int(out.s)
+        want = exact_value(a, b, c_in, s_in, nppc=nppc)
+        if got != want:
+            cases.append(((a, b, s_in, c_in), got - want))
+    return cases
+
+
+def cell_error_probability(approx_cell: Callable[..., CellOut], *, nppc: bool) -> Tuple[int, int]:
+    """(numerator, denominator) of the total error probability, assuming
+    P(a=1)=P(b=1)=1/2 hence P(p=1)=1/4, and S_in/C_in uniform as in the paper.
+
+    The paper derives 25/256 for the proposed PPC (and states it jointly for PPC+NPPC).
+    """
+    num = 0
+    for (a, b, s_in, c_in), _ in error_cases(approx_cell, nppc=nppc):
+        # The paper's per-case P_E values (9,3,3,9,1)/256 correspond to modeling every
+        # input a, b, S_in, C_in as Bernoulli(1/4): weight 1 if the input is 1 else 3,
+        # over denominator 4^4 = 256.
+        w = 1
+        for bit in (a, b, s_in, c_in):
+            w *= 1 if bit else 3
+        num += w
+    return num, 256

@@ -1,0 +1,65 @@
+"""Symmetric int8 quantization for routing real-valued matmuls through the PE.
+
+The paper's PE consumes N-bit integers; DNN activations/weights are real-valued, so
+the framework quantizes symmetrically (per-tensor for activations, per-channel for
+weights), runs the integer GEMM (exact MXU / approx LUT / bit-level oracle), and
+dequantizes. A straight-through estimator makes the whole path differentiable so
+the same machinery supports quantization-aware training.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class Quantized(NamedTuple):
+    values: jnp.ndarray   # int8 payload (held as int32 for emulation friendliness)
+    scale: jnp.ndarray    # per-tensor scalar or per-channel vector
+
+
+def quantize(x: jnp.ndarray, *, n_bits: int = 8, axis: Optional[int] = None,
+             eps: float = 1e-8) -> Quantized:
+    """Symmetric quantization to [-2^{N-1}+1, 2^{N-1}-1]."""
+    qmax = (1 << (n_bits - 1)) - 1
+    if axis is None:
+        amax = jnp.max(jnp.abs(x))
+    else:
+        amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, eps) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32)
+    return Quantized(q, scale)
+
+
+def dequantize(q: Quantized) -> jnp.ndarray:
+    return q.values.astype(jnp.float32) * q.scale
+
+
+@jax.custom_vjp
+def ste_round(x):
+    return jnp.round(x)
+
+
+def _ste_fwd(x):
+    return jnp.round(x), None
+
+
+def _ste_bwd(_, g):
+    return (g,)
+
+
+ste_round.defvjp(_ste_fwd, _ste_bwd)
+
+
+def fake_quant(x: jnp.ndarray, *, n_bits: int = 8, axis: Optional[int] = None,
+               eps: float = 1e-8) -> jnp.ndarray:
+    """Differentiable quantize->dequantize (QAT). Gradients pass straight through."""
+    qmax = (1 << (n_bits - 1)) - 1
+    if axis is None:
+        amax = jnp.max(jnp.abs(x))
+    else:
+        amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, eps) / qmax
+    q = jnp.clip(ste_round(x / scale), -qmax, qmax)
+    return q * scale

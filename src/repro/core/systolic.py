@@ -1,0 +1,70 @@
+"""Cycle-accurate wavefront model of the output-stationary systolic array.
+
+Reproduces the classical dataflow of Fig. 1 (Kung [7]) and the latency formula
+3N-2 [11]: A streams from the left (row i delayed i cycles), B from the top
+(column j delayed j cycles), PE (i,j) MACs one product per cycle once both
+operands arrive, outputs drain after the last wavefront.
+
+This model is used (a) to validate the latency claim, (b) to drive the energy
+model's cycle counts, and (c) as an executable specification of the dataflow the
+production kernel (the MXU) implements in hardware. It supports plugging in the
+approximate PE to show dataflow-order-faithful accumulation.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import numpy as np
+
+from .emulate import pe_mac
+
+
+def latency_cycles(n: int, k: Optional[int] = None) -> int:
+    """Cycles until the last output is ready for an NxN SA multiplying NxK by KxN.
+
+    For the square case K=N this is the classical 3N-2 [11]; streaming K>N inputs
+    extends it by K-N.
+    """
+    k = n if k is None else k
+    return 3 * n - 2 + max(0, k - n)
+
+
+def simulate(a: np.ndarray, b: np.ndarray, *, mac: Optional[Callable] = None,
+             trace: bool = False):
+    """Cycle-by-cycle simulation of an output-stationary SA computing a @ b.
+
+    a: (N, K), b: (K, N) with the array sized N x N. `mac(a_val, b_val, acc)`
+    defaults to exact integer MAC; pass a closure over `pe_mac` for approximate.
+    Returns (result, cycles) or (result, cycles, activity) if trace.
+    """
+    a = np.asarray(a)
+    b = np.asarray(b)
+    n, kk = a.shape
+    kb, n2 = b.shape
+    assert kk == kb and n == n2, "square output-stationary array"
+    if mac is None:
+        mac = lambda x, y, acc: acc + int(x) * int(y)
+
+    acc = np.zeros((n, n), dtype=np.int64)
+    # skewed operand schedules: a[i, t - i] enters row i at cycle t (t >= i)
+    total = latency_cycles(n, kk)
+    activity = np.zeros(total, dtype=np.int64)
+    for t in range(total):
+        for i in range(n):
+            for j in range(n):
+                ka = t - i - j  # the K-index whose product PE(i,j) computes at cycle t
+                if 0 <= ka < kk:
+                    acc[i, j] = mac(a[i, ka], b[ka, j], acc[i, j])
+                    activity[t] += 1
+    if trace:
+        return acc, total, activity
+    return acc, total
+
+
+def simulate_approx(a: np.ndarray, b: np.ndarray, *, n_bits: int = 8, k: int = 0,
+                    signed: bool = True, acc_bits: int = 24):
+    """SA simulation with the paper's approximate PE plugged into every cell."""
+    def mac(x, y, acc):
+        return int(pe_mac(np.int32(x), np.int32(y), np.int32(acc), n_bits=n_bits,
+                          k=k, signed=signed, acc_bits=acc_bits))
+    return simulate(a, b, mac=mac)

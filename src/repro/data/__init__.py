@@ -1,0 +1,1 @@
+from .pipeline import DataConfig, FileTokens, SyntheticLM  # noqa: F401

@@ -1,0 +1,8 @@
+"""Pallas TPU kernels for the paper's compute hot-spot (the systolic GEMM).
+
+systolic_gemm.py — exact int8 PE array mapped onto the MXU.
+approx_gemm.py   — approximate PE via VMEM-resident product table.
+ops.py           — public wrappers (padding, interpret fallback on CPU).
+ref.py           — pure-jnp oracles.
+"""
+from . import ops, ref  # noqa: F401

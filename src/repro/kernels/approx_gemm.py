@@ -1,0 +1,84 @@
+"""Approximate systolic GEMM as a Pallas TPU kernel (product-table model).
+
+TPU adaptation of the paper's approximate PE (DESIGN.md §2): gate-level column
+approximation has no TPU analogue, so the kernel realizes the *functional* model —
+the 2^N x 2^N approximate-product table (exactly the PE's c=0 transfer function)
+gathered per (a, b) pair, with exact int32 accumulation.
+
+VMEM budget: the full int32 table is 2^16 * 4 B = 256 KiB, held resident across the
+whole kernel (one copy per core, re-used by every block — HBM traffic for the table
+is amortized to zero by the grid). A/B blocks stream as in the exact kernel. The
+inner loop walks the K-block one row at a time, forming a (bm, bn) index matrix and
+gathering — a VPU-bound schedule, which is why `ops.py` also exposes the one-hot
+MXU rewrite for throughput-critical use.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import emulate
+
+DEFAULT_BM = 256
+DEFAULT_BN = 256
+DEFAULT_BK = 128
+
+
+def _kernel(a_ref, b_ref, lut_ref, o_ref, *, span: int):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a_blk = a_ref[...]          # (bm, bk) unsigned bit patterns, int32
+    b_blk = b_ref[...]          # (bk, bn)
+    table = lut_ref[...]        # (span*span,)
+    bk = a_blk.shape[1]
+
+    def body(kk, acc):
+        idx = a_blk[:, kk][:, None] * span + b_blk[kk, :][None, :]
+        return acc + jnp.take(table, idx, axis=0)
+
+    o_ref[...] += jax.lax.fori_loop(0, bk, body, jnp.zeros_like(o_ref))
+
+
+@functools.partial(jax.jit, static_argnames=("span", "bm", "bn", "bk", "interpret"))
+def approx_matmul_lut(a_u: jnp.ndarray, b_u: jnp.ndarray, table_flat: jnp.ndarray,
+                      *, span: int = 256, bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                      bk: int = DEFAULT_BK, interpret: bool = False) -> jnp.ndarray:
+    """(M, K) x (K, N) via table gathers. a_u/b_u hold unsigned bit patterns
+    (x & (span-1)); table_flat is the flattened (span*span,) product table."""
+    m, k = a_u.shape
+    k2, n = b_u.shape
+    assert k == k2, (a_u.shape, b_u.shape)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shapes ({m},{k})x({k},{n}) not multiples of blocks ({bm},{bn},{bk})")
+    grid = (m // bm, n // bn, k // bk)
+    kern = functools.partial(_kernel, span=span)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((span * span,), lambda i, j, kk: (0,)),  # resident table
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        compiler_params=None if interpret else pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a_u.astype(jnp.int32), b_u.astype(jnp.int32), table_flat.astype(jnp.int32))
+
+
+def make_table(k: int, *, n_bits: int = 8, signed: bool = True,
+               acc_bits: int = 24) -> jnp.ndarray:
+    """Flattened (2^N * 2^N,) approximate-product table for factor k."""
+    return jnp.asarray(
+        emulate.product_table(n_bits, k, signed, acc_bits).reshape(-1))

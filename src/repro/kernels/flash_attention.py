@@ -1,0 +1,104 @@
+"""Flash attention as a Pallas TPU kernel (forward).
+
+The model stack uses the pure-JAX chunked attention (layers.chunked_attention)
+everywhere — this kernel is the TPU-native drop-in for the prefill hot spot:
+grid (batch*heads, q_blocks), online softmax over K/V blocks streamed through
+VMEM, causal + sliding-window masking computed from block indices so fully
+masked K blocks are skipped via `pl.when`.
+
+Block shapes default to MXU/VPU-aligned (128 q rows x 128 kv cols x head_dim).
+Validated in interpret mode against layers.chunked_attention / a naive oracle
+(tests/test_flash_kernel.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+BIG_NEG = -2.3819763e38
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, bq: int, bk: int, skv: int,
+            causal: bool, window: int, softcap: float, scale: float):
+    qi = pl.program_id(1)
+    q = q_ref[0].astype(jnp.float32) * scale            # (bq, d)
+    n_kb = skv // bk
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+
+    def body(kb, carry):
+        acc, m, l = carry
+        k_blk = pl.load(k_ref, (0, pl.dslice(kb * bk, bk), slice(None))
+                        ).astype(jnp.float32)
+        v_blk = pl.load(v_ref, (0, pl.dslice(kb * bk, bk), slice(None))
+                        ).astype(jnp.float32)
+        s = jax.lax.dot_general(q, k_blk, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = kb * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        valid = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            delta = qpos - kpos
+            valid = (delta >= 0)
+            if window > 0:
+                valid &= (delta < window)
+        s = jnp.where(valid, s, BIG_NEG)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[:, None] + jax.lax.dot_general(
+            p, v_blk, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        return acc_new, m_new, l_new
+
+    d = q_ref.shape[-1]
+    init = (jnp.zeros((bq, d), jnp.float32),
+            jnp.full((bq,), BIG_NEG, jnp.float32),
+            jnp.zeros((bq,), jnp.float32))
+    # causal: K blocks strictly after this Q block contribute nothing
+    last_kb = n_kb if not causal else jnp.minimum(
+        n_kb, (qi + 1) * bq // bk + (1 if bq % bk else 0)).astype(jnp.int32)
+    acc, m, l = jax.lax.fori_loop(0, last_kb if causal else n_kb, body, init)
+    o_ref[0] = (acc / jnp.maximum(l, 1e-30)[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "bq", "bk", "interpret"))
+def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                    causal: bool = True, window: int = 0, softcap: float = 0.0,
+                    bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                    interpret: bool = False) -> jnp.ndarray:
+    """q/k/v: (B, H, S, D) with S a multiple of the block sizes (ops-level
+    wrappers pad). MQA/GQA callers broadcast KV heads before the call."""
+    b, h, sq, d = q.shape
+    skv = k.shape[2]
+    assert sq % bq == 0 and skv % bk == 0, (sq, skv, bq, bk)
+    bh = b * h
+    qf = q.reshape(bh, sq, d)
+    kf = k.reshape(bh, skv, d)
+    vf = v.reshape(bh, skv, d)
+    grid = (bh, sq // bq)
+    kern = functools.partial(_kernel, bq=bq, bk=bk, skv=skv, causal=causal,
+                             window=window, softcap=softcap, scale=d ** -0.5)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, d), lambda bhi, qi: (bhi, qi, 0)),
+            pl.BlockSpec((1, skv, d), lambda bhi, qi: (bhi, 0, 0)),
+            pl.BlockSpec((1, skv, d), lambda bhi, qi: (bhi, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, d), lambda bhi, qi: (bhi, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
+        compiler_params=None if interpret else pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(b, h, sq, d)

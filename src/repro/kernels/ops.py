@@ -1,0 +1,95 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Handles: arbitrary-shape padding to block multiples, signed->bit-pattern
+conversion for the LUT kernel, padding-contribution correction (padded K rows
+contribute T[0,0] per row, subtracted after the call), and automatic
+interpret-mode fallback when not running on TPU (this container is CPU-only, so
+tests exercise the kernels with interpret=True; on TPU the same wrappers emit
+real Mosaic kernels).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import emulate
+from . import approx_gemm, systolic_gemm
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: jnp.ndarray, mult_r: int, mult_c: int) -> jnp.ndarray:
+    r, c = x.shape
+    pr = (-r) % mult_r
+    pc = (-c) % mult_c
+    if pr or pc:
+        x = jnp.pad(x, ((0, pr), (0, pc)))
+    return x
+
+
+def _blocks(dim: int, pref: int, align: int) -> int:
+    """Largest block <= pref that is a multiple of `align` covering dim decently."""
+    if dim <= align:
+        return dim if dim > 0 else align
+    b = min(pref, dim)
+    return max(align, (b // align) * align)
+
+
+def systolic_matmul(a: jnp.ndarray, b: jnp.ndarray, *, bm: int | None = None,
+                    bn: int | None = None, bk: int | None = None,
+                    interpret: bool | None = None) -> jnp.ndarray:
+    """Exact int8 GEMM (int32 accumulate) for arbitrary (M, K) x (K, N)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    m, k = a.shape
+    _, n = b.shape
+    bm = bm or systolic_gemm.DEFAULT_BM
+    bn = bn or systolic_gemm.DEFAULT_BN
+    bk = bk or systolic_gemm.DEFAULT_BK
+    # in interpret mode alignment is irrelevant; on TPU stay MXU-aligned
+    align = 8 if interpret else 128
+    bm_, bn_, bk_ = (_blocks(m, bm, align), _blocks(n, bn, align),
+                     _blocks(k, bk, align))
+    a_p = _pad_to(a, bm_, bk_)
+    b_p = _pad_to(b, bk_, bn_)
+    out = systolic_gemm.systolic_matmul(a_p, b_p, bm=bm_, bn=bn_, bk=bk_,
+                                        interpret=interpret)
+    return out[:m, :n]
+
+
+def approx_matmul(a: jnp.ndarray, b: jnp.ndarray, *, k: int = 4, n_bits: int = 8,
+                  acc_bits: int = 24, signed: bool = True,
+                  bm: int | None = None, bn: int | None = None,
+                  bk: int | None = None,
+                  interpret: bool | None = None) -> jnp.ndarray:
+    """Approximate GEMM at factor k for arbitrary shapes (signed operands)."""
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    span = 1 << n_bits
+    mask = span - 1
+    m, kd = a.shape
+    _, n = b.shape
+    table = approx_gemm.make_table(k, n_bits=n_bits, signed=signed,
+                                   acc_bits=acc_bits)
+    a_u = jnp.asarray(a, jnp.int32) & mask
+    b_u = jnp.asarray(b, jnp.int32) & mask
+    bm = bm or approx_gemm.DEFAULT_BM
+    bn = bn or approx_gemm.DEFAULT_BN
+    bk = bk or approx_gemm.DEFAULT_BK
+    align = 8 if interpret else 128
+    bm_, bn_, bk_ = (_blocks(m, bm, align), _blocks(n, bn, align),
+                     _blocks(kd, bk, align))
+    a_p = _pad_to(a_u, bm_, bk_)
+    b_p = _pad_to(b_u, bk_, bn_)
+    out = approx_gemm.approx_matmul_lut(a_p, b_p, table, span=span, bm=bm_,
+                                        bn=bn_, bk=bk_, interpret=interpret)
+    out = out[:m, :n]
+    k_pad = a_p.shape[1] - kd
+    if k_pad:
+        # padded K rows each contribute T[0,0] (nonzero for deep approximation)
+        t00 = table[0]
+        out = out - k_pad * t00
+    return out

@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+* `systolic_matmul_ref` — exact int8 -> int32 GEMM (what the exact PE array / MXU
+  computes).
+* `approx_matmul_ref`   — approximate GEMM under the multiplier-approx model:
+  product-table lookups + exact int32 accumulation (see core/lut.py). This is the
+  semantic contract of the Pallas approx kernel; the *fused* bit-level oracle lives
+  in core/emulate.matmul_oracle and differs only by the accumulator's low-column
+  error component (quantified in tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import lut
+
+
+def systolic_matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(M, K) x (K, N) exact integer GEMM with int32 accumulation."""
+    return jnp.matmul(a.astype(jnp.int32), b.astype(jnp.int32))
+
+
+def approx_matmul_ref(a: jnp.ndarray, b: jnp.ndarray, *, k: int = 4,
+                      n_bits: int = 8, acc_bits: int = 24,
+                      signed: bool = True) -> jnp.ndarray:
+    """(M, K) x (K, N) approximate GEMM at approximation factor k."""
+    return lut.lut_matmul(a, b, n_bits=n_bits, k=k, signed=signed,
+                          acc_bits=acc_bits)

@@ -1,0 +1,67 @@
+"""Exact int8 systolic GEMM as a Pallas TPU kernel.
+
+This is the TPU-native form of the paper's *exact* PE array: the MXU is a 128x128
+weight-stationary systolic array of exact MACs, so the exact design maps onto it
+directly. The kernel tiles (M, N, K) into VMEM-resident blocks; the K grid axis is
+innermost ("arbitrary" semantics) and accumulates into the output block, mirroring
+the partial-sum chaining of the paper's array.
+
+Block sizes default to MXU-aligned (multiples of 128 in M/N, 256 in K for int8
+packing); the wrapper in ops.py pads arbitrary shapes up to block multiples.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_BM = 256
+DEFAULT_BN = 256
+DEFAULT_BK = 256
+
+
+def _kernel(a_ref, b_ref, o_ref):
+    k_idx = pl.program_id(2)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    a_blk = a_ref[...]
+    b_blk = b_ref[...]
+    # int8 x int8 -> int32 on the MXU (exact PE array)
+    o_ref[...] += jax.lax.dot_general(
+        a_blk, b_blk, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def systolic_matmul(a: jnp.ndarray, b: jnp.ndarray, *, bm: int = DEFAULT_BM,
+                    bn: int = DEFAULT_BN, bk: int = DEFAULT_BK,
+                    interpret: bool = False) -> jnp.ndarray:
+    """(M, K) int8 x (K, N) int8 -> (M, N) int32. Shapes must be block multiples
+    (ops.systolic_matmul pads arbitrary shapes)."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, (a.shape, b.shape)
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shapes ({m},{k})x({k},{n}) not multiples of blocks ({bm},{bn},{bk})")
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int32),
+        compiler_params=None if interpret else pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(a.astype(jnp.int8), b.astype(jnp.int8))

@@ -1,0 +1,2 @@
+# NOTE: dryrun is intentionally not imported here — it sets XLA_FLAGS at import.
+from . import mesh, roofline  # noqa: F401

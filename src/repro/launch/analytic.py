@@ -1,0 +1,168 @@
+"""Analytic roofline model — exact napkin math for the framework's own loop
+structure.
+
+Why this exists: XLA's `cost_analysis()` on the partitioned module counts each
+`while`-loop body ONCE, and all of this framework's compute lives inside scans
+(microbatch scan x layer scan x attention chunk scans), so raw HLO numbers
+undercount FLOPs/collective bytes by the product of trip counts. Rather than
+heuristically re-scaling the HLO, this module computes the three roofline terms
+from the architecture and the known execution structure; the dry-run reports
+both (raw HLO as evidence of the compiled schedule, analytic for the roofline
+fractions). All quantities are per device per step.
+
+Mesh/parallelism model (parameters are the hillclimb knobs):
+  * `tp`        — tensor-parallel ways on the `model` axis (the rest of that
+                  axis, model_axis/tp, acts as extra FSDP/data ways)
+  * `n_micro`   — microbatch count (activation memory vs. weight re-gather)
+  * chips = 256 x pods; batch is sharded over all non-TP ways.
+
+Traffic model (conservative single-link ICI, ring factor 2):
+  * TP: 2 activation all-reduces per transformer layer (attn out, mlp out)
+  * FSDP: one weight all-gather per microbatch (bf16), grad reduce-scatter +
+    all-gather in f32 once per step
+  * pods: cross-pod gradient all-reduce (f32; /4 when int8 compression is on)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from . import mesh as mesh_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class PerfKnobs:
+    tp: int = 16               # TP ways (<= model axis size)
+    n_micro: int = 1
+    remat: bool = True
+    compress_grads: bool = False
+    act_accesses_per_layer: float = 6.0   # residual-stream R/W per layer pass
+    ring_factor: float = 2.0
+
+
+def _attn_layers(cfg: ModelConfig) -> float:
+    if cfg.family == "hybrid":
+        return cfg.n_layers / max(cfg.attn_every, 1)
+    if cfg.family == "ssm":
+        return 0.0
+    return float(cfg.n_layers)
+
+
+def _mean_attn_span(cfg: ModelConfig, s: int, *, decode: bool = False) -> float:
+    """Mean attention span per query (accounts for sliding-window patterns)."""
+    full = float(s) if decode or not cfg.causal else (s + 1) / 2.0
+    if not cfg.window_size:
+        return full
+    local = float(min(cfg.window_size, s))
+    if cfg.global_every:
+        fg = 1.0 / cfg.global_every
+        return fg * full + (1 - fg) * local
+    return local
+
+
+def flops_per_device(cfg: ModelConfig, shape: ShapeSpec, n_chips: int,
+                     k: PerfKnobs) -> float:
+    s = shape.seq_len
+    p_act = cfg.active_param_count()
+    attn_tok = (4.0 * _mean_attn_span(cfg, s, decode=(shape.kind == "decode"))
+                * cfg.n_heads * cfg.hd * _attn_layers(cfg))
+    fwd_tok = 2.0 * p_act + attn_tok
+    if shape.kind == "decode":
+        return shape.global_batch * fwd_tok / n_chips
+    tokens = float(shape.global_batch) * s
+    if shape.kind == "prefill":
+        return tokens * fwd_tok / n_chips
+    # train: fwd(1) + bwd(2) + full remat recompute(1)
+    passes = 4.0 if k.remat else 3.0
+    ce_tok = 2.0 * cfg.d_model * cfg.vocab_size * 3.0       # logits matmul f+b
+    return tokens * (passes * fwd_tok + ce_tok) / n_chips
+
+
+def _kv_cache_bytes(cfg: ModelConfig, shape: ShapeSpec) -> float:
+    s = shape.seq_len
+    b = shape.global_batch
+    total = 0.0
+    n_attn = _attn_layers(cfg)
+    if n_attn:
+        if cfg.window_size and cfg.global_every:
+            fg = 1.0 / cfg.global_every
+            eff = fg * s + (1 - fg) * min(cfg.window_size, s)
+        else:
+            eff = float(s)
+        total += 2.0 * 2.0 * b * eff * cfg.n_kv_heads * cfg.hd * n_attn
+    if cfg.family in ("ssm", "hybrid"):
+        di = cfg.ssm_expand * cfg.d_model
+        total += 4.0 * b * cfg.n_layers * (di // 64) * 64 * max(cfg.ssm_state, 64)
+    return total
+
+
+def hbm_bytes_per_device(cfg: ModelConfig, shape: ShapeSpec, n_chips: int,
+                         k: PerfKnobs) -> float:
+    p_tot = cfg.param_count()
+    p_act = cfg.active_param_count()
+    d = cfg.d_model
+    if shape.kind == "decode":
+        w = 2.0 * p_act / n_chips                       # bf16 weight shard read
+        return w + _kv_cache_bytes(cfg, shape) / n_chips
+    tokens_loc = shape.global_batch * shape.seq_len * k.tp / n_chips
+    w = 2.0 * p_act / k.tp * k.n_micro                  # TP slice per microbatch
+    acts = tokens_loc * d * 2.0 * k.act_accesses_per_layer * cfg.n_layers
+    if shape.kind == "train":
+        opt = 12.0 * p_tot / n_chips * 2.0              # adam m/v/grad R+W (f32)
+        return w + acts * 3.0 + opt
+    return w / max(k.n_micro, 1) + acts
+
+
+def collective_bytes_per_device(cfg: ModelConfig, shape: ShapeSpec,
+                                n_chips: int, k: PerfKnobs,
+                                pods: int = 1) -> float:
+    p_tot = cfg.param_count()
+    p_act = cfg.active_param_count()
+    d = cfg.d_model
+    if cfg.family == "ssm":
+        n_red = 1.0 * cfg.n_layers                      # block down-proj reduce
+    elif cfg.family == "hybrid":
+        n_red = 1.0 * cfg.n_layers + 2.0 * _attn_layers(cfg)
+    else:
+        n_red = 2.0 * cfg.n_layers                      # attn out + mlp out
+    if shape.kind == "decode":
+        tokens_loc = shape.global_batch * k.tp / n_chips
+        tp_b = (k.ring_factor * tokens_loc * d * 2.0 * n_red) if k.tp > 1 else 0.0
+        return tp_b
+    tokens_loc = shape.global_batch * shape.seq_len * k.tp / n_chips
+    tp_b = (k.ring_factor * tokens_loc * d * 2.0 * n_red) if k.tp > 1 else 0.0
+    if shape.kind == "train":
+        tp_b *= 2.0                                     # bwd re-reduces
+        fsdp_ways = n_chips // k.tp
+        gbytes = 1.0 if k.compress_grads else 4.0       # int8 error-feedback
+        fsdp = 2.0 * p_act / k.tp * k.n_micro if fsdp_ways > 1 else 0.0
+        grad = gbytes * p_tot / k.tp * k.ring_factor if fsdp_ways > 1 else 0.0
+        pod_b = gbytes * p_tot / (n_chips / pods) * k.ring_factor * (pods - 1)
+        return tp_b + fsdp + grad + pod_b
+    return tp_b
+
+
+def analytic_terms(cfg: ModelConfig, shape: ShapeSpec, n_chips: int,
+                   k: PerfKnobs = PerfKnobs(), pods: int = 1) -> Dict[str, float]:
+    fl = flops_per_device(cfg, shape, n_chips, k)
+    hb = hbm_bytes_per_device(cfg, shape, n_chips, k)
+    cl = collective_bytes_per_device(cfg, shape, n_chips, k, pods)
+    t_c = fl / mesh_mod.PEAK_FLOPS
+    t_m = hb / mesh_mod.HBM_BW
+    t_l = cl / mesh_mod.ICI_BW
+    dominant = max(("compute", t_c), ("memory", t_m), ("collective", t_l),
+                   key=lambda kv: kv[1])[0]
+    bound = max(t_c, t_m, t_l)
+    from . import roofline as rl
+    mf = rl.model_flops(cfg, shape) / n_chips
+    return {
+        "flops_per_device": fl, "hbm_bytes_per_device": hb,
+        "coll_bytes_per_device": cl,
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_l,
+        "dominant": dominant, "step_time_bound_s": bound,
+        "model_flops_per_device": mf,
+        "useful_flops_frac": mf / fl if fl else 0.0,
+        "roofline_frac": (mf / mesh_mod.PEAK_FLOPS) / bound if bound else 0.0,
+        "knobs": dataclasses.asdict(k),
+    }

@@ -1,0 +1,193 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST run before any jax import (jax locks the device count
+at first init). 512 host placeholder devices back both the 16x16 single-pod and
+the (2,16,16) multi-pod production meshes; lowering uses ShapeDtypeStruct
+stand-ins so no real allocation happens.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-360m --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--out FILE]
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ARCHS
+from repro.launch import analytic, roofline
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (TrainHParams, assemble_decode, assemble_prefill,
+                                assemble_train, default_micro)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             n_micro: int | None = None, mesh_shape=None, cache_dtype=None,
+             verbose: bool = True) -> dict:
+    cfg = ARCHS[arch]
+    shape = cfg.shape(shape_name)
+    mesh_label = "x".join(map(str, mesh_shape)) if mesh_shape else (
+        "2x16x16" if multi_pod else "16x16")
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_label,
+           "kind": shape.kind}
+    if shape.skip:
+        rec.update(status="skipped", reason=shape.skip_reason)
+        return rec
+    mesh = make_production_mesh(multi_pod=multi_pod, shape=mesh_shape)
+    n_chips = mesh.devices.size
+    t0 = time.time()
+    try:
+        if shape.kind == "train":
+            hp = TrainHParams(n_micro=n_micro or default_micro(cfg, shape))
+            step, arg_specs, in_sh, out_sh, hp = assemble_train(cfg, shape, mesh,
+                                                                hp)
+            rec["n_micro"] = hp.n_micro
+        elif shape.kind == "prefill":
+            step, arg_specs, in_sh, out_sh = assemble_prefill(cfg, shape, mesh)
+        else:
+            step, arg_specs, in_sh, out_sh = assemble_decode(
+                cfg, shape, mesh, cache_dtype=cache_dtype)
+            if cache_dtype is not None:
+                rec["cache_dtype"] = str(cache_dtype.__name__) \
+                    if hasattr(cache_dtype, "__name__") else str(cache_dtype)
+        with mesh:
+            jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+            lowered = jitted.lower(*arg_specs)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        coll = roofline.collective_bytes(hlo)
+        terms = roofline.roofline_terms(cost, coll["total"], n_chips)
+        mf = roofline.model_flops(cfg, shape)
+        hlo_flops_global = terms["flops_per_device"] * n_chips
+        tp = mesh.shape["model"]
+        knobs = analytic.PerfKnobs(tp=tp, n_micro=rec.get("n_micro", 1))
+        ana = analytic.analytic_terms(cfg, shape, n_chips, knobs,
+                                      pods=mesh.shape.get("pod", 1))
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 1), compile_s=round(t_compile, 1),
+            bytes_per_device=int(getattr(mem, "temp_size_in_bytes", 0)
+                                 + getattr(mem, "argument_size_in_bytes", 0)
+                                 + getattr(mem, "output_size_in_bytes", 0)
+                                 - getattr(mem, "alias_size_in_bytes", 0)),
+            temp_bytes=int(getattr(mem, "temp_size_in_bytes", 0)),
+            arg_bytes=int(getattr(mem, "argument_size_in_bytes", 0)),
+            collectives=coll,
+            roofline_hlo_raw=terms,
+            analytic=ana,
+            model_flops=mf,
+            hlo_flops_note="while bodies counted once; see analytic",
+        )
+        if verbose:
+            print(f"[{rec['mesh']}] {arch} x {shape_name}: OK  "
+                  f"lower {t_lower:.0f}s compile {t_compile:.0f}s  "
+                  f"mem/dev {rec['bytes_per_device']/2**30:.2f} GiB  "
+                  f"analytic: t_comp {ana['t_compute_s']:.4f}s "
+                  f"t_mem {ana['t_memory_s']:.4f}s "
+                  f"t_coll {ana['t_collective_s']:.4f}s -> {ana['dominant']}  "
+                  f"roofline {ana['roofline_frac']:.1%}")
+    except Exception as e:  # noqa: BLE001 — a failing cell is a bug to report
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-2000:])
+        if verbose:
+            print(f"[{rec['mesh']}] {arch} x {shape_name}: FAIL {rec['error']}")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--n-micro", type=int, default=None)
+    ap.add_argument("--optimized", action="store_true",
+                    help="autotune mesh/knobs per cell (launch/autotune.py)")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    args = ap.parse_args()
+
+    cells = []
+    archs = sorted(ARCHS) if (args.all or not args.arch) else [args.arch]
+    for a in archs:
+        shapes = [s.name for s in ARCHS[a].shapes] if (args.all or not args.shape) \
+            else [args.shape]
+        for s in shapes:
+            cells.append((a, s))
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    results = []
+    for mp in meshes:
+        for a, s in cells:
+            mesh_shape, n_micro = None, args.n_micro
+            if args.optimized:
+                from repro.launch import autotune
+                cfg = ARCHS[a]
+                sp = cfg.shape(s)
+                if not sp.skip:
+                    mesh_shape, knobs, _ = autotune.best_knobs(
+                        cfg, sp, 512 if mp else 256, pods=2 if mp else 1)
+                    n_micro = knobs.n_micro
+            rec = run_cell(a, s, multi_pod=mp, n_micro=n_micro,
+                           mesh_shape=mesh_shape)
+            # measured-feedback retry: the analytic memory estimate can
+            # undershoot (SSM chunk residuals, MoE capacity buffers) — if the
+            # compiled memory exceeds HBM, back off: train -> more micro-
+            # batches; prefill/decode -> more TP (shards caches/experts)
+            hbm = 16 * 2 ** 30
+            attempts = 0
+            cache_dtype = None
+            while (args.optimized and rec.get("status") == "ok"
+                   and rec.get("bytes_per_device", 0) > hbm and attempts < 4):
+                attempts += 1
+                cfg = ARCHS[a]
+                sp = cfg.shape(s)
+                if sp.kind == "train":
+                    nm = (n_micro or 1) * 2
+                    while sp.global_batch % nm and nm < sp.global_batch:
+                        nm += 1
+                    if sp.global_batch % nm:
+                        break
+                    n_micro = nm
+                else:
+                    cur_tp = mesh_shape[-1] if mesh_shape else 16
+                    if cur_tp < 16 and mesh_shape is not None:
+                        tp = cur_tp * 2
+                        chips = 1
+                        for d in mesh_shape:
+                            chips *= d
+                        mesh_shape = (chips // tp, tp) if len(mesh_shape) == 2 \
+                            else (mesh_shape[0], chips // mesh_shape[0] // tp, tp)
+                    elif sp.kind == "decode" and cache_dtype is None:
+                        import jax.numpy as _jnp
+                        cache_dtype = _jnp.int8   # validated quality trade
+                    else:
+                        break
+                print(f"  [retry {attempts}] {a} x {s}: over HBM "
+                      f"({rec['bytes_per_device']/2**30:.1f} GiB) -> "
+                      f"mesh={mesh_shape} n_micro={n_micro} "
+                      f"cache={cache_dtype}")
+                rec = run_cell(a, s, multi_pod=mp, n_micro=n_micro,
+                               mesh_shape=mesh_shape, cache_dtype=cache_dtype)
+            results.append(rec)
+            if args.out:
+                with open(args.out, "a") as f:
+                    slim = {k: v for k, v in rec.items() if k != "trace"}
+                    f.write(json.dumps(slim) + "\n")
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skipped" for r in results)
+    n_err = sum(r["status"] == "error" for r in results)
+    print(f"\n== dry-run summary: {n_ok} ok / {n_skip} skipped / {n_err} failed ==")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

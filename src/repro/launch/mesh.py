@@ -1,0 +1,41 @@
+"""Production meshes. TPU v5e numbers: 256 chips/pod (16x16), 2 pods = 512.
+
+`make_production_mesh` is a function (not a module constant) so importing this
+module never touches jax device state; `dryrun.py` sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax init.
+"""
+from __future__ import annotations
+
+import jax
+
+SINGLE_POD = (16, 16)
+MULTI_POD = (2, 16, 16)
+
+# hardware constants (TPU v5e) for the roofline
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False,
+                         shape=None) -> jax.sharding.Mesh:
+    """`shape` overrides the (data, model) — or (pod, data, model) — split;
+    total chips stay 256/pod. The TP-vs-FSDP balance is a first-class perf knob
+    (see EXPERIMENTS.md §Perf)."""
+    shape = shape or (MULTI_POD if multi_pod else SINGLE_POD)
+    axes = ("pod", "data", "model") if len(shape) == 3 else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices (set XLA_FLAGS=--xla_force_host_platform_device_count=512), "
+            f"have {len(devices)}")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_debug_mesh(n_data: int = 1, n_model: int = 1) -> jax.sharding.Mesh:
+    """Tiny mesh over available devices for CPU tests."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"),
+                         devices=jax.devices()[: n_data * n_model])

@@ -1,0 +1,112 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+compute  = HLO_FLOPs_per_device / peak_FLOP/s
+memory   = HLO_bytes_per_device / HBM_bw
+collective = collective_bytes_per_device / ICI link bw
+
+cost_analysis() of the SPMD-partitioned module is per-device; collective bytes
+are parsed from the partitioned HLO text (sum over all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute of max(operand, result) bytes —
+a single-link, no-overlap, conservative traffic proxy).
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+from . import mesh as mesh_mod
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+
+
+def _shape_bytes(text: str) -> int:
+    """Sum byte sizes of every typed shape in `text` (handles tuples)."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind byte totals from (partitioned) HLO text."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["count"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        lhs, _, rhs = s.partition("=")
+        rhs = rhs.strip()
+        for kind in _COLLECTIVES:
+            # match op invocation e.g. "bf16[2048,128] all-gather(...)"; async
+            # ops are counted at -start only so -start/-done pairs aren't doubled
+            m2 = re.search(r"\b" + kind + r"(-start|-done)?\(", rhs)
+            if m2:
+                if m2.group(1) == "-done":
+                    break  # counted at -start
+                result_bytes = _shape_bytes(rhs[:m2.start()])
+                # operands: inside the call parens
+                call = rhs[m2.end():]
+                depth = 1
+                i = 0
+                for i, ch in enumerate(call):
+                    if ch == "(":
+                        depth += 1
+                    elif ch == ")":
+                        depth -= 1
+                        if depth == 0:
+                            break
+                arg_bytes = _shape_bytes(call[:i])
+                out[kind] += max(result_bytes, arg_bytes)
+                out["count"] += 1
+                break
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+def roofline_terms(cost: Dict[str, float], coll_bytes: int,
+                   n_chips: int) -> Dict[str, float]:
+    flops = float(cost.get("flops", 0.0))
+    mem_bytes = float(cost.get("bytes accessed", 0.0))
+    t_compute = flops / mesh_mod.PEAK_FLOPS
+    t_memory = mem_bytes / mesh_mod.HBM_BW
+    t_coll = coll_bytes / mesh_mod.ICI_BW
+    dominant = max(("compute", t_compute), ("memory", t_memory),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    return {
+        "flops_per_device": flops,
+        "bytes_per_device": mem_bytes,
+        "coll_bytes_per_device": float(coll_bytes),
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+        "n_chips": n_chips,
+    }
+
+
+def model_flops(cfg, shape) -> float:
+    """MODEL_FLOPS: 6·N·D for train; 2·N·D per decoded/prefilled token."""
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        d = shape.global_batch * shape.seq_len
+        return 6.0 * n * d
+    if shape.kind == "prefill":
+        d = shape.global_batch * shape.seq_len
+        return 2.0 * n * d
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence

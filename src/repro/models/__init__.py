@@ -1,0 +1,1 @@
+from .api import Model, cache_specs, get_model, input_specs  # noqa: F401

@@ -1,0 +1,122 @@
+"""Unified model API: one entry point per architecture family.
+
+`get_model(cfg)` returns a `Model` with init/loss/prefill/decode functions;
+`input_specs(cfg, shape)` builds ShapeDtypeStruct stand-ins for every input of
+the step the shape-cell exercises (train_step / prefill / decode) — the dry-run
+lowers against these, so no real allocation ever happens for the full configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.core.gemm import EXACT, GemmPolicy
+from . import hybrid, transformer, xlstm_model
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init_params: Callable
+    lm_loss: Callable            # (params, batch, policy) -> scalar
+    prefill: Callable            # (params, batch, cache, policy) -> (logits, cache)
+    decode_step: Callable        # (params, token, cache, pos, policy) -> (logits, cache)
+    init_cache: Optional[Callable]
+
+
+def get_model(cfg: ModelConfig) -> Model:
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        def loss(params, batch, policy=EXACT, remat=True, batch_axes=(),
+                 remat_save_attn=False):
+            return transformer.lm_loss(
+                params, cfg, batch["tokens"],
+                input_embeds=batch.get("input_embeds"),
+                loss_mask=batch.get("loss_mask"), policy=policy, remat=remat,
+                remat_save_attn=remat_save_attn, batch_axes=batch_axes)
+
+        def prefill(params, batch, cache, policy=EXACT, batch_axes=()):
+            return transformer.prefill(params, cfg, batch["tokens"], cache,
+                                       input_embeds=batch.get("input_embeds"),
+                                       policy=policy, batch_axes=batch_axes)
+
+        def decode(params, token, cache, pos, policy=EXACT, batch_axes=()):
+            return transformer.decode_step(params, cfg, token, cache, pos,
+                                           policy=policy, batch_axes=batch_axes)
+
+        return Model(cfg, lambda key: transformer.init_params(cfg, key),
+                     loss, prefill, decode,
+                     lambda b, s, **kw: transformer.init_cache(cfg, b, s, **kw))
+    if cfg.family == "hybrid":
+        def loss(params, batch, policy=EXACT, remat=True, batch_axes=()):
+            return hybrid.lm_loss(params, cfg, batch["tokens"], policy=policy,
+                                  batch_axes=batch_axes)
+
+        def prefill(params, batch, cache, policy=EXACT, batch_axes=()):
+            return hybrid.prefill(params, cfg, batch["tokens"], cache,
+                                  policy=policy, batch_axes=batch_axes)
+
+        def decode(params, token, cache, pos, policy=EXACT, batch_axes=()):
+            return hybrid.decode_step(params, cfg, token, cache, pos,
+                                      policy=policy, batch_axes=batch_axes)
+
+        return Model(cfg, lambda key: hybrid.init_params(cfg, key),
+                     loss, prefill, decode,
+                     lambda b, s: hybrid.init_cache(cfg, b, s))
+    if cfg.family == "ssm":
+        def loss(params, batch, policy=EXACT, remat=True, batch_axes=()):
+            return xlstm_model.lm_loss(params, cfg, batch["tokens"],
+                                       policy=policy, batch_axes=batch_axes)
+
+        def prefill(params, batch, cache, policy=EXACT, batch_axes=()):
+            return xlstm_model.prefill(params, cfg, batch["tokens"], cache,
+                                       policy=policy, batch_axes=batch_axes)
+
+        def decode(params, token, cache, pos, policy=EXACT, batch_axes=()):
+            return xlstm_model.decode_step(params, cfg, token, cache, pos,
+                                           policy=policy, batch_axes=batch_axes)
+
+        return Model(cfg, lambda key: xlstm_model.init_params(cfg, key),
+                     loss, prefill, decode,
+                     lambda b, s: xlstm_model.init_cache(cfg, b, s))
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec,
+                batch_override: Optional[int] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the step inputs of this (arch x shape) cell."""
+    b = batch_override or shape.global_batch
+    s = shape.seq_len
+    f32 = jnp.float32
+    i32 = jnp.int32
+    if shape.kind == "train":
+        if cfg.family == "audio":
+            return {"input_embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), f32),
+                    "tokens": jax.ShapeDtypeStruct((b, s), i32),
+                    "loss_mask": jax.ShapeDtypeStruct((b, s), f32)}
+        if cfg.family == "vlm":
+            s_img = int(s * cfg.prefix_len_frac)
+            return {"input_embeds": jax.ShapeDtypeStruct((b, s_img, cfg.d_model), f32),
+                    "tokens": jax.ShapeDtypeStruct((b, s - s_img), i32)}
+        return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    if shape.kind == "prefill":
+        if cfg.family == "audio":
+            return {"input_embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), f32)}
+        if cfg.family == "vlm":
+            s_img = int(s * cfg.prefix_len_frac)
+            return {"input_embeds": jax.ShapeDtypeStruct((b, s_img, cfg.d_model), f32),
+                    "tokens": jax.ShapeDtypeStruct((b, s - s_img), i32)}
+        return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    # decode: one new token against a cache of seq_len
+    return {"token": jax.ShapeDtypeStruct((b, 1), i32)}
+
+
+def cache_specs(cfg: ModelConfig, batch: int, max_len: int, **kw):
+    """ShapeDtypeStructs of the KV/SSM cache for decode dry-runs."""
+    model = get_model(cfg)
+    if model.init_cache is None:
+        return None
+    return jax.eval_shape(lambda: model.init_cache(batch, max_len, **kw))

@@ -1,0 +1,195 @@
+"""Zamba2-style hybrid: Mamba2 backbone with a shared attention block inserted
+after every `attn_every` Mamba layers (weights shared across insertions).
+
+Mamba layers are scanned in groups of `attn_every` (stacked params -> O(1) HLO in
+depth); the shared-attn insertions are unrolled (there are only L/attn_every of
+them). Decode carries SSM states + per-insertion KV caches.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.gemm import EXACT, GemmPolicy
+from . import layers as L
+from . import ssm
+
+
+def _group_structure(cfg: ModelConfig):
+    g = cfg.attn_every
+    n_full = cfg.n_layers // g
+    rem = cfg.n_layers - n_full * g
+    return g, n_full, rem
+
+
+def init_params(cfg: ModelConfig, key):
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    g, n_full, rem = _group_structure(cfg)
+    ke, km, kr, ka, kf, kn = jax.random.split(key, 6)
+
+    def init_one(k):
+        kl, kb = jax.random.split(k)
+        return {"ln": jnp.zeros((cfg.d_model,), dt),
+                "mamba": ssm.init_mamba(kb, cfg, dt)}
+
+    mkeys = jax.random.split(km, n_full * g).reshape(n_full, g, 2)
+    grouped = jax.vmap(jax.vmap(lambda k: init_one(k)))(mkeys)
+    params = {
+        "embed": (jax.random.normal(ke, (cfg.vocab_size, cfg.d_model)) *
+                  cfg.d_model ** -0.5).astype(dt),
+        "groups": grouped,
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+        "shared_attn": {
+            "ln1": jnp.zeros((cfg.d_model,), dt),
+            "ln2": jnp.zeros((cfg.d_model,), dt),
+            "attn": L.init_attention(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                     cfg.hd, False, dt),
+            "mlp": L.init_mlp(kf, cfg.d_model, cfg.d_ff, dt),
+        },
+        "lm_head": (jax.random.normal(kn, (cfg.d_model, cfg.vocab_size)) *
+                    cfg.d_model ** -0.5).astype(dt),
+    }
+    if rem:
+        rkeys = jax.random.split(kr, rem).reshape(rem, 2)
+        params["tail"] = jax.vmap(lambda k: init_one(k))(rkeys)
+    return params
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    g, n_full, rem = _group_structure(cfg)
+    n_attn = n_full + (1 if rem else 0)
+    di = cfg.ssm_expand * cfg.d_model
+    heads = di // 64
+    return {
+        "ssm_s": jnp.zeros((n_full, g, batch, heads, 64, cfg.ssm_state), jnp.float32),
+        "ssm_conv": jnp.zeros((n_full, g, batch, cfg.ssm_conv - 1, di), dtype),
+        "tail_s": jnp.zeros((max(rem, 1), batch, heads, 64, cfg.ssm_state), jnp.float32),
+        "tail_conv": jnp.zeros((max(rem, 1), batch, cfg.ssm_conv - 1, di), dtype),
+        "k": jnp.zeros((n_attn, batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+        "v": jnp.zeros((n_attn, batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
+    }
+
+
+def _mamba_group_scan(group_params, x, cfg, policy, states):
+    """Scan over the `g` stacked mamba layers of one group. Training (no
+    incoming state) checkpoints each layer: the SSD chunk quadratics are the
+    memory hot-spot (unrematted zamba2 train measured >100 GiB/device)."""
+    use_state = states is not None
+
+    def body(x, xs):
+        lp, st = xs
+
+        def layer(lp_, x_):
+            h = L.rms_norm(x_, lp_["ln"], cfg.norm_eps)
+            out, new_state = ssm.mamba_block(
+                lp_["mamba"], h, cfg,
+                state=ssm.SSMState(st[0], st[1]) if use_state else None,
+                policy=policy)
+            return x_ + out, (new_state.s, new_state.conv)
+
+        if not use_state:
+            layer = jax.checkpoint(layer)
+        return layer(lp, x)
+
+    if use_state:
+        xs = (group_params, states)
+    else:
+        bsz, t, d = x.shape
+        di = cfg.ssm_expand * d
+        heads = di // 64
+        g = jax.tree_util.tree_leaves(group_params)[0].shape[0]
+        dummy_s = jnp.zeros((g, bsz, heads, 64, cfg.ssm_state), jnp.float32)
+        dummy_c = jnp.zeros((g, bsz, cfg.ssm_conv - 1, di),
+                            x.dtype)
+        xs = (group_params, (dummy_s, dummy_c))
+    x, new_states = jax.lax.scan(body, x, xs)
+    return x, new_states
+
+
+def forward(params, cfg: ModelConfig, *, tokens, cache: Optional[Dict] = None,
+            cache_pos=0, positions=None, policy: GemmPolicy = EXACT,
+            attn_chunk: int = 1024, batch_axes=()):
+    g, n_full, rem = _group_structure(cfg)
+    x = params["embed"][tokens] * jnp.asarray(cfg.d_model ** 0.5,
+                                              params["embed"].dtype)
+    x = L.constrain_batch(x, batch_axes)
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32) + (cache_pos if cache is not None else 0)
+    kv_valid = (cache_pos + s) if cache is not None else s
+    new_cache = {k: v for k, v in cache.items()} if cache is not None else None
+
+    def shared_attn(x, attn_idx):
+        sp = params["shared_attn"]
+        h = L.rms_norm(x, sp["ln1"], cfg.norm_eps)
+        kv = None
+        if cache is not None:
+            kv = (new_cache["k"][attn_idx], new_cache["v"][attn_idx])
+        out, kv_new = L.attention_block(
+            sp["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.hd, rope_theta=cfg.rope_theta, q_positions=positions,
+            kv_cache=kv, cache_pos=cache_pos, kv_valid_len=kv_valid,
+            causal=True, window=0, softcap=0.0, chunk=attn_chunk, policy=policy)
+        x = x + out
+        h = L.rms_norm(x, sp["ln2"], cfg.norm_eps)
+        x = x + L.mlp_block(sp["mlp"], h, act=cfg.act, policy=policy)
+        if cache is not None:
+            new_cache["k"] = new_cache["k"].at[attn_idx].set(kv_new[0])
+            new_cache["v"] = new_cache["v"].at[attn_idx].set(kv_new[1])
+        return x
+
+    for gi in range(n_full):
+        gp = jax.tree.map(lambda z: z[gi], params["groups"])
+        states = None
+        if cache is not None:
+            states = (new_cache["ssm_s"][gi], new_cache["ssm_conv"][gi])
+        x, ns = _mamba_group_scan(gp, x, cfg, policy, states)
+        if cache is not None:
+            new_cache["ssm_s"] = new_cache["ssm_s"].at[gi].set(ns[0])
+            new_cache["ssm_conv"] = new_cache["ssm_conv"].at[gi].set(ns[1])
+        x = shared_attn(x, gi)
+    if rem:
+        states = None
+        if cache is not None:
+            states = (new_cache["tail_s"], new_cache["tail_conv"])
+        x, ns = _mamba_group_scan(params["tail"], x, cfg, policy, states)
+        if cache is not None:
+            new_cache["tail_s"], new_cache["tail_conv"] = ns
+        x = shared_attn(x, n_full)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, new_cache
+
+
+def lm_loss(params, cfg: ModelConfig, tokens, *, policy: GemmPolicy = EXACT,
+            remat: bool = True, batch_axes=(), **_):
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    hidden, _ = forward(params, cfg, tokens=inp, policy=policy,
+                        batch_axes=batch_axes)
+    logits = jnp.matmul(hidden, params["lm_head"].astype(hidden.dtype))
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    return (lse - ll).mean()
+
+
+def prefill(params, cfg, tokens, cache, *, policy=EXACT, attn_chunk=1024,
+            batch_axes=(), **_):
+    hidden, cache = forward(params, cfg, tokens=tokens, cache=cache, cache_pos=0,
+                            policy=policy, attn_chunk=attn_chunk,
+                            batch_axes=batch_axes)
+    logits = jnp.matmul(hidden[:, -1:], params["lm_head"].astype(hidden.dtype))
+    return logits.astype(jnp.float32), cache
+
+
+def decode_step(params, cfg, token, cache, pos, *, policy=EXACT,
+                attn_chunk=1024, batch_axes=(), **_):
+    positions = jnp.full((1,), pos, jnp.int32)
+    hidden, cache = forward(params, cfg, tokens=token, cache=cache,
+                            cache_pos=pos, positions=positions, policy=policy,
+                            attn_chunk=attn_chunk, batch_axes=batch_axes)
+    logits = jnp.matmul(hidden, params["lm_head"].astype(hidden.dtype))
+    return logits.astype(jnp.float32), cache

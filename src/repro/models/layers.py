@@ -1,0 +1,315 @@
+"""Shared neural-net layers: RMSNorm, RoPE, chunked (flash-style) GQA attention
+with sliding-window / softcap support, SwiGLU MLP.
+
+All matmuls route through `core.gemm.sa_dot` so the paper's exact/approximate
+systolic backends are selectable per layer (the framework's first-class feature).
+Attention is computed with an online-softmax scan over KV chunks so 32k-token
+prefill never materializes an (S, S) score matrix.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gemm import EXACT, GemmPolicy, sa_dot
+
+BIG_NEG = -2.3819763e38  # min bf16
+
+
+def constrain_batch(x: jnp.ndarray, batch_axes) -> jnp.ndarray:
+    """Pin the leading (batch) dim's sharding on activations. GSPMD otherwise
+    replicates after the embedding gather (vocab-sharded table x batch-sharded
+    indices), blowing per-device activation memory by the data-axis size."""
+    if not batch_axes:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = P(tuple(batch_axes), *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """Rotary embedding. x: (B, S, H, D); positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def _softcap(x: jnp.ndarray, cap) -> jnp.ndarray:
+    return jnp.where(cap > 0, cap * jnp.tanh(x / jnp.where(cap > 0, cap, 1.0)), x)
+
+
+class AttnState(NamedTuple):
+    acc: jnp.ndarray   # (B, KH, G, Sq, D) running numerator
+    m: jnp.ndarray     # (B, KH, G, Sq)    running max
+    l: jnp.ndarray     # (B, KH, G, Sq)    running denominator
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                      q_positions: jnp.ndarray, kv_valid_len,
+                      *, causal: bool = True, window=0, softcap=0.0,
+                      chunk: int = 1024, q_chunk: int = 1024,
+                      kv_positions=None) -> jnp.ndarray:
+    """Flash-style attention: outer scan over Q chunks, inner online-softmax scan
+    over KV chunks — score/probability tensors never exceed
+    (B, H, q_chunk, chunk), so 32k prefill fits HBM.
+
+    q: (B, Sq, H, D); k/v: (B, Skv, KH, D) (the cache, possibly partly invalid).
+    q_positions: (Sq,) global positions of the queries. kv_valid_len: scalar —
+    entries at kv index >= kv_valid_len are masked (unwritten cache slots).
+    `window` may be a traced per-layer scalar; 0/negative means full attention.
+    """
+    b, sq, h, d = q.shape
+    _, skv, kh, _ = k.shape
+    g = h // kh
+    scale = d ** -0.5
+    qc = min(q_chunk, sq)
+    nq = -(-sq // qc)
+    qpad = nq * qc - sq
+    qh = (q * scale).reshape(b, sq, kh, g, d).transpose(0, 2, 3, 1, 4)
+    qpos = q_positions.astype(jnp.int32)
+    if qpad:
+        qh = jnp.pad(qh, ((0, 0), (0, 0), (0, 0), (0, qpad), (0, 0)))
+        qpos = jnp.pad(qpos, (0, qpad))
+    qh = qh.reshape(b, kh, g, nq, qc, d).transpose(3, 0, 1, 2, 4, 5)  # NQ,B,KH,G,qc,D
+    qpos_c = qpos.reshape(nq, qc)
+
+    nk = -(-skv // chunk)
+    kpad = nk * chunk - skv
+    if kv_positions is not None:
+        kv_positions = jnp.asarray(kv_positions, jnp.int32)
+    if kpad:
+        k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        if kv_positions is not None:
+            kv_positions = jnp.pad(kv_positions, (0, kpad),
+                                   constant_values=-(10 ** 9))
+    kc = k.reshape(b, nk, chunk, kh, d).transpose(1, 0, 3, 2, 4)      # NK,B,KH,C,D
+    vc = v.reshape(b, nk, chunk, kh, d).transpose(1, 0, 3, 2, 4)
+    kvp_c = (kv_positions.reshape(nk, chunk) if kv_positions is not None
+             else None)
+    window_eff = jnp.where(jnp.asarray(window) > 0, jnp.asarray(window),
+                           jnp.iinfo(jnp.int32).max).astype(jnp.int32)
+
+    def q_body(_, q_in):
+        q_blk, qp = q_in                                   # (B,KH,G,qc,D), (qc,)
+
+        def kv_body(state: AttnState, kv_in):
+            idx, k_blk, v_blk, kp = kv_in
+            kpos = (kp if kvp_c is not None
+                    else idx * chunk + jnp.arange(chunk, dtype=jnp.int32))
+            s = jnp.einsum("bkgqd,bkcd->bkgqc", q_blk.astype(jnp.float32),
+                           k_blk.astype(jnp.float32))
+            s = _softcap(s, softcap)
+            if kvp_c is not None:
+                valid = (kpos[None, :] >= 0)      # ring slots carry positions
+            else:
+                valid = (kpos[None, :] < kv_valid_len)
+            if causal:
+                delta = qp[:, None] - kpos[None, :]        # (qc, C)
+                valid = valid & (delta >= 0) & (delta < window_eff)
+            else:
+                valid = jnp.broadcast_to(valid, (qc, chunk))
+            s = jnp.where(valid[None, None, None], s, BIG_NEG)
+            m_new = jnp.maximum(state.m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(state.m - m_new)
+            l_new = state.l * corr + p.sum(axis=-1)
+            acc_new = state.acc * corr[..., None] + jnp.einsum(
+                "bkgqc,bkcd->bkgqd", p, v_blk.astype(jnp.float32))
+            return AttnState(acc_new, m_new, l_new), None
+
+        init = AttnState(
+            jnp.zeros((b, kh, g, qc, d), jnp.float32),
+            jnp.full((b, kh, g, qc), BIG_NEG, jnp.float32),
+            jnp.zeros((b, kh, g, qc), jnp.float32),
+        )
+        idxs = jnp.arange(nk, dtype=jnp.int32)
+        kvp_xs = kvp_c if kvp_c is not None else jnp.zeros((nk, chunk),
+                                                           jnp.int32)
+        # checkpoint the chunk body: backward recomputes each chunk's scores
+        # instead of saving O(S^2/chunk) probability residuals (flash backward)
+        st, _ = jax.lax.scan(jax.checkpoint(kv_body), init,
+                             (idxs, kc, vc, kvp_xs))
+        out = st.acc / jnp.maximum(st.l, 1e-30)[..., None]  # (B,KH,G,qc,D)
+        return None, out
+
+    _, out_c = jax.lax.scan(q_body, None, (qh, qpos_c))     # (NQ,B,KH,G,qc,D)
+    out = out_c.transpose(1, 0, 4, 2, 3, 5).reshape(b, nq * qc, h, d)
+    return out[:, :sq].astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV-cache payload helpers (optional int8 storage: the paper's low-precision
+# insight applied to cache bandwidth — 2x HBM traffic reduction on decode)
+# ---------------------------------------------------------------------------
+
+CACHE_INT8_SCALE = 32.0
+
+
+def cache_store(x: jnp.ndarray, dtype) -> jnp.ndarray:
+    if dtype == jnp.int8:
+        return jnp.clip(jnp.round(x.astype(jnp.float32) * CACHE_INT8_SCALE),
+                        -127, 127).astype(jnp.int8)
+    return x.astype(dtype)
+
+
+def cache_load(x: jnp.ndarray) -> jnp.ndarray:
+    if x.dtype == jnp.int8:
+        return x.astype(jnp.float32) / CACHE_INT8_SCALE
+    return x
+
+
+def ring_write(ck, cv, kpos, k_new, v_new, cache_pos, window: int):
+    """Write new K/V into a ring buffer of size `window`.
+
+    ck/cv: (B, W, KH, D); kpos: (W,) positions held by each slot (-inf if empty).
+    Decode (sq=1): slot = pos % W. Prefill (sq=S): requires S % W == 0 or S <= W;
+    the last W entries land contiguously because S % W == 0.
+    """
+    b, sq = k_new.shape[0], k_new.shape[1]
+    if sq == 1:
+        slot = jnp.mod(jnp.asarray(cache_pos, jnp.int32), window)
+        ck = jax.lax.dynamic_update_slice(
+            ck, cache_store(k_new, ck.dtype), (0, slot, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cv, cache_store(v_new, cv.dtype), (0, slot, 0, 0))
+        kpos = jax.lax.dynamic_update_slice(
+            kpos, jnp.asarray(cache_pos, jnp.int32)[None], (slot,))
+        return ck, cv, kpos
+    w = ck.shape[1]
+    if sq < w:
+        # prefill shorter than the window (starts at slot cache_pos % w == 0)
+        ck = jax.lax.dynamic_update_slice(
+            ck, cache_store(k_new, ck.dtype), (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(
+            cv, cache_store(v_new, cv.dtype), (0, 0, 0, 0))
+        newpos = jnp.arange(sq, dtype=jnp.int32) + jnp.asarray(cache_pos,
+                                                               jnp.int32)
+        kpos = jax.lax.dynamic_update_slice(kpos, newpos, (0,))
+        return ck, cv, kpos
+    # sq >= w: the last w tokens land at slots ((start + j) % w) — a roll
+    start = jnp.asarray(cache_pos, jnp.int32) + sq - w
+    shift = jnp.mod(start, w)
+    ck = jnp.roll(cache_store(k_new[:, -w:], ck.dtype), shift, axis=1)
+    cv = jnp.roll(cache_store(v_new[:, -w:], cv.dtype), shift, axis=1)
+    kpos = start + jnp.mod(jnp.arange(w, dtype=jnp.int32) - shift, w)
+    return ck, cv, kpos
+
+
+# ---------------------------------------------------------------------------
+# Attention block
+# ---------------------------------------------------------------------------
+
+def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int, head_dim: int,
+                   qkv_bias: bool, dtype):
+    ks = jax.random.split(key, 4)
+    std = d_model ** -0.5
+    p = {
+        "wq": (jax.random.normal(ks[0], (d_model, n_heads * head_dim)) * std).astype(dtype),
+        "wk": (jax.random.normal(ks[1], (d_model, n_kv_heads * head_dim)) * std).astype(dtype),
+        "wv": (jax.random.normal(ks[2], (d_model, n_kv_heads * head_dim)) * std).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (n_heads * head_dim, d_model)) * std).astype(dtype),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+    return p
+
+
+def attention_block(p, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
+                    q_positions, kv_cache=None, ring_cache=None, cache_pos=None,
+                    kv_valid_len=None, causal=True, window=0, softcap=0.0,
+                    chunk=1024, policy: GemmPolicy = EXACT, layer: str = ""):
+    """GQA attention.
+
+    kv_cache=(k, v): uniform cache — new K/V written at cache_pos, attention
+    over the (possibly int8) cache. ring_cache=(k, v, kpos): windowed ring
+    buffer of size `window` — decode attends over the ring via per-slot
+    positions; prefill attends in-sequence and then fills the ring with the
+    last `window` K/V. Returns (out, new_cache_or_ring).
+    """
+    b, sq, _ = x.shape
+    q = sa_dot(x, p["wq"], policy, layer=layer + "/wq")
+    k = sa_dot(x, p["wk"], policy, layer=layer + "/wk")
+    v = sa_dot(x, p["wv"], policy, layer=layer + "/wv")
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(b, sq, n_heads, head_dim)
+    k = k.reshape(b, sq, n_kv_heads, head_dim)
+    v = v.reshape(b, sq, n_kv_heads, head_dim)
+    q = rope(q, q_positions, rope_theta)
+    k = rope(k, q_positions, rope_theta)
+
+    if ring_cache is not None:
+        ck, cv, kpos = ring_cache
+        w = ck.shape[1]
+        ck, cv, kpos = ring_write(ck, cv, kpos, k, v, cache_pos, w)
+        if sq == 1:   # decode: attend over the ring (positions per slot)
+            out = chunked_attention(q, cache_load(ck), cache_load(cv),
+                                    q_positions, w, causal=causal, window=window,
+                                    softcap=softcap, chunk=min(chunk, w),
+                                    kv_positions=kpos)
+        else:         # prefill: attend in-sequence under the window mask
+            out = chunked_attention(q, k, v, q_positions, sq, causal=causal,
+                                    window=window, softcap=softcap, chunk=chunk)
+        out = out.reshape(b, sq, n_heads * head_dim)
+        return sa_dot(out, p["wo"], policy, layer=layer + "/wo"), (ck, cv, kpos)
+
+    if kv_cache is not None:
+        ck, cv = kv_cache
+        ck = jax.lax.dynamic_update_slice(ck, cache_store(k, ck.dtype),
+                                          (0, cache_pos, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, cache_store(v, cv.dtype),
+                                          (0, cache_pos, 0, 0))
+        new_cache = (ck, cv)
+        k_all, v_all = cache_load(ck), cache_load(cv)
+        valid = kv_valid_len if kv_valid_len is not None else cache_pos + sq
+    else:
+        new_cache = None
+        k_all, v_all = k, v
+        valid = sq
+    out = chunked_attention(q, k_all, v_all, q_positions, valid, causal=causal,
+                            window=window, softcap=softcap, chunk=chunk)
+    out = out.reshape(b, sq, n_heads * head_dim)
+    return sa_dot(out, p["wo"], policy, layer=layer + "/wo"), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, d_model: int, d_ff: int, dtype):
+    ks = jax.random.split(key, 3)
+    std = d_model ** -0.5
+    return {
+        "w1": (jax.random.normal(ks[0], (d_model, d_ff)) * std).astype(dtype),
+        "w3": (jax.random.normal(ks[1], (d_model, d_ff)) * std).astype(dtype),
+        "w2": (jax.random.normal(ks[2], (d_ff, d_model)) * (d_ff ** -0.5)).astype(dtype),
+    }
+
+
+def mlp_block(p, x, *, act: str = "silu", policy: GemmPolicy = EXACT,
+              layer: str = ""):
+    h1 = sa_dot(x, p["w1"], policy, layer=layer + "/w1")
+    h3 = sa_dot(x, p["w3"], policy, layer=layer + "/w3")
+    actf = jax.nn.silu if act == "silu" else jax.nn.gelu
+    return sa_dot(actf(h1) * h3, p["w2"], policy, layer=layer + "/w2")

@@ -1,0 +1,89 @@
+"""Mixture-of-Experts block with sort-based capacity dispatch (EP-shardable).
+
+Dispatch: flatten (token, top-k slot) assignments, compute each assignment's
+position within its expert via a cumsum over expert one-hots, drop assignments
+beyond capacity, scatter token activations into an (E, C, d) buffer, run the
+expert FFNs as a single batched einsum (expert dim shardable over the `model`
+mesh axis = expert parallelism), and combine back weighted by router probs.
+
+HLO FLOPs scale with E*C*d*ff where E*C ~= tokens*topk*capacity_factor, i.e.
+with *active* experts — so the roofline's MODEL_FLOPS/HLO_FLOPs ratio stays
+honest for MoE archs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gemm import EXACT, GemmPolicy
+from repro.configs.base import ModelConfig
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    d, ff, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    ks = jax.random.split(key, 5)
+    std = d ** -0.5
+    p = {
+        "router": (jax.random.normal(ks[0], (d, e)) * std).astype(jnp.float32),
+        "w1": (jax.random.normal(ks[1], (e, d, ff)) * std).astype(dtype),
+        "w3": (jax.random.normal(ks[2], (e, d, ff)) * std).astype(dtype),
+        "w2": (jax.random.normal(ks[3], (e, ff, d)) * (ff ** -0.5)).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        sff = cfg.moe_d_ff * cfg.n_shared_experts
+        kss = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w1": (jax.random.normal(kss[0], (d, sff)) * std).astype(dtype),
+            "w3": (jax.random.normal(kss[1], (d, sff)) * std).astype(dtype),
+            "w2": (jax.random.normal(kss[2], (sff, d)) * (sff ** -0.5)).astype(dtype),
+        }
+    return p
+
+
+def moe_block(p, x, cfg: ModelConfig, *, policy: GemmPolicy = EXACT,
+              layer: str = ""):
+    """x: (B, S, d) -> (B, S, d). Returns (out, aux_loss)."""
+    b, s, d = x.shape
+    t = b * s
+    e, topk = cfg.n_experts, cfg.n_active_experts
+    cap = int(t * topk / e * cfg.capacity_factor) + 1
+
+    xf = x.reshape(t, d)
+    logits = xf.astype(jnp.float32) @ p["router"]                  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, topk)                      # (T, K)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch-style)
+    me = probs.mean(0)
+    ce = jnp.zeros((e,), jnp.float32).at[top_e[:, 0]].add(1.0) / t
+    aux = e * jnp.sum(me * ce)
+
+    flat_e = top_e.reshape(-1)                                      # (T*K,)
+    flat_p = top_p.reshape(-1)
+    # position of each assignment within its expert (dense cumsum over one-hots)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)             # (T*K, E)
+    pos_in_e = (jnp.cumsum(onehot, axis=0) - onehot)                # exclusive
+    pos = jnp.take_along_axis(pos_in_e, flat_e[:, None], axis=1)[:, 0]
+    keep = pos < cap
+    dest = jnp.where(keep, flat_e * cap + pos, e * cap)             # drop -> OOB
+
+    tok_idx = jnp.repeat(jnp.arange(t), topk)
+    buf = jnp.zeros((e * cap + 1, d), xf.dtype).at[dest].add(xf[tok_idx])
+    buf = buf[:-1].reshape(e, cap, d)
+
+    h1 = jnp.einsum("ecd,edf->ecf", buf, p["w1"])
+    h3 = jnp.einsum("ecd,edf->ecf", buf, p["w3"])
+    hidden = jax.nn.silu(h1) * h3
+    out_e = jnp.einsum("ecf,efd->ecd", hidden, p["w2"])             # (E, C, d)
+
+    flat_out = out_e.reshape(e * cap, d)
+    gathered = jnp.where(keep[:, None], flat_out[jnp.minimum(dest, e * cap - 1)], 0)
+    contrib = gathered * flat_p[:, None].astype(gathered.dtype)
+    combined = jnp.zeros((t, d), gathered.dtype).at[tok_idx].add(contrib)
+    out = combined.reshape(b, s, d).astype(x.dtype)
+
+    if "shared" in p:
+        from .layers import mlp_block
+        out = out + mlp_block(p["shared"], x, policy=policy, layer=layer + "/shared")
+    return out, aux

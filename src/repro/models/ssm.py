@@ -1,0 +1,133 @@
+"""Mamba2 (SSD) block — chunked state-space dual form.
+
+Per head: state S (P x N) evolves as S_t = exp(dt_t * A) * S_{t-1} + dt_t *
+x_t B_t^T; output y_t = S_t C_t. The chunked SSD algorithm computes within-chunk
+interactions with a masked quadratic form and carries the state across chunks
+with a scan — linear in sequence length, which is what makes zamba2/long_500k
+runnable (DESIGN.md §4).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gemm import EXACT, GemmPolicy, sa_dot
+from repro.configs.base import ModelConfig
+
+
+class SSMState(NamedTuple):
+    s: jnp.ndarray       # (B, H, P, N) running state
+    conv: jnp.ndarray    # (B, conv_w-1, d_inner) conv tail for decode
+
+
+def init_mamba(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    heads = di // 64                      # head dim P = 64
+    ks = jax.random.split(key, 6)
+    std = d ** -0.5
+    return {
+        # in_proj -> [z (di), x (di), B (H*N? use shared B/C per head group: H,N), C, dt (H)]
+        "in_proj": (jax.random.normal(ks[0], (d, 2 * di + 2 * heads * n + heads)) * std).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, di)) * 0.1).astype(dtype),
+        "a_log": jnp.zeros((heads,), jnp.float32),
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "d_skip": jnp.ones((heads,), jnp.float32),
+        "norm_w": jnp.zeros((di,), dtype),
+        "out_proj": (jax.random.normal(ks[2], (di, d)) * (di ** -0.5)).astype(dtype),
+    }
+
+
+def _ssd_chunked(x, dt, a_log, b_mat, c_mat, s0, chunk: int):
+    """Chunked SSD. x: (B,T,H,P), dt: (B,T,H), b/c: (B,T,H,N), s0: (B,H,P,N).
+    Returns (y, s_final)."""
+    bsz, t, h, p = x.shape
+    n = b_mat.shape[-1]
+    nc = -(-t // chunk)
+    pad = nc * chunk - t
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    a = -jnp.exp(a_log)                                   # (H,) negative decay rate
+
+    def reshape_c(z):
+        return z.reshape(bsz, nc, chunk, *z.shape[2:]).swapaxes(0, 1)
+
+    xc, dtc, bc, cc = map(reshape_c, (x, dt, b_mat, c_mat))
+
+    def body(s, inp):
+        xk, dtk, bk, ck = inp                             # (B,C,H,P), (B,C,H), ...
+        da = dtk * a[None, None, :]                       # (B,C,H) log-decay per step
+        cum = jnp.cumsum(da, axis=1)                      # inclusive
+        # within-chunk quadratic form: L[i,j] = exp(cum_i - cum_j) for i >= j
+        li = cum[:, :, None, :] - cum[:, None, :, :]      # (B,C,C,H)
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        lmat = jnp.where(mask[None, :, :, None], jnp.exp(li), 0.0)
+        g = jnp.einsum("bihn,bjhn->bijh", ck, bk)         # C_i . B_j
+        y_intra = jnp.einsum("bijh,bijh,bjh,bjhp->bihp", g, lmat, dtk, xk)
+        # inter-chunk: contribution of incoming state
+        y_inter = jnp.einsum("bihn,bhpn,bih->bihp", ck, s, jnp.exp(cum))
+        # state update: S' = exp(sum da) S + sum_j exp(cum_C - cum_j) dt_j x_j B_j^T
+        decay_tail = jnp.exp(cum[:, -1:, :] - cum)        # (B,C,H)
+        s_new = (jnp.exp(cum[:, -1, :])[:, :, None, None] * s
+                 + jnp.einsum("bjh,bjh,bjhp,bjhn->bhpn", decay_tail, dtk, xk, bk))
+        return s_new, y_intra + y_inter
+
+    s_fin, yc = jax.lax.scan(body, s0, (xc, dtc, bc, cc))
+    y = yc.swapaxes(0, 1).reshape(bsz, nc * chunk, h, p)
+    return y[:, :t], s_fin
+
+
+def mamba_block(p, x, cfg: ModelConfig, *, state: Optional[SSMState] = None,
+                chunk: int = 256, policy: GemmPolicy = EXACT, layer: str = ""):
+    """x: (B, T, d). If `state` is given (decode), T must be 1 and the recurrence
+    is advanced directly. Returns (out, new_state)."""
+    bsz, t, d = x.shape
+    di = cfg.ssm_expand * d
+    n = cfg.ssm_state
+    heads = di // 64
+    pdim = 64
+    proj = sa_dot(x, p["in_proj"], policy, layer=layer + "/in_proj")
+    z, xr, bflat, cflat, dt_raw = jnp.split(
+        proj, [di, 2 * di, 2 * di + heads * n, 2 * di + 2 * heads * n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # (B,T,H)
+
+    conv_w = p["conv_w"]                                  # (W, di)
+    w_len = conv_w.shape[0]
+    if state is None:
+        xpad = jnp.pad(xr, ((0, 0), (w_len - 1, 0), (0, 0)))
+        conv_tail = xpad[:, -(w_len - 1):, :] if w_len > 1 else jnp.zeros((bsz, 0, di), xr.dtype)
+        xconv = sum(xpad[:, i:i + t, :] * conv_w[i] for i in range(w_len))
+    else:
+        hist = jnp.concatenate([state.conv, xr], axis=1)  # (B, W, di) for t=1
+        xconv = sum(hist[:, i:i + t, :] * conv_w[i] for i in range(w_len))
+        conv_tail = hist[:, -(w_len - 1):, :]
+    xconv = jax.nn.silu(xconv)
+
+    xh = xconv.reshape(bsz, t, heads, pdim)
+    bh = bflat.reshape(bsz, t, heads, n).astype(jnp.float32)
+    ch = cflat.reshape(bsz, t, heads, n).astype(jnp.float32)
+    s0 = state.s if state is not None else jnp.zeros((bsz, heads, pdim, n), jnp.float32)
+
+    if state is not None and t == 1:
+        a = -jnp.exp(p["a_log"])
+        da = jnp.exp(dt[:, 0] * a[None, :])               # (B,H)
+        s_new = (da[:, :, None, None] * s0
+                 + jnp.einsum("bh,bhp,bhn->bhpn", dt[:, 0], xh[:, 0].astype(jnp.float32),
+                              bh[:, 0]))
+        y = jnp.einsum("bhn,bhpn->bhp", ch[:, 0], s_new)[:, None]    # (B,1,H,P)
+        s_fin = s_new
+    else:
+        y, s_fin = _ssd_chunked(xh.astype(jnp.float32), dt, p["a_log"], bh, ch,
+                                s0, min(chunk, t))
+    y = y + p["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(bsz, t, di).astype(x.dtype)
+    from .layers import rms_norm
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = sa_dot(y, p["out_proj"], policy, layer=layer + "/out_proj")
+    return out, SSMState(s_fin, conv_tail)

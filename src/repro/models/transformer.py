@@ -1,0 +1,317 @@
+"""Decoder/encoder transformer LM with scan-over-layers (dense, MoE, audio, VLM).
+
+One traced layer + `lax.scan` over stacked layer params keeps HLO size O(1) in
+depth. Non-uniform attention patterns (gemma3's 5:1 local:global, gemma2's
+alternation) are branchless: a per-layer window scalar rides the scan as an xs
+input and feeds the chunked-attention mask.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ModelConfig
+from repro.core.gemm import EXACT, GemmPolicy
+from . import layers as L
+from . import moe as moe_mod
+
+PyTree = Any
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def layer_windows(cfg: ModelConfig) -> jnp.ndarray:
+    """(L,) per-layer window sizes; 0 = global/full attention."""
+    idx = jnp.arange(cfg.n_layers)
+    if cfg.window_size and cfg.global_every:
+        is_global = (idx + 1) % cfg.global_every == 0
+        return jnp.where(is_global, 0, cfg.window_size).astype(jnp.int32)
+    if cfg.window_size:
+        return jnp.full((cfg.n_layers,), cfg.window_size, jnp.int32)
+    return jnp.zeros((cfg.n_layers,), jnp.int32)
+
+
+def init_layer(key, cfg: ModelConfig):
+    dt = _dtype(cfg)
+    ka, kf = jax.random.split(key)
+    p = {
+        "ln1": jnp.zeros((cfg.d_model,), dt),
+        "ln2": jnp.zeros((cfg.d_model,), dt),
+        "attn": L.init_attention(ka, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                                 cfg.hd, cfg.qkv_bias, dt),
+    }
+    if cfg.is_moe:
+        p["moe"] = moe_mod.init_moe(kf, cfg, dt)
+    else:
+        p["mlp"] = L.init_mlp(kf, cfg.d_model, cfg.d_ff, dt)
+    return p
+
+
+def init_params(cfg: ModelConfig, key) -> PyTree:
+    dt = _dtype(cfg)
+    ke, kl, kh, kp = jax.random.split(key, 4)
+    layer_keys = jax.random.split(kl, cfg.n_layers)
+    stacked = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    params = {
+        "embed": (jax.random.normal(ke, (cfg.vocab_size, cfg.d_model)) *
+                  cfg.d_model ** -0.5).astype(dt),
+        "layers": stacked,
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(kh, (cfg.d_model, cfg.vocab_size)) *
+                             cfg.d_model ** -0.5).astype(dt)
+    if cfg.family == "vlm":
+        params["patch_proj"] = (jax.random.normal(kp, (cfg.d_model, cfg.d_model)) *
+                                cfg.d_model ** -0.5).astype(dt)
+    return params
+
+
+def _layer_body(lp, x, window, kv_cache, *, cfg: ModelConfig, positions,
+                cache_pos, kv_valid_len, policy: GemmPolicy, chunk: int,
+                ring_cache=None, remat_attn: bool = False):
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+
+    def attn_fn(ap, hh, w):
+        return L.attention_block(
+            ap, hh, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            head_dim=cfg.hd, rope_theta=cfg.rope_theta, q_positions=positions,
+            kv_cache=kv_cache, ring_cache=ring_cache, cache_pos=cache_pos,
+            kv_valid_len=kv_valid_len,
+            causal=cfg.causal, window=w, softcap=cfg.attn_softcap,
+            chunk=chunk, policy=policy, layer="attn")
+
+    if remat_attn:
+        # "attn-only" remat (§Perf cell-B iter 3): the attention scan's
+        # residuals are the memory hot-spot; checkpointing just the attention
+        # block gets near-no-remat FLOPs at a fraction of the residency.
+        attn_fn = jax.checkpoint(attn_fn)
+    attn_out, new_cache = attn_fn(lp["attn"], h, window)
+    x = x + checkpoint_name(attn_out, "attn_out")
+    h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    if cfg.is_moe:
+        ffn_out, aux = moe_mod.moe_block(lp["moe"], h, cfg, policy=policy,
+                                         layer="moe")
+    else:
+        ffn_out = L.mlp_block(lp["mlp"], h, act=cfg.act, policy=policy,
+                              layer="mlp")
+        aux = jnp.zeros((), jnp.float32)
+    return x + ffn_out, new_cache, aux
+
+
+def forward(params: PyTree, cfg: ModelConfig, *, tokens=None, input_embeds=None,
+            cache: Optional[Dict] = None, cache_pos=0, positions=None,
+            policy: GemmPolicy = EXACT, attn_chunk: int = 1024,
+            remat: bool = False, remat_save_attn: bool = False,
+            batch_axes=()):
+    """Returns (hidden, new_cache, aux_loss). Input is tokens (B, S) or
+    precomputed embeddings (audio/vlm stubs)."""
+    if input_embeds is None:
+        x = params["embed"][tokens]                          # (B, S, d)
+        if cfg.family != "audio":
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    else:
+        x = input_embeds.astype(_dtype(cfg))
+        if cfg.family == "vlm" and tokens is not None:
+            tok_emb = params["embed"][tokens] * jnp.asarray(cfg.d_model ** 0.5,
+                                                            x.dtype)
+            x = jnp.concatenate(
+                [jnp.matmul(x, params["patch_proj"]), tok_emb], axis=1)
+    x = L.constrain_batch(x, batch_axes)
+    b, s, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32) + (
+            cache_pos if cache is not None else 0)
+    windows = layer_windows(cfg)
+    kv_valid = (cache_pos + s) if cache is not None else s
+
+    if cache is not None and "k_loc" in cache:
+        return _grouped_forward(params, cfg, x, cache, cache_pos, positions,
+                                kv_valid, policy, attn_chunk, batch_axes)
+
+    def body(x, xs):
+        lp, window, ck, cv = xs
+        kv_cache = (ck, cv) if cache is not None else None
+        fn = functools.partial(_layer_body, cfg=cfg, positions=positions,
+                               cache_pos=cache_pos, kv_valid_len=kv_valid,
+                               policy=policy, chunk=attn_chunk,
+                               remat_attn=(not remat) and remat_save_attn)
+        if remat:
+            # selective remat (§Perf cell-A iter 2): keep each layer's attention
+            # output resident so the backward pass recomputes only norms + MLP,
+            # not the flash-attention scan — ~0.5 forward-pass of FLOPs saved
+            # for +tokens*d bytes/layer of residency.
+            pol = (jax.checkpoint_policies.save_only_these_names("attn_out")
+                   if remat_save_attn else None)
+            fn = jax.checkpoint(fn, static_argnums=(), policy=pol)
+        x, new_cache, aux = fn(lp, x, window, kv_cache)
+        x = L.constrain_batch(x, batch_axes)
+        ys = (new_cache if new_cache is not None else (window, window), aux)
+        return x, ys
+
+    if cache is not None:
+        xs = (params["layers"], windows, cache["k"], cache["v"])
+    else:
+        dummy = jnp.zeros((cfg.n_layers,), jnp.int32)
+        xs = (params["layers"], windows, dummy, dummy)
+    x, (cache_out, auxs) = jax.lax.scan(body, x, xs)
+    new_cache = None
+    if cache is not None:
+        new_cache = {"k": cache_out[0], "v": cache_out[1]}
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, new_cache, auxs.sum()
+
+
+def _grouped_forward(params, cfg: ModelConfig, x, cache, cache_pos, positions,
+                     kv_valid, policy, attn_chunk, batch_axes):
+    """Two-tier windowed-cache path (gemma-style local:global patterns).
+
+    Layers are processed in groups of `global_every` — (global_every - 1) local
+    layers with O(W) ring caches + 1 global layer with a full cache. The outer
+    lax.scan runs over groups; within a group the layers are unrolled. This is
+    the §Perf cell-C optimization: decode KV traffic and cache memory drop to
+    ~(L_loc*W + L_glob*S) / (L*S) of the uniform cache.
+    """
+    per = cfg.global_every
+    g = cfg.n_layers // per
+    layers_g = jax.tree.map(lambda a: a.reshape(g, per, *a.shape[1:]),
+                            params["layers"])
+
+    def body(x, xs):
+        lp_g, kl, vl, kpl, kg, vg = xs
+        new_loc = ([], [], [])
+        aux_sum = jnp.zeros((), jnp.float32)
+        for i in range(per - 1):
+            lp = jax.tree.map(lambda a: a[i], lp_g)
+            x, ring, aux = _layer_body(
+                lp, x, cfg.window_size, None, cfg=cfg, positions=positions,
+                cache_pos=cache_pos, kv_valid_len=kv_valid, policy=policy,
+                chunk=attn_chunk, ring_cache=(kl[i], vl[i], kpl[i]))
+            for lst, val in zip(new_loc, ring):
+                lst.append(val)
+            aux_sum = aux_sum + aux
+        lp = jax.tree.map(lambda a: a[per - 1], lp_g)
+        x, kv_glob, aux = _layer_body(
+            lp, x, 0, (kg, vg), cfg=cfg, positions=positions,
+            cache_pos=cache_pos, kv_valid_len=kv_valid, policy=policy,
+            chunk=attn_chunk)
+        aux_sum = aux_sum + aux
+        x = L.constrain_batch(x, batch_axes)
+        ys = (jnp.stack(new_loc[0]), jnp.stack(new_loc[1]),
+              jnp.stack(new_loc[2]), kv_glob[0], kv_glob[1], aux_sum)
+        return x, ys
+
+    xs = (layers_g, cache["k_loc"], cache["v_loc"], cache["kpos_loc"],
+          cache["k_glob"], cache["v_glob"])
+    x, ys = jax.lax.scan(body, x, xs)
+    new_cache = {"k_loc": ys[0], "v_loc": ys[1], "kpos_loc": ys[2],
+                 "k_glob": ys[3], "v_glob": ys[4]}
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, new_cache, ys[5].sum()
+
+
+def logits_from_hidden(params, cfg: ModelConfig, hidden):
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.matmul(hidden, w.astype(hidden.dtype))
+    return L._softcap(logits.astype(jnp.float32), cfg.final_softcap)
+
+
+def lm_loss(params: PyTree, cfg: ModelConfig, tokens, *, input_embeds=None,
+            loss_mask=None, policy: GemmPolicy = EXACT, remat: bool = True,
+            remat_save_attn: bool = False, ce_chunk: int = 512,
+            attn_chunk: int = 1024, batch_axes=()):
+    """Causal (or masked) CE loss, with the vocab projection computed in sequence
+    chunks so (S, V) logits never materialize for 256k vocabs."""
+    if cfg.causal:
+        inp, tgt = tokens[:, :-1], tokens[:, 1:]
+        mask = jnp.ones_like(tgt, jnp.float32) if loss_mask is None \
+            else loss_mask[:, 1:].astype(jnp.float32)
+    else:  # encoder (audio): tokens are frame labels, inputs are embeddings
+        inp, tgt = tokens, tokens
+        mask = jnp.ones_like(tgt, jnp.float32) if loss_mask is None \
+            else loss_mask.astype(jnp.float32)
+    hidden, _, aux = forward(params, cfg, tokens=inp, input_embeds=input_embeds,
+                             policy=policy, remat=remat,
+                             remat_save_attn=remat_save_attn,
+                             attn_chunk=attn_chunk, batch_axes=batch_axes)
+    if cfg.family == "vlm" and input_embeds is not None:
+        # hidden covers [patches | text[:-1]]; the last S_txt-1 positions plus the
+        # final patch position predict text tokens 1..S_txt-1 -> take text slice
+        hidden = hidden[:, -tgt.shape[1]:]
+    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    b, s, d = hidden.shape
+    n_chunks = -(-s // ce_chunk)
+    pad = n_chunks * ce_chunk - s
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        tgt = jnp.pad(tgt, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    hc = hidden.reshape(b, n_chunks, ce_chunk, d).swapaxes(0, 1)
+    tc = tgt.reshape(b, n_chunks, ce_chunk).swapaxes(0, 1)
+    mc = mask.reshape(b, n_chunks, ce_chunk).swapaxes(0, 1)
+
+    def ce(carry, inp3):
+        h, t, m = inp3
+        logits = L._softcap(jnp.matmul(h, w.astype(h.dtype)).astype(jnp.float32),
+                            cfg.final_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
+        loss_sum, n_sum = carry
+        return (loss_sum + ((lse - ll) * m).sum(), n_sum + m.sum()), None
+
+    (loss_sum, n_sum), _ = jax.lax.scan(ce, (jnp.zeros(()), jnp.zeros(())),
+                                        (hc, tc, mc))
+    return loss_sum / jnp.maximum(n_sum, 1.0) + 0.01 * aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               *, windowed: Optional[bool] = None):
+    """Uniform (L, B, S, KH, hd) cache, or — for local:global window patterns —
+    a two-tier cache: per-group ring buffers of size W for local layers + full
+    caches for the 1-in-`global_every` global layers. dtype=jnp.int8 stores the
+    payload quantized (layers.CACHE_INT8_SCALE), halving cache bytes again."""
+    if windowed is None:
+        windowed = bool(cfg.window_size and cfg.global_every
+                        and max_len > cfg.window_size
+                        and cfg.n_layers % cfg.global_every == 0)
+    if windowed:
+        per = cfg.global_every
+        g = cfg.n_layers // per
+        w = cfg.window_size
+        kh, hd = cfg.n_kv_heads, cfg.hd
+        return {
+            "k_loc": jnp.zeros((g, per - 1, batch, w, kh, hd), dtype),
+            "v_loc": jnp.zeros((g, per - 1, batch, w, kh, hd), dtype),
+            "kpos_loc": jnp.full((g, per - 1, w), -(2 ** 30), jnp.int32),
+            "k_glob": jnp.zeros((g, batch, max_len, kh, hd), dtype),
+            "v_glob": jnp.zeros((g, batch, max_len, kh, hd), dtype),
+        }
+    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def prefill(params, cfg: ModelConfig, tokens, cache, *, input_embeds=None,
+            policy: GemmPolicy = EXACT, attn_chunk: int = 1024, batch_axes=()):
+    hidden, cache, _ = forward(params, cfg, tokens=tokens,
+                               input_embeds=input_embeds, cache=cache,
+                               cache_pos=0, policy=policy, attn_chunk=attn_chunk,
+                               batch_axes=batch_axes)
+    logits = logits_from_hidden(params, cfg, hidden[:, -1:])
+    return logits, cache
+
+
+def decode_step(params, cfg: ModelConfig, token, cache, pos, *,
+                policy: GemmPolicy = EXACT, attn_chunk: int = 1024,
+                batch_axes=()):
+    """One decode step. token: (B, 1); pos: scalar int32 (current length)."""
+    positions = jnp.full((1,), pos, jnp.int32)
+    hidden, cache, _ = forward(params, cfg, tokens=token, cache=cache,
+                               cache_pos=pos, positions=positions, policy=policy,
+                               attn_chunk=attn_chunk, batch_axes=batch_axes)
+    return logits_from_hidden(params, cfg, hidden), cache

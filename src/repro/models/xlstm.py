@@ -1,0 +1,166 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked linear-attention form) and sLSTM
+(scalar memory with exponential gating, sequential scan).
+
+mLSTM recurrence per head:  C_t = f_t C_{t-1} + i_t v_t k_t^T ;  n_t = f_t n_{t-1}
++ i_t k_t ;  y_t = C_t q_t / max(|n_t^T q_t|, 1). Computed chunkwise (same shape
+of algorithm as SSD) so training is linear in T and decode is O(1) per token.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.gemm import EXACT, GemmPolicy, sa_dot
+from repro.configs.base import ModelConfig
+
+
+class MLSTMState(NamedTuple):
+    c: jnp.ndarray    # (B, H, D, D) matrix memory
+    n: jnp.ndarray    # (B, H, D)    normalizer
+    m: jnp.ndarray    # (B, H)       max-gate stabilizer
+
+
+class SLSTMState(NamedTuple):
+    c: jnp.ndarray    # (B, d)
+    n: jnp.ndarray    # (B, d)
+    h: jnp.ndarray    # (B, d)
+    m: jnp.ndarray    # (B, d)
+
+
+def init_mlstm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    h = cfg.n_heads
+    ks = jax.random.split(key, 7)
+    std = d ** -0.5
+    return {
+        "up": (jax.random.normal(ks[0], (d, 2 * di)) * std).astype(dtype),
+        "wq": (jax.random.normal(ks[1], (di, di)) * (di ** -0.5)).astype(dtype),
+        "wk": (jax.random.normal(ks[2], (di, di)) * (di ** -0.5)).astype(dtype),
+        "wv": (jax.random.normal(ks[3], (di, di)) * (di ** -0.5)).astype(dtype),
+        "w_if": (jax.random.normal(ks[4], (di, 2 * h)) * (di ** -0.5)).astype(jnp.float32),
+        "norm_w": jnp.zeros((di,), dtype),
+        "down": (jax.random.normal(ks[5], (di, d)) * (di ** -0.5)).astype(dtype),
+    }
+
+
+def _mlstm_chunked(q, k, v, log_i, log_f, state: Optional[MLSTMState], chunk: int):
+    """q/k/v: (B,T,H,D); log_i/log_f: (B,T,H). Stabilized chunked computation."""
+    bsz, t, h, d = q.shape
+    nc = -(-t // chunk)
+    pad = nc * chunk - t
+    if pad:
+        q, k, v = (jnp.pad(z, ((0, 0), (0, pad), (0, 0), (0, 0))) for z in (q, k, v))
+        log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)), constant_values=-1e9)
+        log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+
+    def rc(z):
+        return z.reshape(bsz, nc, chunk, *z.shape[2:]).swapaxes(0, 1)
+
+    qc, kc, vc, lic, lfc = map(rc, (q, k, v, log_i, log_f))
+    if state is None:
+        c0 = jnp.zeros((bsz, h, d, d), jnp.float32)
+        n0 = jnp.zeros((bsz, h, d), jnp.float32)
+        m0 = jnp.zeros((bsz, h), jnp.float32)
+    else:
+        c0, n0, m0 = state
+
+    def body(carry, inp):
+        c, n, m = carry
+        qk_, kk_, vk_, li, lf = inp
+        cumf = jnp.cumsum(lf, axis=1)                        # (B,C,H) inclusive
+        # log weight of source j for target i (i >= j): cumf_i - cumf_j + li_j
+        lw = cumf[:, :, None, :] - cumf[:, None, :, :] + li[:, None, :, :]
+        mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+        lw = jnp.where(mask[None, :, :, None], lw, -jnp.inf)
+        # log weight of incoming state for target i: cumf_i + m
+        lw_state = cumf + m[:, None, :]                      # (B,C,H)
+        m_new = jnp.maximum(lw.max(axis=2), lw_state)        # (B,C,H)
+        w = jnp.exp(lw - m_new[:, :, None, :])               # (B,C,C,H)
+        ws = jnp.exp(lw_state - m_new)                       # (B,C,H)
+        g = jnp.einsum("bihd,bjhd->bijh", qk_, kk_)          # q_i . k_j
+        y_intra = jnp.einsum("bijh,bijh,bjhd->bihd", g, w, vk_)
+        # C[d, e] = sum_j v_d k_e: contract q with the k-dim (e) -> y_d
+        y_inter = jnp.einsum("bihe,bhde,bih->bihd", qk_, c, ws)
+        denom_intra = jnp.einsum("bijh,bijh->bih", g, w)
+        denom_inter = jnp.einsum("bihd,bhd,bih->bih", qk_, n, ws)
+        denom = jnp.abs(denom_intra + denom_inter)
+        y = (y_intra + y_inter) / jnp.maximum(denom, jnp.exp(-m_new))[..., None]
+        # carry update (stabilized at the chunk's final max)
+        m_fin = m_new[:, -1]                                 # (B,H)
+        decay_tail = jnp.exp(cumf[:, -1:, :] - cumf + li - m_fin[:, None])
+        c_new = (jnp.exp(cumf[:, -1] + m - m_fin)[:, :, None, None] * c
+                 + jnp.einsum("bjh,bjhd,bjhe->bhde", decay_tail, vk_, kk_))
+        n_new = (jnp.exp(cumf[:, -1] + m - m_fin)[:, :, None] * n
+                 + jnp.einsum("bjh,bjhd->bhd", decay_tail, kk_))
+        return (c_new, n_new, m_fin), y
+
+    (c_f, n_f, m_f), yc = jax.lax.scan(body, (c0, n0, m0), (qc, kc, vc, lic, lfc))
+    y = yc.swapaxes(0, 1).reshape(bsz, nc * chunk, h, d)[:, :t]
+    return y, MLSTMState(c_f, n_f, m_f)
+
+
+def mlstm_block(p, x, cfg: ModelConfig, *, state: Optional[MLSTMState] = None,
+                chunk: int = 256, policy: GemmPolicy = EXACT, layer: str = ""):
+    bsz, t, d = x.shape
+    di = cfg.ssm_expand * d
+    h = cfg.n_heads
+    hd = di // h
+    up = sa_dot(x, p["up"], policy, layer=layer + "/up")
+    xi, z = jnp.split(up, 2, axis=-1)
+    q = sa_dot(xi, p["wq"], policy, layer=layer + "/wq").reshape(bsz, t, h, hd)
+    k = sa_dot(xi, p["wk"], policy, layer=layer + "/wk").reshape(bsz, t, h, hd) * hd ** -0.5
+    v = sa_dot(xi, p["wv"], policy, layer=layer + "/wv").reshape(bsz, t, h, hd)
+    gates = xi.astype(jnp.float32) @ p["w_if"]                       # (B,T,2H)
+    log_i, f_raw = jnp.split(gates, 2, axis=-1)
+    log_f = -jax.nn.softplus(-f_raw)                                 # log sigmoid
+    y, new_state = _mlstm_chunked(q.astype(jnp.float32), k.astype(jnp.float32),
+                                  v.astype(jnp.float32), log_i, log_f, state,
+                                  min(chunk, t))
+    y = y.reshape(bsz, t, di).astype(x.dtype)
+    from .layers import rms_norm
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    return sa_dot(y, p["down"], policy, layer=layer + "/down"), new_state
+
+
+def init_slstm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 3)
+    std = d ** -0.5
+    return {
+        "w_in": (jax.random.normal(ks[0], (d, 4 * d)) * std).astype(dtype),
+        "r_in": (jax.random.normal(ks[1], (d, 4 * d)) * std * 0.1).astype(dtype),
+        "out": (jax.random.normal(ks[2], (d, d)) * std).astype(dtype),
+    }
+
+
+def slstm_block(p, x, cfg: ModelConfig, *, state: Optional[SLSTMState] = None,
+                policy: GemmPolicy = EXACT, layer: str = ""):
+    """Sequential sLSTM (exponential gating, recurrent weights R)."""
+    bsz, t, d = x.shape
+    wx = sa_dot(x, p["w_in"], policy, layer=layer + "/w_in")   # (B,T,4d)
+    if state is None:
+        state = SLSTMState(*(jnp.zeros((bsz, d), jnp.float32) for _ in range(4)))
+
+    r_in = p["r_in"]
+
+    def step(carry, wx_t):
+        c, n, h, m = carry
+        pre = wx_t.astype(jnp.float32) + h @ r_in.astype(jnp.float32)
+        zi, ii, fi, oi = jnp.split(pre, 4, axis=-1)
+        zt = jnp.tanh(zi)
+        ot = jax.nn.sigmoid(oi)
+        log_f = -jax.nn.softplus(-fi)
+        m_new = jnp.maximum(log_f + m, ii)
+        i_g = jnp.exp(ii - m_new)
+        f_g = jnp.exp(log_f + m - m_new)
+        c_new = f_g * c + i_g * zt
+        n_new = f_g * n + i_g
+        h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+        return SLSTMState(c_new, n_new, h_new, m_new), h_new
+
+    new_state, hs = jax.lax.scan(step, state, wx.swapaxes(0, 1))
+    y = hs.swapaxes(0, 1).astype(x.dtype)                      # (B,T,d)
+    return sa_dot(y, p["out"], policy, layer=layer + "/out"), new_state

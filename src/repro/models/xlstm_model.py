@@ -1,0 +1,164 @@
+"""xLSTM LM: repeats of (slstm_every-1 mLSTM blocks + 1 sLSTM block).
+
+Outer scan over repeats, inner scan over the stacked mLSTM blocks of each repeat
+-> O(1) HLO in depth. Decode carries mLSTM matrix memories and sLSTM scalar
+states.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.gemm import EXACT, GemmPolicy
+from . import layers as L
+from . import xlstm as X
+
+
+def _structure(cfg: ModelConfig):
+    per = cfg.slstm_every                    # repeat length (m-1 mLSTM + 1 sLSTM)
+    assert per >= 2 and cfg.n_layers % per == 0, (cfg.n_layers, per)
+    return cfg.n_layers // per, per - 1
+
+
+def init_params(cfg: ModelConfig, key):
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    n_rep, n_m = _structure(cfg)
+    ke, km, ks, kh = jax.random.split(key, 4)
+
+    def init_m(k):
+        return {"ln": jnp.zeros((cfg.d_model,), dt),
+                "mlstm": X.init_mlstm(k, cfg, dt)}
+
+    def init_s(k):
+        return {"ln": jnp.zeros((cfg.d_model,), dt),
+                "slstm": X.init_slstm(k, cfg, dt)}
+
+    mkeys = jax.random.split(km, n_rep * n_m).reshape(n_rep, n_m, 2)
+    skeys = jax.random.split(ks, n_rep)
+    return {
+        "embed": (jax.random.normal(ke, (cfg.vocab_size, cfg.d_model)) *
+                  cfg.d_model ** -0.5).astype(dt),
+        "mlstm_blocks": jax.vmap(jax.vmap(init_m))(mkeys),        # (R, M, ...)
+        "slstm_blocks": jax.vmap(init_s)(skeys),                   # (R, ...)
+        "final_norm": jnp.zeros((cfg.d_model,), dt),
+        "lm_head": (jax.random.normal(kh, (cfg.d_model, cfg.vocab_size)) *
+                    cfg.d_model ** -0.5).astype(dt),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    n_rep, n_m = _structure(cfg)
+    di = cfg.ssm_expand * cfg.d_model
+    h = cfg.n_heads
+    hd = di // h
+    d = cfg.d_model
+    return {
+        "m_c": jnp.zeros((n_rep, n_m, batch, h, hd, hd), jnp.float32),
+        "m_n": jnp.zeros((n_rep, n_m, batch, h, hd), jnp.float32),
+        "m_m": jnp.zeros((n_rep, n_m, batch, h), jnp.float32),
+        "s_c": jnp.zeros((n_rep, batch, d), jnp.float32),
+        "s_n": jnp.zeros((n_rep, batch, d), jnp.float32),
+        "s_h": jnp.zeros((n_rep, batch, d), jnp.float32),
+        "s_m": jnp.zeros((n_rep, batch, d), jnp.float32),
+    }
+
+
+def forward(params, cfg: ModelConfig, *, tokens, cache: Optional[Dict] = None,
+            policy: GemmPolicy = EXACT, chunk: int = 256, batch_axes=()):
+    n_rep, n_m = _structure(cfg)
+    x = params["embed"][tokens] * jnp.asarray(cfg.d_model ** 0.5,
+                                              params["embed"].dtype)
+    x = L.constrain_batch(x, batch_axes)
+    use_cache = cache is not None
+    new_cache = dict(cache) if use_cache else None
+
+    def m_scan(rep_params, x, states):
+        def body(x, xs):
+            lp, st = xs
+
+            def layer(lp_, x_):
+                h = L.rms_norm(x_, lp_["ln"], cfg.norm_eps)
+                out, ns = X.mlstm_block(
+                    lp_["mlstm"], h, cfg,
+                    state=X.MLSTMState(*st) if use_cache else None,
+                    chunk=chunk, policy=policy)
+                return x_ + out, (ns.c, ns.n, ns.m)
+
+            if not use_cache:   # training: checkpoint (chunk quadratics)
+                layer = jax.checkpoint(layer)
+            return layer(lp, x)
+        if use_cache:
+            xs = (rep_params, states)
+        else:
+            b = x.shape[0]
+            di = cfg.ssm_expand * cfg.d_model
+            hh, hd = cfg.n_heads, di // cfg.n_heads
+            xs = (rep_params, (jnp.zeros((n_m, b, hh, hd, hd), jnp.float32),
+                               jnp.zeros((n_m, b, hh, hd), jnp.float32),
+                               jnp.zeros((n_m, b, hh), jnp.float32)))
+        return jax.lax.scan(body, x, xs)
+
+    def s_apply(sp, x, state):
+        h = L.rms_norm(x, sp["ln"], cfg.norm_eps)
+        out, ns = X.slstm_block(sp["slstm"], h, cfg, state=state, policy=policy)
+        return x + out, ns
+
+    def rep_body(x, xs):
+        rep_m, rep_s, m_st, s_st = xs
+        x, new_m = m_scan(rep_m, x, m_st)
+        x, new_s = s_apply(rep_s, x,
+                           X.SLSTMState(*s_st) if use_cache else None)
+        return x, (new_m, (new_s.c, new_s.n, new_s.h, new_s.m))
+
+    if use_cache:
+        m_states = (cache["m_c"], cache["m_n"], cache["m_m"])
+        s_states = (cache["s_c"], cache["s_n"], cache["s_h"], cache["s_m"])
+    else:
+        b = x.shape[0]
+        di = cfg.ssm_expand * cfg.d_model
+        hh, hd = cfg.n_heads, di // cfg.n_heads
+        d = cfg.d_model
+        m_states = (jnp.zeros((n_rep, n_m, b, hh, hd, hd), jnp.float32),
+                    jnp.zeros((n_rep, n_m, b, hh, hd), jnp.float32),
+                    jnp.zeros((n_rep, n_m, b, hh), jnp.float32))
+        s_states = tuple(jnp.zeros((n_rep, b, d), jnp.float32) for _ in range(4))
+
+    x, (m_out, s_out) = jax.lax.scan(
+        rep_body, x, (params["mlstm_blocks"], params["slstm_blocks"],
+                      m_states, s_states))
+    if use_cache:
+        new_cache = {"m_c": m_out[0], "m_n": m_out[1], "m_m": m_out[2],
+                     "s_c": s_out[0], "s_n": s_out[1], "s_h": s_out[2],
+                     "s_m": s_out[3]}
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, new_cache
+
+
+def lm_loss(params, cfg: ModelConfig, tokens, *, policy: GemmPolicy = EXACT,
+            batch_axes=(), **_):
+    inp, tgt = tokens[:, :-1], tokens[:, 1:]
+    hidden, _ = forward(params, cfg, tokens=inp, policy=policy,
+                        batch_axes=batch_axes)
+    logits = jnp.matmul(hidden, params["lm_head"].astype(hidden.dtype))
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
+    return (lse - ll).mean()
+
+
+def prefill(params, cfg, tokens, cache, *, policy=EXACT, batch_axes=(), **_):
+    hidden, cache = forward(params, cfg, tokens=tokens, cache=cache,
+                            policy=policy, batch_axes=batch_axes)
+    logits = jnp.matmul(hidden[:, -1:], params["lm_head"].astype(hidden.dtype))
+    return logits.astype(jnp.float32), cache
+
+
+def decode_step(params, cfg, token, cache, pos, *, policy=EXACT,
+                batch_axes=(), **_):
+    hidden, cache = forward(params, cfg, tokens=token, cache=cache,
+                            policy=policy, batch_axes=batch_axes)
+    logits = jnp.matmul(hidden, params["lm_head"].astype(hidden.dtype))
+    return logits.astype(jnp.float32), cache

@@ -1,0 +1,60 @@
+"""Int8 error-feedback gradient compression for the cross-pod all-reduce.
+
+The paper's insight — low-order bit columns of a MAC are cheap to approximate in
+error-tolerant workloads — applies directly to gradient communication: gradients
+tolerate low-precision summation with error feedback. Before the (slow, inter-pod)
+all-reduce we quantize each gradient tensor to int8 with a per-tensor scale and
+carry the quantization residual into the next step (error feedback), making the
+compression unbiased over time. 4x traffic reduction on the pod hop.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+def init_error_state(params: PyTree) -> PyTree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(grads: PyTree, err: PyTree) -> Tuple[PyTree, PyTree, PyTree]:
+    """Returns (int8_payload, scales, new_error). Decompress with payload*scale."""
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        amax = jnp.max(jnp.abs(g))
+        scale = jnp.maximum(amax, 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+        new_e = g - q.astype(jnp.float32) * scale
+        return q, scale, new_e
+
+    out = jax.tree.map(one, grads, err)
+    is3 = lambda t: isinstance(t, tuple) and len(t) == 3
+    return (jax.tree.map(lambda t: t[0], out, is_leaf=is3),
+            jax.tree.map(lambda t: t[1], out, is_leaf=is3),
+            jax.tree.map(lambda t: t[2], out, is_leaf=is3))
+
+
+def decompress(payload: PyTree, scales: PyTree) -> PyTree:
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s, payload, scales)
+
+
+def compressed_psum(grads: PyTree, err: PyTree, axis_name: str):
+    """Quantize -> psum(int32) -> dequantize with max-scale, inside shard_map/pmap.
+    (Scales are psum-maxed so the integer sum cannot overflow int32.)"""
+    def one(g, e):
+        g = g.astype(jnp.float32) + e
+        amax = jax.lax.pmax(jnp.max(jnp.abs(g)), axis_name)
+        scale = jnp.maximum(amax, 1e-12) / 127.0
+        q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int32)
+        new_e = g - q.astype(jnp.float32) * scale
+        summed = jax.lax.psum(q, axis_name).astype(jnp.float32) * scale
+        return summed, new_e
+
+    out = jax.tree.map(one, grads, err)
+    is2 = lambda t: isinstance(t, tuple) and len(t) == 2
+    return (jax.tree.map(lambda t: t[0], out, is_leaf=is2),
+            jax.tree.map(lambda t: t[1], out, is_leaf=is2))

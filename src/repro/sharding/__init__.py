@@ -1,0 +1,2 @@
+from .specs import (batch_axes, cache_shardings, explain, input_shardings,  # noqa: F401
+                    param_shardings, param_spec)

@@ -1,0 +1,179 @@
+"""DP/TP/EP/SP sharding rules.
+
+Scheme (single-pod mesh ("data", "model"); multi-pod prepends "pod"):
+
+* params — TP over `model` on every linear's output-feature dim (attention heads,
+  d_ff, vocab, MoE expert dim = EP) and FSDP over `data` on the d_model dim
+  (ZeRO-3: params/grads/optimizer state all sharded; XLA all-gathers per layer
+  inside the scan). The `pod` axis replicates params (gradient all-reduce crosses
+  the inter-pod link once per step — the hop gradient compression targets).
+* activations — batch over ("pod", "data").
+* KV caches — batch over ("pod", "data"); kv-head dim over `model` when
+  divisible, else the sequence dim (SP) so 500k caches and small-kv-head archs
+  still shard.
+
+A dim is sharded only if divisible by the axis size; otherwise left replicated
+(recorded by `explain()` for the dry-run report).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# param-name -> (tp_dim, fsdp_dim); dims count from the *unstacked* param's end
+_RULES = {
+    "embed": (0, 1), "lm_head": (1, 0), "patch_proj": (1, 0),
+    "wq": (1, 0), "wk": (1, 0), "wv": (1, 0), "wo": (0, 1),
+    "bq": (0, None), "bk": (0, None), "bv": (0, None),
+    "w1": (1, 0), "w3": (1, 0), "w2": (0, 1),
+    "router": (1, 0),
+    "in_proj": (1, 0), "out_proj": (0, 1), "conv_w": (1, None),
+    "up": (1, 0), "down": (0, 1), "w_in": (1, 0), "r_in": (1, 0),
+    "w_if": (None, 0), "out": (1, 0),
+}
+# MoE expert tensors: leading expert dim -> EP over model
+_MOE_NAMES = {"w1", "w3", "w2"}
+
+
+def _axis_size(mesh: Mesh, axis: str) -> int:
+    return mesh.shape[axis]
+
+
+def _maybe(dim_size: int, mesh: Mesh, axis: Optional[str]):
+    if axis is None:
+        return None
+    return axis if dim_size % _axis_size(mesh, axis) == 0 else None
+
+
+def param_spec(path: str, shape, mesh: Mesh) -> P:
+    """PartitionSpec for one parameter. `path` is '/'-joined tree path; leading
+    stacked layer/group dims (from scan-stacking) are detected as extra dims."""
+    name = path.split("/")[-1]
+    parts = path.split("/")
+    ndim = len(shape)
+    spec = [None] * ndim
+    if name not in _RULES:
+        return P(*spec)
+    tp_dim, fsdp_dim = _RULES[name]
+    is_expert = ("moe" in parts and name in _MOE_NAMES and ndim >= 3)
+    # number of the param's own (unstacked) dims
+    own = 3 if is_expert else {"bq": 1, "bk": 1, "bv": 1}.get(name, 2)
+    lead = ndim - own                      # stacked scan dims
+    if is_expert:
+        # (..., E, d, ff) style: EP on expert dim; fsdp/tp inside
+        e_dim = lead
+        spec[e_dim] = _maybe(shape[e_dim], mesh, "model")
+        # remaining dims replicated except fsdp on the larger of the two
+        d_dim = lead + 1
+        spec[d_dim] = _maybe(shape[d_dim], mesh, "data")
+        return P(*spec)
+    if tp_dim is not None and tp_dim < own:
+        dim = lead + tp_dim
+        spec[dim] = _maybe(shape[dim], mesh, "model")
+    if fsdp_dim is not None and fsdp_dim < own:
+        dim = lead + fsdp_dim
+        if spec[dim] is None:
+            spec[dim] = _maybe(shape[dim], mesh, "data")
+    return P(*spec)
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return "/".join(out)
+
+
+def param_shardings(params_shape: PyTree, mesh: Mesh) -> PyTree:
+    """NamedSharding tree matching a params (shape) tree."""
+    def one(path, leaf):
+        return NamedSharding(mesh, param_spec(_path_str(path), leaf.shape, mesh))
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def batch_axes(mesh: Mesh):
+    return tuple(a for a in ("pod", "data") if a in mesh.shape)
+
+
+def input_shardings(specs: PyTree, mesh: Mesh) -> PyTree:
+    """Shard every step input on its leading (batch) dim over pod+data."""
+    baxes = batch_axes(mesh)
+    bsize = 1
+    for a in baxes:
+        bsize *= mesh.shape[a]
+
+    def one(leaf):
+        if leaf.ndim >= 1 and leaf.shape[0] % bsize == 0 and leaf.shape[0] > 1:
+            return NamedSharding(mesh, P(baxes))
+        return NamedSharding(mesh, P())
+    return jax.tree.map(one, specs)
+
+
+def cache_shardings(cache_shapes: PyTree, mesh: Mesh, *, batch: int) -> PyTree:
+    """KV/SSM cache shardings: batch over pod+data; kv-heads over model when
+    divisible, else sequence (SP)."""
+    baxes = batch_axes(mesh)
+    bsize = 1
+    for a in baxes:
+        bsize *= mesh.shape[a]
+    msize = mesh.shape["model"]
+
+    def one(path, leaf):
+        name = _path_str(path)
+        shape = leaf.shape
+        spec = [None] * len(shape)
+        leaf_name = name.split("/")[-1]
+        if leaf_name.startswith("kpos"):
+            return NamedSharding(mesh, P())          # tiny slot-position arrays
+        if leaf_name in ("k", "v", "k_loc", "v_loc", "k_glob", "v_glob"):
+            b_dim = len(shape) - 4                   # (..., B, S, KH, hd)
+        else:
+            # SSM/mLSTM states: first dim equal to `batch` after stack dims
+            b_dim = None
+            for i, d in enumerate(shape):
+                if d == batch:
+                    b_dim = i
+                    break
+        if b_dim is not None and batch % bsize == 0 and batch > 1:
+            spec[b_dim] = baxes
+        if leaf_name in ("k", "v", "k_loc", "v_loc", "k_glob", "v_glob"):
+            # (..., B, S, KH, hd)
+            kh_dim, s_dim = len(shape) - 2, len(shape) - 3
+            if shape[kh_dim] % msize == 0:
+                spec[kh_dim] = "model"
+            elif shape[s_dim] % msize == 0:
+                spec[s_dim] = "model"
+            if spec[b_dim] is None and b_dim is not None:
+                # batch unshardable (long-context b=1): SP the sequence over data
+                rem = [a for a in baxes]
+                if spec[s_dim] == "model" and shape[s_dim] % (msize * bsize) == 0:
+                    spec[s_dim] = tuple(rem) + ("model",)
+                elif spec[s_dim] is None and shape[s_dim] % bsize == 0:
+                    spec[s_dim] = tuple(rem)
+        else:
+            # SSM/mLSTM states: shard head dim over model if divisible
+            for i in range(len(shape) - 1, max(-1, (b_dim or 0)), -1):
+                if i != b_dim and shape[i] % msize == 0 and shape[i] >= msize:
+                    spec[i] = "model"
+                    break
+        return NamedSharding(mesh, P(*spec))
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def explain(params_shape: PyTree, mesh: Mesh):
+    """(path, shape, spec) rows for the dry-run report."""
+    rows = []
+
+    def one(path, leaf):
+        rows.append((_path_str(path), tuple(leaf.shape),
+                     str(param_spec(_path_str(path), leaf.shape, mesh))))
+        return leaf
+    jax.tree_util.tree_map_with_path(one, params_shape)
+    return rows

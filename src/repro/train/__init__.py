@@ -1,0 +1,1 @@
+from . import fault, loop  # noqa: F401

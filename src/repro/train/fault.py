@@ -1,0 +1,61 @@
+"""Fault tolerance: checkpoint/restart, straggler watchdog, bounded retry.
+
+On a real multi-pod deployment, failures arrive as (a) hard process death —
+handled by checkpoint/restart via the launcher re-exec'ing `train.py`, which
+resumes from the latest manifest; (b) transient step failures (preemption
+notices, flaky interconnect) — handled by bounded re-execution of the step; and
+(c) stragglers — detected by a per-step wall-time EWMA; the watchdog flags hosts
+whose step times exceed `threshold` x the fleet median so the launcher can
+exclude them at the next elastic restart (the data pipeline and checkpoints are
+both host-count agnostic, so N-1 hosts resume cleanly).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, List, Optional
+
+
+@dataclasses.dataclass
+class StragglerWatchdog:
+    alpha: float = 0.1              # EWMA coefficient
+    threshold: float = 2.0          # flag if step > threshold * ewma
+    warmup_steps: int = 5
+    ewma: Optional[float] = None
+    steps: int = 0
+    flagged: List[int] = dataclasses.field(default_factory=list)
+
+    def observe(self, step: int, seconds: float) -> bool:
+        """Record one step; returns True if this step is a straggler event."""
+        self.steps += 1
+        if self.ewma is None:
+            self.ewma = seconds
+            return False
+        slow = (self.steps > self.warmup_steps
+                and seconds > self.threshold * self.ewma)
+        if slow:
+            self.flagged.append(step)
+        # don't let outliers poison the baseline
+        upd = min(seconds, 4 * self.ewma)
+        self.ewma = (1 - self.alpha) * self.ewma + self.alpha * upd
+        return slow
+
+
+class TransientError(RuntimeError):
+    """Raised by step wrappers for retryable failures."""
+
+
+def run_with_retries(fn: Callable, *args, max_retries: int = 3,
+                     backoff_s: float = 1.0, on_retry: Optional[Callable] = None):
+    """Bounded re-execution for transient step failures."""
+    attempt = 0
+    while True:
+        try:
+            return fn(*args)
+        except TransientError:
+            attempt += 1
+            if attempt > max_retries:
+                raise
+            if on_retry:
+                on_retry(attempt)
+            time.sleep(backoff_s * attempt)

@@ -1,0 +1,74 @@
+"""Training loop: data -> step -> metrics -> periodic async checkpoint, with
+resume-from-latest, straggler watchdog, and bounded transient retry."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.optim import adamw
+from . import fault
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    steps: int = 100
+    log_every: int = 10
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    resume: bool = True
+
+
+def train(cfg: ModelConfig, shape: ShapeSpec, step_fn: Callable,
+          init_params_fn: Callable, lc: LoopConfig, *, n_micro: int = 1,
+          data=None, shardings=None,
+          log: Callable[[str], None] = print) -> Dict[str, float]:
+    """Run the loop. `step_fn(params, opt, batch) -> (params, opt, metrics)`
+    must already be jit'd (with shardings for the production mesh)."""
+    data = data or SyntheticLM(cfg, shape, DataConfig(n_micro=n_micro))
+    start_step = 0
+    params = None
+    opt = None
+    if lc.resume and lc.ckpt_dir and ckpt.latest_step(lc.ckpt_dir) is not None:
+        start_step = ckpt.latest_step(lc.ckpt_dir)
+        shapes = jax.eval_shape(init_params_fn, jax.random.PRNGKey(0))
+        params = ckpt.restore(lc.ckpt_dir, {"params": shapes},
+                              shardings=None)["params"]
+        params = jax.tree.map(jax.numpy.asarray, params)  # host -> device
+        log(f"resumed params from step {start_step}")
+    if params is None:
+        params = init_params_fn(jax.random.PRNGKey(0))
+    if opt is None:
+        opt = adamw.init(params)
+
+    saver = ckpt.AsyncCheckpointer(lc.ckpt_dir) if lc.ckpt_dir else None
+    watchdog = fault.StragglerWatchdog()
+    losses = []
+    for step in range(start_step, lc.steps):
+        batch = data.batch(step)
+        t0 = time.time()
+        params, opt, metrics = fault.run_with_retries(step_fn, params, opt,
+                                                      batch)
+        loss = float(metrics["loss"])
+        dt = time.time() - t0
+        if watchdog.observe(step, dt):
+            log(f"[watchdog] step {step} straggled: {dt:.2f}s "
+                f"(ewma {watchdog.ewma:.2f}s)")
+        losses.append(loss)
+        if step % lc.log_every == 0:
+            log(f"step {step}: loss {loss:.4f}  ({dt:.2f}s/step)")
+        if saver and step > start_step and step % lc.ckpt_every == 0:
+            saver.save_async(step, {"params": params})
+    if saver:
+        saver.save_async(lc.steps, {"params": params})
+        saver.wait()
+    return {"first_loss": losses[0] if losses else float("nan"),
+            "last_loss": losses[-1] if losses else float("nan"),
+            "steps": len(losses),
+            "straggler_events": len(watchdog.flagged)}

@@ -1,0 +1,40 @@
+"""Application-level reproduction tests (Table VI trends)."""
+import numpy as np
+import pytest
+
+from repro.apps import bdcn, dct, edge, images
+
+
+def test_image_blocks_roundtrip():
+    img = images.test_image(64)
+    blocks = images.to_blocks(img)
+    back = images.from_blocks(blocks, 64, 64)
+    np.testing.assert_array_equal(img, back)
+
+
+def test_dct_quality_decreases_with_k():
+    res = dct.run(size=64, ks=(0, 2, 6))
+    assert res[2]["psnr"] > res[6]["psnr"]
+    assert res[2]["psnr"] > 35.0          # paper: 45.97 dB at k=2
+    assert res[2]["ssim"] > 0.95
+
+
+def test_edge_detection_trend():
+    res = edge.run(size=64, ks=(2, 6))
+    assert res[2]["psnr"] > res[6]["psnr"]
+    assert res[2]["ssim"] > 0.8           # paper: 0.910 at k=2
+
+
+def test_bdcn_beats_kernel_based():
+    """The paper's key claim: CNN-based edge detection tolerates approximation
+    far better than kernel-based."""
+    e = edge.run(size=64, ks=(6,))
+    b = bdcn.run(size=48, ks=(6,))
+    assert b[6]["psnr"] > e[6]["psnr"] + 10.0
+    assert b[6]["ssim"] > e[6]["ssim"]
+
+
+def test_bdcn_hybrid_high_quality_at_k2():
+    res = bdcn.run(size=48, ks=(2,))
+    assert res[2]["psnr"] > 40.0          # paper: 75.98 dB
+    assert res[2]["ssim"] > 0.99

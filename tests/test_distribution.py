@@ -1,0 +1,127 @@
+"""Distribution-layer tests on small CPU meshes: sharding specs, roofline
+parsing, analytic model invariants, end-to-end jit'd train step on a debug mesh."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import ARCHS
+from repro.launch import analytic, roofline
+from repro.launch.analytic import PerfKnobs
+from repro.launch.mesh import make_debug_mesh
+from repro.launch.steps import TrainHParams, assemble_train
+from repro.sharding import specs as sh
+
+
+def test_param_specs_divisibility_rules():
+    mesh = make_debug_mesh(1, 1)
+    # use a fake 16x16 mesh object for spec logic (shape only)
+    from repro.configs import ARCHS
+    cfg = ARCHS["qwen2.5-14b"]
+
+    class FakeMesh:
+        shape = {"data": 16, "model": 16}
+    fm = FakeMesh()
+    # embed (V, d): vocab 152064 % 16 == 0 -> model; d 5120 % 16 == 0 -> data
+    assert sh.param_spec("embed", (152064, 5120), fm) == P("model", "data")
+    # hubert vocab 504 not divisible -> replicated on that dim
+    assert sh.param_spec("embed", (504, 1280), fm) == P(None, "data")
+    # stacked attention weight (L, d, H*hd)
+    assert sh.param_spec("layers/attn/wq", (48, 5120, 5120), fm) == \
+        P(None, "data", "model")
+    # MoE expert tensor (L, E, d, ff) -> EP on expert dim
+    assert sh.param_spec("layers/moe/w1", (48, 64, 2048, 1408), fm) == \
+        P(None, "model", "data", None)
+    # norms replicated
+    assert sh.param_spec("layers/ln1", (48, 5120), fm) == P(None, None)
+
+
+def test_collective_parser_on_synthetic_hlo():
+    txt = """
+  %ar = f32[1024,256]{1,0} all-reduce(%x), channel_id=1
+  %ag-start = bf16[512]{0} all-gather-start(%y)
+  %ag-done = bf16[512]{0} all-gather-done(%ag-start)
+  %a2a = (s32[16,4]{1,0}, s32[16,4]{1,0}) all-to-all(%p, %q)
+  %cp = bf16[64,64]{1,0} collective-permute(%z)
+"""
+    out = roofline.collective_bytes(txt)
+    assert out["all-reduce"] == 1024 * 256 * 4
+    assert out["all-gather"] == 512 * 2
+    assert out["all-to-all"] == 16 * 4 * 4 * 2
+    assert out["collective-permute"] == 64 * 64 * 2
+    assert out["count"] == 4
+
+
+@pytest.mark.parametrize("arch", ["qwen2.5-14b", "qwen3-moe-30b-a3b",
+                                  "zamba2-1.2b", "xlstm-350m", "gemma3-12b"])
+def test_analytic_terms_positive_and_consistent(arch):
+    cfg = ARCHS[arch]
+    for shape in cfg.shapes:
+        if shape.skip:
+            continue
+        t = analytic.analytic_terms(cfg, shape, 256, PerfKnobs(n_micro=4))
+        assert t["t_compute_s"] > 0
+        assert t["t_memory_s"] > 0
+        assert 0 < t["useful_flops_frac"] <= 1.0, (arch, shape.name, t)
+        assert 0 < t["roofline_frac"] <= 1.0
+
+
+def test_analytic_knob_directions():
+    """Napkin-math sanity: more microbatches -> more FSDP traffic; grad
+    compression shrinks the pod hop; less TP -> fewer activation reduces."""
+    cfg = ARCHS["qwen2.5-14b"]
+    shape = cfg.shape("train_4k")
+    base = analytic.collective_bytes_per_device(cfg, shape, 256,
+                                                PerfKnobs(n_micro=4))
+    more_micro = analytic.collective_bytes_per_device(cfg, shape, 256,
+                                                      PerfKnobs(n_micro=16))
+    assert more_micro > base
+    tp1 = analytic.collective_bytes_per_device(cfg, shape, 256,
+                                               PerfKnobs(tp=1, n_micro=4))
+    assert tp1 < base
+    comp = analytic.collective_bytes_per_device(
+        cfg, shape, 512, PerfKnobs(n_micro=4, compress_grads=True), pods=2)
+    nocomp = analytic.collective_bytes_per_device(
+        cfg, shape, 512, PerfKnobs(n_micro=4), pods=2)
+    assert comp < nocomp
+
+
+def test_gemma3_window_cuts_attention_span():
+    g3 = ARCHS["gemma3-12b"]
+    full = dataclasses.replace(g3, window_size=0, global_every=0)
+    s = 32768
+    span_win = analytic._mean_attn_span(g3, s)
+    span_full = analytic._mean_attn_span(full, s)
+    # 5/6 of layers see a 1024 window instead of s/2
+    assert span_win < span_full * 0.25
+    f_win = analytic.flops_per_device(g3, g3.shape("prefill_32k"), 256,
+                                      PerfKnobs())
+    f_full = analytic.flops_per_device(full, full.shape("prefill_32k"), 256,
+                                       PerfKnobs())
+    assert f_win < f_full  # attention is a minor FLOP share at 12B params
+
+
+def test_jitted_train_step_on_debug_mesh():
+    """End-to-end: assemble + jit + run one real step on a 1x1 mesh."""
+    from repro.configs import reduced
+    from repro.models import get_model
+    from repro.optim import adamw
+    from repro.data.pipeline import DataConfig, SyntheticLM
+    from repro.configs.base import ShapeSpec
+    cfg = reduced(ARCHS["smollm-360m"])
+    shape = ShapeSpec("t", "train", 32, 4)
+    mesh = make_debug_mesh(1, 1)
+    hp = TrainHParams(n_micro=2, total_steps=10)
+    step, arg_specs, in_sh, out_sh, hp = assemble_train(cfg, shape, mesh, hp)
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    opt = adamw.init(params)
+    data = SyntheticLM(cfg, shape, DataConfig(n_micro=2))
+    with mesh:
+        jitted = jax.jit(step, in_shardings=in_sh, out_shardings=out_sh)
+        p2, o2, metrics = jitted(params, opt, data.batch(0))
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(o2.step) == 1

@@ -1,0 +1,114 @@
+"""Bit-level PE emulation: exactness at k=0, approximation behaviour, oracle GEMM."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import emulate
+from repro.core.emulate import matmul_oracle, nppc_count, pe_mac, ppc_count, product_table
+
+
+def _all_pairs():
+    a = np.repeat(np.arange(-128, 128, dtype=np.int32), 256)
+    b = np.tile(np.arange(-128, 128, dtype=np.int32), 256)
+    return a, b
+
+
+def test_cell_counts_match_paper_quote():
+    # paper quotes 50 PPC + 14 NPPC for the 8-bit signed PE
+    assert ppc_count(8) == 50
+    assert nppc_count(8) == 14
+
+
+def test_exact_signed_all_pairs():
+    a, b = _all_pairs()
+    got = np.asarray(pe_mac(a, b, 0, k=0, signed=True))
+    assert np.array_equal(got, a * b)
+
+
+def test_exact_unsigned_all_pairs():
+    a = np.repeat(np.arange(256, dtype=np.int32), 256)
+    b = np.tile(np.arange(256, dtype=np.int32), 256)
+    got = np.asarray(pe_mac(a, b, 0, k=0, signed=False))
+    assert np.array_equal(got, a * b)
+
+
+def test_exact_fused_accumulate():
+    rng = np.random.default_rng(0)
+    a, b = _all_pairs()
+    c = rng.integers(-(2 ** 20), 2 ** 20, size=a.shape).astype(np.int32)
+    got = np.asarray(pe_mac(a, b, c, k=0, signed=True))
+    assert np.array_equal(got, a * b + c)
+
+
+@pytest.mark.parametrize("n_bits", [4, 8])
+def test_exact_other_widths(n_bits):
+    span = 1 << n_bits
+    half = span >> 1
+    vals = np.arange(span, dtype=np.int32) - half
+    a = np.repeat(vals, span)
+    b = np.tile(vals, span)
+    got = np.asarray(pe_mac(a, b, 0, n_bits=n_bits, k=0, signed=True))
+    assert np.array_equal(got, a * b)
+
+
+def test_approx_error_monotone_in_k():
+    a, b = _all_pairs()
+    exact = a.astype(np.int64) * b
+    meds = []
+    for k in (0, 2, 4, 6, 8):
+        got = np.asarray(pe_mac(a, b, 0, k=k, signed=True), np.int64)
+        meds.append(np.abs(got - exact).mean())
+    assert meds[0] == 0
+    assert all(meds[i] <= meds[i + 1] for i in range(len(meds) - 1)), meds
+
+
+def test_approx_only_touches_low_columns():
+    """For factor k, the deviation must stem from columns < k; carries can ripple up
+    but the per-MAC error is bounded well below 2^{k+ceil(log2 rows)}."""
+    a, b = _all_pairs()
+    exact = a.astype(np.int64) * b
+    for k in (2, 4, 6):
+        got = np.asarray(pe_mac(a, b, 0, k=k, signed=True), np.int64)
+        bound = (1 << k) * 16  # generous carry-ripple envelope
+        assert np.abs(got - exact).max() < bound
+
+
+def test_gemm_oracle_exact():
+    rng = np.random.default_rng(2)
+    a = rng.integers(-128, 128, (24, 40)).astype(np.int32)
+    b = rng.integers(-128, 128, (40, 12)).astype(np.int32)
+    got = np.asarray(matmul_oracle(a, b, k=0))
+    assert np.array_equal(got, a @ b)
+
+
+def test_product_table_matches_pe_mac():
+    t = product_table(8, 5, True, 24)
+    rng = np.random.default_rng(3)
+    a = rng.integers(-128, 128, 500).astype(np.int32)
+    b = rng.integers(-128, 128, 500).astype(np.int32)
+    got = t[a & 255, b & 255]
+    want = np.asarray(pe_mac(a, b, 0, k=5, signed=True))
+    assert np.array_equal(got, want)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(-128, 127), st.integers(-128, 127),
+       st.integers(-(2 ** 22), 2 ** 22), st.integers(0, 8))
+def test_property_exact_dominates_approx_scale(a, b, c, k):
+    """Approx output always within the carry-ripple envelope of exact, any inputs."""
+    got = int(pe_mac(np.int32(a), np.int32(b), np.int32(c), k=k, signed=True))
+    want = a * b + c
+    if k == 0:
+        assert got == want
+    else:
+        assert abs(got - want) < (1 << k) * 16
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 12), st.integers(1, 12), st.integers(1, 12))
+def test_property_oracle_matches_numpy_exact(m, k_dim, n):
+    rng = np.random.default_rng(m * 100 + k_dim * 10 + n)
+    a = rng.integers(-128, 128, (m, k_dim)).astype(np.int32)
+    b = rng.integers(-128, 128, (k_dim, n)).astype(np.int32)
+    got = np.asarray(matmul_oracle(a, b, k=0))
+    assert np.array_equal(got, a @ b)

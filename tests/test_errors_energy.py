@@ -1,0 +1,103 @@
+"""Error-metric (Table V) and energy-model (Tables II-IV) reproduction tests."""
+import numpy as np
+import pytest
+
+from repro.core import energy, errors, systolic
+
+
+# --- Table V: NMED/MRED trend (paper's exact per-k values depend on unpublished
+# netlist details; we assert order-of-magnitude agreement and monotonicity) ----
+
+PAPER_SIGNED_NMED = {2: 0.0001, 4: 0.0004, 5: 0.0006, 6: 0.0022, 8: 0.0081}
+
+
+def test_table5_signed_nmed_order_and_trend():
+    ours = {k: errors.pe_error_metrics(8, k, signed=True)["NMED"]
+            for k in PAPER_SIGNED_NMED}
+    vals = [ours[k] for k in sorted(ours)]
+    assert all(a <= b for a, b in zip(vals, vals[1:])), ours
+    for k, paper in PAPER_SIGNED_NMED.items():
+        assert ours[k] < 20 * paper + 1e-9, (k, ours[k], paper)
+        # non-trivial error present for k >= 4
+        if k >= 4:
+            assert ours[k] > 0
+
+
+def test_unsigned_metrics_finite_and_small():
+    m = errors.pe_error_metrics(8, 6, signed=False)
+    assert 0 < m["NMED"] < 0.05
+    assert 0 < m["MRED"] < 0.2
+
+
+def test_psnr_ssim_identity():
+    img = np.random.default_rng(0).integers(0, 256, (64, 64)).astype(np.float64)
+    assert errors.psnr(img, img) == float("inf")
+    assert errors.ssim(img, img) == pytest.approx(1.0, abs=1e-9)
+
+
+def test_psnr_known_value():
+    ref = np.zeros((16, 16))
+    test = ref + 1.0
+    assert errors.psnr(ref, test) == pytest.approx(10 * np.log10(255 ** 2), rel=1e-6)
+
+
+# --- Energy model: recompute the paper's headline claims --------------------
+
+def test_cell_savings_claims():
+    c = energy.cell_energy_claims()
+    assert c["exact_ppc_vs_ref6"] == pytest.approx(0.064, abs=0.01)
+    assert c["approx_ppc_vs_ref5"] == pytest.approx(0.468, abs=0.01)
+    assert c["approx_nppc_vs_ref5"] == pytest.approx(0.388, abs=0.06)  # abstract: 34.4%
+
+
+def test_pe_savings_claims():
+    p = energy.pe_energy_claims()
+    assert p["exact_pe_vs_ref6"] == pytest.approx(0.2026, abs=0.01)
+    assert p["approx_pe_vs_ref5"] == pytest.approx(0.131, abs=0.02)
+    # abstract's 24.37%/22.51% refer to slightly different baselines; PADP claim:
+    assert p["approx_pe_padp_vs_ref5"] == pytest.approx(0.2253, abs=0.01)  # ~23%
+
+
+def test_sa_savings_claims():
+    s = energy.sa_energy_claims()
+    # abstract: 16% exact / 68% approx savings at the 8x8 SA level
+    assert s["sa8_exact_vs_ref6"] == pytest.approx(0.16, abs=0.02)
+    assert s["sa8_approx_vs_exact_ref6"] == pytest.approx(0.68, abs=0.02)
+    # fig 8(b): 62.7% and 24.2% at 16x16
+    assert s["sa16_approx_vs_exact_ref6"] == pytest.approx(0.627, abs=0.01)
+    assert s["sa16_approx_vs_ref5"] == pytest.approx(0.242, abs=0.01)
+
+
+def test_gemm_energy_estimate_scales():
+    e1 = energy.gemm_energy_estimate(64, 64, 64, sa_dim=8)
+    e2 = energy.gemm_energy_estimate(128, 64, 64, sa_dim=8)
+    assert e2["energy_nJ"] == pytest.approx(2 * e1["energy_nJ"], rel=0.01)
+    ex = energy.gemm_energy_estimate(64, 64, 64, sa_dim=8, design="exact_ref6")
+    ap = energy.gemm_energy_estimate(64, 64, 64, sa_dim=8, design="proposed_approx")
+    assert ap["energy_nJ"] < ex["energy_nJ"]
+
+
+# --- Latency formula 3N-2 [11] ----------------------------------------------
+
+@pytest.mark.parametrize("n", [2, 3, 4, 8])
+def test_latency_formula(n):
+    assert systolic.latency_cycles(n) == 3 * n - 2
+
+
+def test_systolic_simulation_exact():
+    rng = np.random.default_rng(5)
+    a = rng.integers(-128, 128, (4, 4)).astype(np.int64)
+    b = rng.integers(-128, 128, (4, 4)).astype(np.int64)
+    out, cycles = systolic.simulate(a, b)
+    assert np.array_equal(out, a @ b)
+    assert cycles == 3 * 4 - 2
+
+
+def test_systolic_simulation_approx_pe():
+    rng = np.random.default_rng(6)
+    a = rng.integers(-16, 16, (3, 3)).astype(np.int64)
+    b = rng.integers(-16, 16, (3, 3)).astype(np.int64)
+    out, _ = systolic.simulate_approx(a, b, k=0)
+    assert np.array_equal(out, a @ b)
+    out4, _ = systolic.simulate_approx(a, b, k=4)
+    assert np.abs(out4 - a @ b).max() < (1 << 4) * 16

@@ -1,0 +1,54 @@
+"""Pallas flash-attention kernel vs the validated pure-JAX chunked attention."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.models.layers import chunked_attention
+
+
+def _ref(q, k, v, *, causal, window, softcap):
+    # (B,H,S,D) -> layers.chunked_attention layout (B,S,H,D)
+    b, h, s, d = q.shape
+    qpos = np.arange(s)
+    out = chunked_attention(
+        jnp.asarray(q.transpose(0, 2, 1, 3)), jnp.asarray(k.transpose(0, 2, 1, 3)),
+        jnp.asarray(v.transpose(0, 2, 1, 3)), jnp.asarray(qpos), k.shape[2],
+        causal=causal, window=window, softcap=softcap, chunk=16, q_chunk=16)
+    return np.asarray(out).transpose(0, 2, 1, 3)
+
+
+@pytest.mark.parametrize("s,bq,bk,causal,window,softcap", [
+    (32, 8, 8, True, 0, 0.0),
+    (32, 16, 8, True, 0, 0.0),
+    (64, 16, 16, True, 12, 0.0),     # sliding window
+    (32, 8, 8, True, 0, 30.0),       # softcap
+    (32, 8, 16, False, 0, 0.0),      # bidirectional
+])
+def test_flash_matches_reference(s, bq, bk, causal, window, softcap):
+    rng = np.random.default_rng(s + bq)
+    b, h, d = 2, 3, 16
+    q = rng.normal(size=(b, h, s, d)).astype(np.float32)
+    k = rng.normal(size=(b, h, s, d)).astype(np.float32)
+    v = rng.normal(size=(b, h, s, d)).astype(np.float32)
+    got = np.asarray(flash_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), causal=causal,
+        window=window, softcap=softcap, bq=bq, bk=bk, interpret=True))
+    want = _ref(q, k, v, causal=causal, window=window, softcap=softcap)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_causal_skips_are_exact():
+    """The causal early-exit over K blocks must not change results."""
+    rng = np.random.default_rng(9)
+    b, h, s, d = 1, 2, 64, 8
+    q = rng.normal(size=(b, h, s, d)).astype(np.float32)
+    k = rng.normal(size=(b, h, s, d)).astype(np.float32)
+    v = rng.normal(size=(b, h, s, d)).astype(np.float32)
+    a = np.asarray(flash_attention(jnp.asarray(q), jnp.asarray(k),
+                                   jnp.asarray(v), bq=16, bk=16,
+                                   interpret=True))
+    b_ = np.asarray(flash_attention(jnp.asarray(q), jnp.asarray(k),
+                                    jnp.asarray(v), bq=64, bk=8,
+                                    interpret=True))
+    np.testing.assert_allclose(a, b_, rtol=2e-5, atol=2e-5)

@@ -1,0 +1,98 @@
+"""Pallas kernel validation (interpret mode on CPU): shape/dtype sweeps vs ref.py."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.emulate import matmul_oracle
+from repro.kernels import ops, ref
+from repro.kernels.approx_gemm import make_table
+
+
+def _rand(shape, rng, lo=-128, hi=128):
+    return rng.integers(lo, hi, shape).astype(np.int32)
+
+
+SHAPES = [(8, 8, 8), (16, 24, 8), (100, 70, 36), (256, 256, 256), (33, 1, 5),
+          (1, 128, 1), (512, 64, 128)]
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+def test_systolic_matmul_shapes(m, k, n):
+    rng = np.random.default_rng(m + k + n)
+    a, b = _rand((m, k), rng), _rand((k, n), rng)
+    out = np.asarray(ops.systolic_matmul(jnp.asarray(a), jnp.asarray(b)))
+    assert np.array_equal(out, a @ b)
+
+
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("kf", [0, 3, 6])
+def test_approx_matmul_vs_ref(m, k, n, kf):
+    rng = np.random.default_rng(m * 3 + k + n + kf)
+    a, b = _rand((m, k), rng), _rand((k, n), rng)
+    out = np.asarray(ops.approx_matmul(jnp.asarray(a), jnp.asarray(b), k=kf))
+    want = np.asarray(ref.approx_matmul_ref(jnp.asarray(a), jnp.asarray(b), k=kf))
+    assert np.array_equal(out, want)
+    if kf == 0:
+        assert np.array_equal(out, a @ b)
+
+
+@pytest.mark.parametrize("blocks", [(8, 8, 8), (16, 16, 16), (32, 8, 16)])
+def test_systolic_matmul_block_sweep(blocks):
+    bm, bn, bk = blocks
+    rng = np.random.default_rng(sum(blocks))
+    a, b = _rand((64, 48), rng), _rand((48, 40), rng)
+    out = np.asarray(ops.systolic_matmul(jnp.asarray(a), jnp.asarray(b),
+                                         bm=bm, bn=bn, bk=bk))
+    assert np.array_equal(out, a @ b)
+
+
+def test_approx_padding_correction():
+    """K padding injects T[0,0] per padded row; the wrapper must subtract it.
+    Use k=8 where T[0,0] != 0 (deep approximation corrupts the zero product)."""
+    t = np.asarray(make_table(8))
+    rng = np.random.default_rng(9)
+    a, b = _rand((9, 11), rng), _rand((11, 7), rng)
+    out = np.asarray(ops.approx_matmul(jnp.asarray(a), jnp.asarray(b), k=8))
+    want = np.asarray(ref.approx_matmul_ref(jnp.asarray(a), jnp.asarray(b), k=8))
+    assert np.array_equal(out, want), f"T[0,0]={t[0]}"
+
+
+def test_lut_model_close_to_fused_oracle():
+    """The multiplier-approx model must track the fused bit-level oracle closely
+    (it drops only the accumulator's low-column error component)."""
+    rng = np.random.default_rng(11)
+    a, b = _rand((32, 64), rng), _rand((64, 16), rng)
+    for kf in (2, 4, 6):
+        fused = np.asarray(matmul_oracle(a, b, k=kf), np.int64)
+        lutm = np.asarray(ops.approx_matmul(jnp.asarray(a), jnp.asarray(b), k=kf),
+                          np.int64)
+        exact = (a.astype(np.int64) @ b)
+        scale = np.abs(exact).mean() + 1
+        rel = np.abs(fused - lutm).mean() / scale
+        # deviation = the fused accumulator's own low-column error, which the LUT
+        # model intentionally drops; it grows ~2^k per MAC (k=6 -> a few percent)
+        assert rel < 2 ** kf * 0.0008, (kf, rel)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 40), st.integers(1, 40), st.integers(1, 40),
+       st.integers(0, 8))
+def test_property_kernels_match_ref(m, k, n, kf):
+    rng = np.random.default_rng(m * 7919 + k * 104729 + n * 1299709 + kf)
+    a, b = _rand((m, k), rng), _rand((k, n), rng)
+    out_e = np.asarray(ops.systolic_matmul(jnp.asarray(a), jnp.asarray(b)))
+    assert np.array_equal(out_e, a @ b)
+    out_a = np.asarray(ops.approx_matmul(jnp.asarray(a), jnp.asarray(b), k=kf))
+    want = np.asarray(ref.approx_matmul_ref(jnp.asarray(a), jnp.asarray(b), k=kf))
+    assert np.array_equal(out_a, want)
+
+
+def test_int4_tables():
+    """Kernel path generalizes across operand widths (dtype sweep analogue)."""
+    rng = np.random.default_rng(4)
+    a = rng.integers(-8, 8, (16, 16)).astype(np.int32)
+    b = rng.integers(-8, 8, (16, 16)).astype(np.int32)
+    out = np.asarray(ops.approx_matmul(jnp.asarray(a), jnp.asarray(b), k=0,
+                                       n_bits=4, acc_bits=16))
+    assert np.array_equal(out, a @ b)

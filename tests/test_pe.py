@@ -1,0 +1,68 @@
+"""Table I validation: cell truth tables, error cases, error probability."""
+import itertools
+
+import pytest
+
+from repro.core import pe
+
+
+def test_exact_ppc_is_full_adder():
+    for p, s, c in itertools.product((0, 1), repeat=3):
+        out = pe.exact_ppc(p, s, c)
+        assert 2 * int(out.c) + int(out.s) == p + s + c
+
+
+def test_exact_nppc_adds_complement():
+    for p, s, c in itertools.product((0, 1), repeat=3):
+        out = pe.exact_nppc(p, s, c)
+        assert 2 * int(out.c) + int(out.s) == (1 - p) + s + c
+
+
+# Table I approximate PPC columns (a, b, Cin, Sin) -> (C, S)
+PPC_APPROX_TABLE = {
+    (0, 0, 0, 0): (0, 0), (0, 0, 0, 1): (0, 1), (0, 0, 1, 0): (0, 1),
+    (0, 0, 1, 1): (0, 1), (0, 1, 0, 0): (0, 0), (0, 1, 0, 1): (0, 1),
+    (0, 1, 1, 0): (0, 1), (0, 1, 1, 1): (0, 1), (1, 0, 0, 0): (0, 0),
+    (1, 0, 0, 1): (0, 1), (1, 0, 1, 0): (0, 1), (1, 0, 1, 1): (0, 1),
+    (1, 1, 0, 0): (1, 0), (1, 1, 0, 1): (1, 0), (1, 1, 1, 0): (1, 0),
+    (1, 1, 1, 1): (1, 0),
+}
+
+NPPC_APPROX_TABLE = {
+    (0, 0, 0, 0): (0, 1), (0, 0, 0, 1): (1, 0), (0, 0, 1, 0): (1, 0),
+    (0, 0, 1, 1): (1, 0), (0, 1, 0, 0): (0, 1), (0, 1, 0, 1): (1, 0),
+    (0, 1, 1, 0): (1, 0), (0, 1, 1, 1): (1, 0), (1, 0, 0, 0): (0, 1),
+    (1, 0, 0, 1): (1, 0), (1, 0, 1, 0): (1, 0), (1, 0, 1, 1): (1, 0),
+    (1, 1, 0, 0): (0, 1), (1, 1, 0, 1): (0, 1), (1, 1, 1, 0): (0, 1),
+    (1, 1, 1, 1): (0, 1),
+}
+
+
+@pytest.mark.parametrize("cell,table", [(pe.approx_ppc, PPC_APPROX_TABLE),
+                                        (pe.approx_nppc, NPPC_APPROX_TABLE)])
+def test_approx_cells_match_table1(cell, table):
+    for (a, b, cin, sin), (want_c, want_s) in table.items():
+        p = a & b
+        out = cell(p, sin, cin)
+        assert (int(out.c) & 1, int(out.s) & 1) == (want_c, want_s), (a, b, cin, sin)
+
+
+def test_ppc_error_cases_match_paper():
+    """Paper §III-B: errors exactly at (0,0,1,1),(0,1,1,1),(1,0,1,1),(1,1,0,0),(1,1,1,1)."""
+    cases = pe.error_cases(pe.approx_ppc, nppc=False)
+    inputs = sorted(c[0] for c in cases)
+    assert inputs == sorted([(0, 0, 1, 1), (0, 1, 1, 1), (1, 0, 1, 1),
+                             (1, 1, 0, 0), (1, 1, 1, 1)])
+    assert len(cases) == 5  # error rate 5/16
+    for _, ed in cases:
+        assert ed in (-1, 1)  # Table I ED column
+
+
+def test_nppc_error_rate_5_of_16():
+    assert len(pe.error_cases(pe.approx_nppc, nppc=True)) == 5
+
+
+@pytest.mark.parametrize("cell,nppc", [(pe.approx_ppc, False), (pe.approx_nppc, True)])
+def test_error_probability_25_of_256(cell, nppc):
+    num, den = pe.cell_error_probability(cell, nppc=nppc)
+    assert (num, den) == (25, 256)

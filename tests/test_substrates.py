@@ -1,0 +1,241 @@
+"""Substrate tests: quantization, GEMM policies, optimizer, grad compression,
+checkpointing (incl. elastic restore + corruption detection), data pipeline
+determinism, fault handling."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import ckpt
+from repro.configs import ARCHS
+from repro.core import gemm, quant
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.optim import adamw, grad_compress, schedule
+from repro.train import fault
+
+
+# --- quantization -----------------------------------------------------------
+
+def test_quant_roundtrip_error_bounded():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(0, 3, (64, 32)), jnp.float32)
+    q = quant.quantize(x)
+    back = quant.dequantize(q)
+    assert float(jnp.abs(back - x).max()) <= float(q.scale) * 0.5 + 1e-6
+
+
+def test_fake_quant_gradients_pass_through():
+    x = jnp.linspace(-2, 2, 32)
+    g = jax.grad(lambda z: jnp.sum(quant.fake_quant(z) ** 2))(x)
+    assert jnp.all(jnp.isfinite(g))
+    assert float(jnp.abs(g).sum()) > 0
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 8))
+def test_property_quant_levels(n_bits):
+    rng = np.random.default_rng(n_bits)
+    x = jnp.asarray(rng.normal(size=(100,)), jnp.float32)
+    q = quant.quantize(x, n_bits=n_bits)
+    qmax = (1 << (n_bits - 1)) - 1
+    assert int(jnp.abs(q.values).max()) <= qmax
+
+
+# --- gemm policy routing ----------------------------------------------------
+
+def test_policy_overrides_longest_prefix():
+    p = gemm.GemmPolicy(backend="approx_lut",
+                        overrides={"block0": "approx_lut",
+                                   "block0/conv1": "exact"})
+    assert p.resolve("block0/conv2") == "approx_lut"
+    assert p.resolve("block0/conv1/w") == "exact"
+    assert p.resolve("other") == "approx_lut"
+
+
+@pytest.mark.parametrize("backend", ["mxu_int8", "approx_lut", "approx_oracle",
+                                     "approx_onehot"])
+def test_sa_dot_backends_close_to_float(backend):
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(4, 24)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(24, 8)), jnp.float32)
+    pol = gemm.GemmPolicy(backend=backend, k=2)
+    out = gemm.sa_dot(x, w, pol)
+    ref = x @ w
+    rel = float(jnp.abs(out - ref).mean() / jnp.abs(ref).mean())
+    assert rel < 0.08, (backend, rel)
+
+
+def test_sa_dot_exact_k0_matches_int_quant():
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.normal(size=(6, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(16, 6)), jnp.float32)
+    lut0 = gemm.sa_dot(x, w, gemm.GemmPolicy(backend="approx_lut", k=0))
+    mxu = gemm.sa_dot(x, w, gemm.GemmPolicy(backend="mxu_int8"))
+    np.testing.assert_allclose(np.asarray(lut0), np.asarray(mxu), atol=1e-5)
+
+
+# --- optimizer / schedule ---------------------------------------------------
+
+def test_adamw_reduces_quadratic():
+    params = {"w": jnp.asarray([3.0, -2.0])}
+    state = adamw.init(params)
+    for _ in range(200):
+        grads = {"w": 2 * params["w"]}
+        params, state = adamw.update(grads, state, params, lr=0.05,
+                                     weight_decay=0.0)
+    assert float(jnp.abs(params["w"]).max()) < 0.3
+
+
+def test_schedule_shape():
+    s0 = schedule.warmup_cosine(0, peak_lr=1.0, warmup_steps=10, total_steps=100)
+    s10 = schedule.warmup_cosine(10, peak_lr=1.0, warmup_steps=10, total_steps=100)
+    s100 = schedule.warmup_cosine(100, peak_lr=1.0, warmup_steps=10,
+                                  total_steps=100)
+    assert float(s0) == 0.0
+    assert float(s10) == pytest.approx(1.0)
+    assert float(s100) == pytest.approx(0.1, abs=1e-6)
+
+
+# --- gradient compression ---------------------------------------------------
+
+def test_grad_compress_error_feedback_unbiased():
+    rng = np.random.default_rng(3)
+    g_true = {"w": jnp.asarray(rng.normal(size=(256,)), jnp.float32)}
+    err = grad_compress.init_error_state(g_true)
+    total_q = jnp.zeros((256,))
+    n = 50
+    for _ in range(n):
+        payload, scales, err = grad_compress.compress(g_true, err)
+        total_q = total_q + grad_compress.decompress(payload, scales)["w"]
+    # error feedback: the long-run mean of decompressed grads converges
+    np.testing.assert_allclose(np.asarray(total_q / n), np.asarray(g_true["w"]),
+                               atol=2e-3)
+
+
+def test_grad_compress_payload_is_int8():
+    g = {"w": jnp.asarray([0.5, -1.0, 3.0])}
+    payload, scales, _ = grad_compress.compress(g, grad_compress.init_error_state(g))
+    assert payload["w"].dtype == jnp.int8
+
+
+# --- checkpointing ----------------------------------------------------------
+
+def _tree():
+    return {"a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+            "b": {"c": jnp.ones((5,), jnp.int32)}}
+
+
+def test_ckpt_roundtrip(tmp_path):
+    t = _tree()
+    ckpt.save(7, t, str(tmp_path))
+    out = ckpt.restore(str(tmp_path), t)
+    np.testing.assert_array_equal(np.asarray(out["a"]), np.asarray(t["a"]))
+    assert ckpt.latest_step(str(tmp_path)) == 7
+
+
+def test_ckpt_retention_and_resume_latest(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(s, t, str(tmp_path), keep=2)
+    assert ckpt.latest_step(str(tmp_path)) == 5
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path))
+    assert steps == [4, 5]
+
+
+def test_ckpt_detects_corruption(tmp_path):
+    t = _tree()
+    path = ckpt.save(3, t, str(tmp_path))
+    # corrupt the payload
+    payload = os.path.join(path, "payload.npz")
+    data = dict(np.load(payload))
+    data["a0"] = data["a0"] + 1
+    np.savez(payload, **data)
+    with pytest.raises(IOError):
+        ckpt.restore(str(tmp_path), t)
+
+
+def test_ckpt_async(tmp_path):
+    saver = ckpt.AsyncCheckpointer(str(tmp_path))
+    saver.save_async(11, _tree())
+    saver.wait()
+    assert ckpt.latest_step(str(tmp_path)) == 11
+
+
+def test_ckpt_elastic_reshard_device_put(tmp_path):
+    """Restore onto explicit shardings (the elastic path on a real mesh)."""
+    t = _tree()
+    ckpt.save(1, t, str(tmp_path))
+    dev = jax.devices()[0]
+    shardings = jax.tree.map(lambda _: jax.sharding.SingleDeviceSharding(dev), t)
+    out = ckpt.restore(str(tmp_path), t, shardings=shardings)
+    assert out["a"].devices() == {dev}
+
+
+# --- data pipeline ----------------------------------------------------------
+
+def test_data_deterministic_and_shardable():
+    cfg = ARCHS["smollm-360m"]
+    shape = cfg.shape("train_4k")
+    import dataclasses
+    shape = dataclasses.replace(shape, seq_len=32, global_batch=8)
+    a = SyntheticLM(cfg, shape, DataConfig(seed=1)).batch(5)
+    b = SyntheticLM(cfg, shape, DataConfig(seed=1)).batch(5)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    # two hosts each produce half the batch; host streams differ
+    h0 = SyntheticLM(cfg, shape, DataConfig(seed=1, host_id=0, n_hosts=2)).batch(5)
+    h1 = SyntheticLM(cfg, shape, DataConfig(seed=1, host_id=1, n_hosts=2)).batch(5)
+    assert h0["tokens"].shape[0] == 4
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+
+
+def test_data_micro_reshape():
+    cfg = ARCHS["smollm-360m"]
+    import dataclasses
+    shape = dataclasses.replace(cfg.shape("train_4k"), seq_len=16,
+                                global_batch=8)
+    b = SyntheticLM(cfg, shape, DataConfig(n_micro=4)).batch(0)
+    assert b["tokens"].shape == (4, 2, 16)
+
+
+# --- fault tolerance --------------------------------------------------------
+
+def test_straggler_watchdog_flags_slow_step():
+    wd = fault.StragglerWatchdog(warmup_steps=2)
+    flagged = [wd.observe(i, 1.0) for i in range(8)]
+    assert not any(flagged)
+    assert wd.observe(9, 5.0) is True
+    assert wd.observe(10, 1.0) is False
+
+
+def test_retries_then_succeeds():
+    calls = {"n": 0}
+
+    def flaky():
+        calls["n"] += 1
+        if calls["n"] < 3:
+            raise fault.TransientError("flake")
+        return "ok"
+
+    assert fault.run_with_retries(flaky, backoff_s=0.0) == "ok"
+    assert calls["n"] == 3
+
+
+def test_retries_exhausted_raises():
+    def always_fails():
+        raise fault.TransientError("dead")
+
+    with pytest.raises(fault.TransientError):
+        fault.run_with_retries(always_fails, max_retries=2, backoff_s=0.0)
+
+
+def test_ckpt_bfloat16_roundtrip(tmp_path):
+    import ml_dtypes
+    t = {"w": jnp.asarray(np.linspace(-2, 2, 16), jnp.bfloat16)}
+    ckpt.save(1, t, str(tmp_path))
+    out = ckpt.restore(str(tmp_path), t)
+    assert np.asarray(out["w"]).dtype == ml_dtypes.bfloat16
+    np.testing.assert_array_equal(np.asarray(out["w"], np.float32),
+                                  np.asarray(t["w"], np.float32))

@@ -1,0 +1,89 @@
+"""Two-tier windowed KV cache (§Perf cell-C optimization): decode through ring
+buffers must match decode through the uniform full cache."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.models import get_model, transformer
+
+
+def _gemma_like(f32: bool = False):
+    cfg = reduced(ARCHS["gemma3-12b"])
+    # reduced(): window 8, global_every 2, 4 layers, d=64
+    if f32:
+        cfg = dataclasses.replace(cfg, dtype="float32")
+    return cfg
+
+
+def _decode_seq(cfg, cache, params, prompts, n_gen, dtype=jnp.bfloat16):
+    model = get_model(cfg)
+    logits, cache = transformer.prefill(params, cfg, prompts, cache)
+    outs = [logits]
+    tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    pos = prompts.shape[1]
+    for i in range(n_gen):
+        logits, cache = transformer.decode_step(params, cfg, tok, cache,
+                                                jnp.int32(pos + i))
+        outs.append(logits)
+        tok = jnp.argmax(logits[:, -1:], -1).astype(jnp.int32)
+    return jnp.concatenate(outs, axis=1)
+
+
+@pytest.mark.parametrize("prompt_len", [6, 8, 12, 19])
+def test_ring_matches_uniform(prompt_len):
+    """f32 everywhere so cache-rounding paths are identical: the ring and the
+    uniform cache must produce numerically matching decode logits."""
+    cfg = _gemma_like(f32=True)
+    assert cfg.window_size and cfg.global_every
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+    b, n_gen = 2, 6
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, prompt_len)),
+                          jnp.int32)
+    max_len = prompt_len + n_gen + 2
+    uni = transformer.init_cache(cfg, b, max_len, dtype=jnp.float32,
+                                 windowed=False)
+    two = transformer.init_cache(cfg, b, max_len, dtype=jnp.float32,
+                                 windowed=True)
+    assert "k_loc" in two and "k" in uni
+    out_uni = _decode_seq(cfg, uni, params, prompts, n_gen)
+    out_two = _decode_seq(cfg, two, params, prompts, n_gen)
+    np.testing.assert_allclose(np.asarray(out_two), np.asarray(out_uni),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_int8_cache_close_to_bf16():
+    cfg = _gemma_like()
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(2)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 8)), jnp.int32)
+    c16 = transformer.init_cache(cfg, 2, 16, dtype=jnp.bfloat16, windowed=True)
+    c8 = transformer.init_cache(cfg, 2, 16, dtype=jnp.int8, windowed=True)
+    o16 = _decode_seq(cfg, c16, params, prompts, 4)
+    o8 = _decode_seq(cfg, c8, params, prompts, 4)
+    # int8 cache trades a little fidelity for 2x bandwidth; logits stay close
+    rel = float(jnp.abs(o8 - o16).mean() / (jnp.abs(o16).mean() + 1e-9))
+    assert rel < 0.12, rel
+
+
+def test_cache_memory_ratio():
+    """The two-tier cache must be ~(L_loc*W + L_glob*S)/(L*S) of the uniform."""
+    cfg = ARCHS["gemma3-12b"]
+    b, s = 4, 32768
+    uni = jax.eval_shape(lambda: transformer.init_cache(cfg, b, s,
+                                                        windowed=False))
+    two = jax.eval_shape(lambda: transformer.init_cache(cfg, b, s,
+                                                        windowed=True))
+
+    def nbytes(tree):
+        return sum(np.prod(l.shape) * l.dtype.itemsize
+                   for l in jax.tree.leaves(tree))
+    ratio = nbytes(two) / nbytes(uni)
+    expect = (40 * 1024 + 8 * 32768) / (48 * 32768)
+    assert abs(ratio - expect) < 0.02, (ratio, expect)
