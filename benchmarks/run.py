@@ -138,6 +138,66 @@ def kernels_bench(fast: bool = False):
     print(f"kernel_approx_onehot_{m}cube,{us:.0f},k=4 (MXU rewrite)")
 
 
+def gemm_backends_bench(fast: bool = False):
+    """Backend sweep: approx_lut vs approx_onehot vs approx_delta across
+    M/N/K and k. Prints CSV rows and records the sweep (plus the delta-vs-lut
+    speedup this PR's MXU-resident path must sustain) in
+    BENCH_gemm_backends.json at the repo root."""
+    import json
+    import os
+    import jax
+    import jax.numpy as jnp
+    from repro.core import error_delta, lut
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(0)
+    sizes = [128, 256] if fast else [128, 256, 512]
+    ks = (4,) if fast else (2, 4, 6)
+    onehot_cap = 256   # the (K*256, N) f32 T_B at 512^3 is ~270 MB — skipped
+    results = []
+    for m in sizes:
+        a = jnp.asarray(rng.integers(-128, 128, (m, m)), jnp.int32)
+        b = jnp.asarray(rng.integers(-128, 128, (m, m)), jnp.int32)
+        for kf in ks:
+            reps = 1 if m >= 512 else 2
+            us_lut, out_lut = _timeit(
+                lambda: np.asarray(ops.approx_matmul(a, b, k=kf)), reps=reps)
+            row = {"m": m, "n": m, "k_dim": m, "k": kf}
+            rank = error_delta.rank_for_exact(8, kf, True, 24)
+            us_delta, out_d = _timeit(
+                lambda: np.asarray(ops.approx_delta_matmul(a, b, k=kf)),
+                reps=reps)
+            exact = bool(np.array_equal(out_d, out_lut))
+            results.append({**row, "backend": "approx_lut",
+                            "us_per_call": round(us_lut, 1)})
+            results.append({**row, "backend": "approx_delta", "rank": rank,
+                            "us_per_call": round(us_delta, 1),
+                            "bit_exact_vs_lut": exact,
+                            "speedup_vs_lut": round(us_lut / us_delta, 2)})
+            print(f"bench_lut_{m}cube_k{kf},{us_lut:.0f},gather path")
+            print(f"bench_delta_{m}cube_k{kf},{us_delta:.0f},rank={rank} "
+                  f"exact={exact} speedup={us_lut / us_delta:.2f}x")
+            if m <= onehot_cap:
+                t_b = lut.build_onehot_weights(np.asarray(b), k=kf)
+                us_oh, _ = _timeit(
+                    lambda: np.asarray(lut.onehot_matmul(a, t_b)), reps=reps)
+                results.append({**row, "backend": "approx_onehot",
+                                "us_per_call": round(us_oh, 1),
+                                "note": "T_B prebuilt (fixed weights)"})
+                print(f"bench_onehot_{m}cube_k{kf},{us_oh:.0f},T_B prebuilt")
+            else:
+                print(f"bench_onehot_{m}cube_k{kf},0,skipped (T_B > "
+                      f"{onehot_cap}^3 memory cap)")
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_gemm_backends.json")
+    with open(path, "w") as f:
+        json.dump({"device": jax.default_backend(),
+                   "mode": "interpret" if jax.default_backend() != "tpu"
+                   else "mosaic",
+                   "fast": fast, "results": results}, f, indent=1)
+    print(f"bench_backends_json,0,{os.path.normpath(path)}")
+
+
 def roofline_summary():
     """Dry-run roofline table (reads experiments/dryrun.jsonl if present)."""
     import json
@@ -180,6 +240,7 @@ def main() -> None:
     fig9_fig10_pareto(args.fast)
     latency_wavefront()
     kernels_bench(args.fast)
+    gemm_backends_bench(args.fast)
     roofline_summary()
 
 

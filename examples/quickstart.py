@@ -32,6 +32,12 @@ def main():
     m = errors.gemm_error_metrics(approx_out, exact_out)
     print(f"   64x48x32 GEMM, k=4: ER {m['ER']:.3f}  NMED {m['NMED']:.5f}  "
           f"MRED {m['MRED']:.5f}")
+    # same result, MXU-resident: exact matmul + rank-r error correction
+    # (docs/backends.md) — the fast path for the approximate GEMM
+    delta_out = np.asarray(ops.approx_delta_matmul(jnp.asarray(A),
+                                                   jnp.asarray(B), k=4))
+    print(f"   approx_delta (exact+rank-r correction) bit-identical: "
+          f"{np.array_equal(delta_out, approx_out)}")
 
     print("\n== 3. PE error metrics (Table V reproduction) ==")
     for k in (2, 4, 6, 8):

@@ -1,9 +1,10 @@
 """Core: the paper's contribution — exact/approximate systolic-array GEMM.
 
 Submodules: pe (Table I cells), emulate (bit-level fused MAC + GEMM oracle),
-lut (fast functional model + one-hot MXU trick), systolic (cycle-accurate SA),
-errors (NMED/MRED/PSNR/SSIM), energy (analytical model from paper tables),
+lut (fast functional model + one-hot MXU trick), error_delta (exact-plus-delta
+low-rank decomposition of the approximate product), systolic (cycle-accurate
+SA), errors (NMED/MRED/PSNR/SSIM), energy (analytical model from paper tables),
 quant (int8 symmetric quantization), gemm (backend registry / sa_dot).
 """
-from . import emulate, energy, errors, gemm, lut, pe, quant, systolic  # noqa: F401
+from . import emulate, energy, error_delta, errors, gemm, lut, pe, quant, systolic  # noqa: F401
 from .gemm import EXACT, GemmPolicy, int_matmul, sa_dot  # noqa: F401

@@ -204,3 +204,17 @@ def product_table(n_bits: int = 8, k: int = 0, signed: bool = True,
         out = pe_mac(grid_a, grid_b, 0, n_bits=n_bits, k=k, signed=signed,
                      acc_bits=acc_bits)
     return np.asarray(out, np.int32).reshape(span, span)
+
+
+@functools.lru_cache(maxsize=32)
+def product_table_jnp(n_bits: int = 8, k: int = 0, signed: bool = True,
+                      acc_bits: int = 24, flat: bool = False) -> jnp.ndarray:
+    """Device-resident copy of ``product_table``, uploaded once per config.
+
+    Shared by kernels/ops.py, core/lut.py and core/error_delta.py so repeated
+    GEMM calls don't re-transfer the 256 KiB table to the device every
+    invocation. ``flat=True`` returns the (span*span,) row-major view the
+    gather kernels index into.
+    """
+    table = product_table(n_bits, k, signed, acc_bits)
+    return jnp.asarray(table.reshape(-1) if flat else table)

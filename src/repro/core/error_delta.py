@@ -1,0 +1,241 @@
+"""Exact-plus-error-delta decomposition of the approximate product table.
+
+The paper's approximate PE differs from the exact PE only in the columns
+``< k`` of the partial-product array, so the approximate product table is the
+exact product plus a structured error term:
+
+    T_k[a, b] = a * b + E_k[a, b],      E_k = product_table(k) - product_table(0)
+
+Because the approximate cells occupy columns ``< k`` only (and for ``k <= N-1``
+those columns hold PPC cells fed exclusively by operand bits ``a_j b_i`` with
+``i + j < k``), ``E_k[a, b]`` depends only on the **low k bits** of each
+operand: the (2^N, 2^N) table is a (2^k, 2^k) tile repeated over the grid.  Its
+true rank is therefore at most 2^k and empirically far lower — for N=8 signed:
+rank 2 at k=2, 7 at k=4, 21 at k=6, 62 at k=8.
+
+An SVD of ``E`` gives factors ``f (span, r)`` and ``g (r, span)`` with
+``E ≈ f @ g``.  At ``r = rank_for_exact(...)`` the float64 reconstruction error
+is ~1e-12, so rounding recovers every integer entry exactly, and the
+approximate GEMM becomes **two MXU matmuls** instead of O(M·N·K) VPU gathers:
+
+    out = A_s @ B_s                       (exact int8 matmul — the exact PE array)
+        + round( F_A @ G_B )              ((M, rK) x (rK, N) float32 correction)
+
+with ``F_A[m, kk*r + j] = f[a_u[m, kk], j]`` and
+``G_B[kk*r + j, n] = g[j, b_u[kk, n]]`` — per-element lookups into 256-entry
+vectors, trivially VMEM-resident.  Rounding the correction **per K-block** (as
+the fused Pallas kernel in ``kernels/delta_gemm.py`` does) keeps the result
+bit-identical to the gather path for any K, because each block's true
+correction is an integer and the float32 noise per block is ~1e-2 << 0.5.
+
+For truncated ranks (``rank_for_tol``) two residual views are kept:
+``residual = E - round(f @ g)`` (int32 — nonzero only where the rank-r
+reconstruction rounds to the wrong integer, for sparsity introspection) and
+``defect = E - f @ g`` (float32 — the exact reconstruction defect). Callers
+restore bit-exactness at any rank by gathering ``defect`` and rounding **once**
+over ``correction + defect`` (rounding the two parts separately does not
+commute with the summation, so the integer residual alone cannot cancel the
+truncation exactly).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .emulate import product_table
+
+# A rank is "exact" when the float64 reconstruction error is below this guard:
+# small enough that per-entry rounding is exact and that float32 block-wise
+# accumulation (error ~1e-2 at K-block 512, measured) stays well below 0.5.
+EXACT_RECON_EPS = 1e-6
+
+
+class DeltaFactors(NamedTuple):
+    """Rank-r factorization of the error table for one (n_bits, k, signed, acc_bits)."""
+    n_bits: int
+    k: int
+    signed: bool
+    acc_bits: int
+    rank: int
+    f: np.ndarray          # (span, rank) float32 — row factor, indexed by a's bit pattern
+    g: np.ndarray          # (rank, span) float32 — column factor, indexed by b's bit pattern
+    residual: np.ndarray   # (span, span) int32 — E - round(f @ g); all-zero at rank_for_exact
+    defect: np.ndarray     # (span, span) float32 — E - f @ g; exact-cancellation table
+    max_err: float         # max |f @ g - E| over the table (float64 reconstruction)
+
+    @property
+    def exact(self) -> bool:
+        return not self.residual.any()
+
+
+@functools.lru_cache(maxsize=32)
+def error_table(n_bits: int = 8, k: int = 4, signed: bool = True,
+                acc_bits: int = 24) -> np.ndarray:
+    """(2^N, 2^N) int32 table E[a_u, b_u] = T_k[a_u, b_u] - a*b (zero for k=0)."""
+    t_k = product_table(n_bits, k, signed, acc_bits).astype(np.int64)
+    t_0 = product_table(n_bits, 0, signed, acc_bits).astype(np.int64)
+    return (t_k - t_0).astype(np.int32)
+
+
+@functools.lru_cache(maxsize=32)
+def _svd(n_bits: int, k: int, signed: bool, acc_bits: int):
+    e = error_table(n_bits, k, signed, acc_bits).astype(np.float64)
+    return np.linalg.svd(e)
+
+
+def _recon_err(n_bits: int, k: int, signed: bool, acc_bits: int, rank: int) -> float:
+    e = error_table(n_bits, k, signed, acc_bits).astype(np.float64)
+    if rank == 0:
+        return float(np.abs(e).max()) if e.size else 0.0
+    u, s, vt = _svd(n_bits, k, signed, acc_bits)
+    recon = (u[:, :rank] * s[:rank]) @ vt[:rank]
+    return float(np.abs(recon - e).max())
+
+
+@functools.lru_cache(maxsize=64)
+def rank_for_exact(n_bits: int = 8, k: int = 4, signed: bool = True,
+                   acc_bits: int = 24) -> int:
+    """Smallest r whose float64 rank-r reconstruction rounds to E exactly.
+
+    Equals the numerical rank of E (the tiled low-bit structure keeps it far
+    below 2^N): the singular spectrum drops to ~0 past the true rank, so the
+    reconstruction error falls from O(1) to O(1e-12) in one step.
+    """
+    _, s, _ = _svd(n_bits, k, signed, acc_bits)
+    for r in range(len(s) + 1):
+        if _recon_err(n_bits, k, signed, acc_bits, r) <= EXACT_RECON_EPS:
+            return r
+    raise AssertionError("full-rank SVD failed to reconstruct the error table")
+
+
+@functools.lru_cache(maxsize=64)
+def rank_for_tol(tol: float, n_bits: int = 8, k: int = 4, signed: bool = True,
+                 acc_bits: int = 24) -> int:
+    """Smallest r with max-abs per-entry reconstruction error <= tol.
+
+    ``tol`` bounds the *additional* per-product error on top of the paper's
+    approximation; the exact residual table lets callers cancel it again.
+    """
+    if tol < 0:
+        raise ValueError(f"tol must be >= 0, got {tol}")
+    r_exact = rank_for_exact(n_bits, k, signed, acc_bits)
+    for r in range(r_exact + 1):
+        if _recon_err(n_bits, k, signed, acc_bits, r) <= tol:
+            return r
+    return r_exact
+
+
+@functools.lru_cache(maxsize=32)
+def delta_factors(n_bits: int = 8, k: int = 4, signed: bool = True,
+                  acc_bits: int = 24, rank: Optional[int] = None,
+                  tol: Optional[float] = None) -> DeltaFactors:
+    """Factor the error table at the requested rank (default: exact rank).
+
+    ``rank`` wins over ``tol``; with neither, ``rank_for_exact`` is used and
+    the residual is all-zero (the backend is then bit-identical to the gather
+    path). Results are cached per configuration — the SVD runs once per
+    (n_bits, k, signed, acc_bits).
+    """
+    if rank is None:
+        rank = (rank_for_exact(n_bits, k, signed, acc_bits) if tol is None
+                else rank_for_tol(tol, n_bits, k, signed, acc_bits))
+    span = 1 << n_bits
+    e = error_table(n_bits, k, signed, acc_bits)
+    rank = max(0, min(rank, span))
+    if rank == 0:
+        f = np.zeros((span, 0), np.float32)
+        g = np.zeros((0, span), np.float32)
+        recon = np.zeros((span, span), np.float64)
+    else:
+        u, s, vt = _svd(n_bits, k, signed, acc_bits)
+        sq = np.sqrt(s[:rank])
+        f = (u[:, :rank] * sq).astype(np.float32)
+        g = (sq[:, None] * vt[:rank]).astype(np.float32)
+        recon = f.astype(np.float64) @ g.astype(np.float64)
+    residual = (e.astype(np.int64) - np.round(recon).astype(np.int64)).astype(np.int32)
+    defect = (e.astype(np.float64) - recon).astype(np.float32)
+    max_err = float(np.abs(recon - e).max()) if e.size else 0.0
+    return DeltaFactors(n_bits, k, signed, acc_bits, rank, f, g, residual,
+                        defect, max_err)
+
+
+@functools.lru_cache(maxsize=32)
+def factor_tables_jnp(n_bits: int = 8, k: int = 4, signed: bool = True,
+                      acc_bits: int = 24, rank: Optional[int] = None,
+                      tol: Optional[float] = None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Device-resident flattened (f, g) for the Pallas kernel, uploaded once.
+
+    f is flattened row-major (span, r) -> f_flat[v * r + j]; g row-major
+    (r, span) -> g_flat[j * span + v].  rank 0 yields (span,)-zeros dummies so
+    the kernel signature stays uniform.
+    """
+    fac = delta_factors(n_bits, k, signed, acc_bits, rank=rank, tol=tol)
+    span = 1 << n_bits
+    if fac.rank == 0:
+        z = jnp.zeros((span,), jnp.float32)
+        return z, z
+    return (jnp.asarray(np.ascontiguousarray(fac.f).reshape(-1)),
+            jnp.asarray(np.ascontiguousarray(fac.g).reshape(-1)))
+
+
+@functools.lru_cache(maxsize=32)
+def _device_factors(n_bits: int, k: int, signed: bool, acc_bits: int,
+                    rank: int) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Device-resident (f, g, defect_flat) for the jnp paths, uploaded once."""
+    fac = delta_factors(n_bits, k, signed, acc_bits, rank=rank)
+    return (jnp.asarray(fac.f), jnp.asarray(fac.g),
+            jnp.asarray(fac.defect.reshape(-1)))
+
+
+def _correction(a_u: jnp.ndarray, b_u: jnp.ndarray, fac: DeltaFactors) -> jnp.ndarray:
+    """Unrounded rank-r correction: (M, rK) x (rK, N) float32 matmul."""
+    m, kd = a_u.shape
+    n = b_u.shape[1]
+    f_dev, g_dev, _ = _device_factors(fac.n_bits, fac.k, fac.signed,
+                                      fac.acc_bits, fac.rank)
+    f_a = jnp.take(f_dev, a_u, axis=0)                        # (M, K, r)
+    g_b = jnp.take(g_dev, b_u, axis=1)                        # (r, K, N)
+    return (f_a.reshape(m, kd * fac.rank)
+            @ jnp.transpose(g_b, (1, 0, 2)).reshape(kd * fac.rank, n))
+
+
+def defect_gather_matmul(a_u: jnp.ndarray, b_u: jnp.ndarray,
+                         fac: DeltaFactors) -> jnp.ndarray:
+    """sum_kk defect[a,b] via the shared gather loop (cached device table)."""
+    from . import lut
+    span = 1 << fac.n_bits
+    _, _, defect_flat = _device_factors(fac.n_bits, fac.k, fac.signed,
+                                        fac.acc_bits, fac.rank)
+    return lut.table_gather_matmul(a_u, b_u, defect_flat, span=span)
+
+
+def delta_matmul_ref(a, b, *, k: int = 4, n_bits: int = 8, signed: bool = True,
+                     acc_bits: int = 24, rank: Optional[int] = None,
+                     tol: Optional[float] = None,
+                     apply_residual: bool = True) -> jnp.ndarray:
+    """Pure-jnp reference of the delta backend: base matmul + rank-r correction.
+
+    Bit-identical to ``lut.lut_matmul`` at the exact rank, and at *any* rank
+    when ``apply_residual=True`` (the defect gather restores exactness), for
+    any (M, K) x (K, N).
+    """
+    fac = delta_factors(n_bits, k, signed, acc_bits, rank=rank, tol=tol)
+    span = 1 << n_bits
+    mask = span - 1
+    half = span >> 1
+    a_u = jnp.asarray(a, jnp.int32) & mask                    # (M, K) bit patterns
+    b_u = jnp.asarray(b, jnp.int32) & mask                    # (K, N)
+    if signed:
+        a_s = (a_u ^ half) - half                             # sign-extend
+        b_s = (b_u ^ half) - half
+    else:
+        a_s, b_s = a_u, b_u
+    out = a_s @ b_s                                           # exact int32 base
+    corr = _correction(a_u, b_u, fac) if fac.rank else jnp.zeros(out.shape,
+                                                                 jnp.float32)
+    if apply_residual and not fac.exact:
+        corr = corr + defect_gather_matmul(a_u, b_u, fac)
+    return out + jnp.round(corr).astype(jnp.int32)

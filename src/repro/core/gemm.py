@@ -11,6 +11,10 @@ policy selects, per layer, which arithmetic executes it:
                       factor k (Pallas gather kernel / jnp fallback) -> dequantize.
 * ``approx_oracle`` — int8 quantize -> full fused bit-level PE-chain oracle.
 * ``approx_onehot`` — one-hot rewrite running the approximate GEMM on the exact MXU.
+* ``approx_delta``  — exact int8 MXU matmul + rank-r error-correction matmul
+                      (core/error_delta.py): bit-identical to ``approx_lut`` at the
+                      default (exact) rank, but MXU-resident — the fast path for
+                      activations that change every call.
 
 The per-layer policy generalizes the paper's hybrid BDCN (approximate early blocks,
 exact later blocks) to arbitrary networks.
@@ -24,7 +28,8 @@ import jax.numpy as jnp
 
 from . import emulate, lut, quant
 
-BACKENDS = ("exact", "mxu_int8", "approx_lut", "approx_oracle", "approx_onehot")
+BACKENDS = ("exact", "mxu_int8", "approx_lut", "approx_oracle", "approx_onehot",
+            "approx_delta")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,13 +38,18 @@ class GemmPolicy:
 
     `backend` is the default; `overrides` maps layer-name prefixes to backends
     (longest prefix wins), mirroring the paper's hybrid early-approx/late-exact BDCN.
-    `k` is the approximation factor for approximate backends.
+    `k` is the approximation factor for approximate backends. `delta_rank` /
+    `delta_tol` tune the ``approx_delta`` correction rank (None = exact rank,
+    bit-identical to ``approx_lut``; a tolerance trades correction FLOPs for a
+    bounded per-product error on top of the paper's approximation).
     """
     backend: str = "exact"
     k: int = 4
     n_bits: int = 8
     acc_bits: int = 24
     overrides: Optional[Dict[str, str]] = None
+    delta_rank: Optional[int] = None
+    delta_tol: Optional[float] = None
 
     def resolve(self, layer: str = "") -> str:
         if self.overrides:
@@ -70,6 +80,13 @@ def _int_gemm(x_q, w_q, backend: str, policy: GemmPolicy):
         t_b = lut.build_onehot_weights(w_q, n_bits=policy.n_bits, k=policy.k,
                                        acc_bits=policy.acc_bits)
         return lut.onehot_matmul(x_q, t_b, n_bits=policy.n_bits)
+    if backend == "approx_delta":
+        from repro.kernels import ops
+        return ops.approx_delta_matmul(x_q, w_q, k=policy.k,
+                                       n_bits=policy.n_bits,
+                                       acc_bits=policy.acc_bits,
+                                       rank=policy.delta_rank,
+                                       tol=policy.delta_tol)
     raise ValueError(f"unknown integer backend {backend!r}")
 
 

@@ -1,7 +1,9 @@
 """Pallas TPU kernels for the paper's compute hot-spot (the systolic GEMM).
 
 systolic_gemm.py — exact int8 PE array mapped onto the MXU.
-approx_gemm.py   — approximate PE via VMEM-resident product table.
+approx_gemm.py   — approximate PE via VMEM-resident product table (VPU gathers).
+delta_gemm.py    — approximate PE as exact matmul + rank-r error correction
+                   (MXU-resident; see core/error_delta.py, docs/backends.md).
 ops.py           — public wrappers (padding, interpret fallback on CPU).
 ref.py           — pure-jnp oracles.
 """

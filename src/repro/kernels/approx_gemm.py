@@ -79,6 +79,9 @@ def approx_matmul_lut(a_u: jnp.ndarray, b_u: jnp.ndarray, table_flat: jnp.ndarra
 
 def make_table(k: int, *, n_bits: int = 8, signed: bool = True,
                acc_bits: int = 24) -> jnp.ndarray:
-    """Flattened (2^N * 2^N,) approximate-product table for factor k."""
-    return jnp.asarray(
-        emulate.product_table(n_bits, k, signed, acc_bits).reshape(-1))
+    """Flattened (2^N * 2^N,) approximate-product table for factor k.
+
+    Device-resident and cached: repeated GEMM calls share one upload (see
+    emulate.product_table_jnp).
+    """
+    return emulate.product_table_jnp(n_bits, k, signed, acc_bits, flat=True)

@@ -15,8 +15,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import emulate
-from . import approx_gemm, systolic_gemm
+from repro.core import error_delta
+from . import approx_gemm, delta_gemm, systolic_gemm
 
 
 def _on_tpu() -> bool:
@@ -92,4 +92,75 @@ def approx_matmul(a: jnp.ndarray, b: jnp.ndarray, *, k: int = 4, n_bits: int = 8
         # padded K rows each contribute T[0,0] (nonzero for deep approximation)
         t00 = table[0]
         out = out - k_pad * t00
+    return out
+
+
+def approx_delta_matmul(a: jnp.ndarray, b: jnp.ndarray, *, k: int = 4,
+                        n_bits: int = 8, acc_bits: int = 24, signed: bool = True,
+                        rank: int | None = None, tol: float | None = None,
+                        apply_residual: bool = True,
+                        bm: int | None = None, bn: int | None = None,
+                        bk: int | None = None,
+                        interpret: bool | None = None) -> jnp.ndarray:
+    """Approximate GEMM via the exact-plus-error-delta decomposition.
+
+    Computes ``A_s @ B_s + round(F_A @ G_B)`` (see core/error_delta.py): one
+    exact int8 MXU matmul plus a rank-r float32 correction matmul, fused in a
+    single Pallas kernel. At the default rank (``rank_for_exact``) the result
+    is bit-identical to ``approx_matmul`` / ``lut.lut_matmul``; a truncated
+    ``rank``/``tol`` trades correction FLOPs for bounded extra error, which
+    ``apply_residual=True`` cancels again via a gather pass over the integer
+    residual table.
+    """
+    interpret = (not _on_tpu()) if interpret is None else interpret
+    fac = error_delta.delta_factors(n_bits, k, signed, acc_bits, rank=rank,
+                                    tol=tol)
+    span = 1 << n_bits
+    mask = span - 1
+    half = span >> 1
+    m, kd = a.shape
+    _, n = b.shape
+    a_u = jnp.asarray(a, jnp.int32) & mask
+    b_u = jnp.asarray(b, jnp.int32) & mask
+    if not signed:
+        # unsigned 8-bit values don't fit the kernel's int8 base dot; the
+        # pure-jnp reference handles that (rare, off-paper) configuration.
+        return error_delta.delta_matmul_ref(a, b, k=k, n_bits=n_bits,
+                                            signed=signed, acc_bits=acc_bits,
+                                            rank=rank, tol=tol,
+                                            apply_residual=apply_residual)
+    a_s = (a_u ^ half) - half                       # sign-extended operand values
+    b_s = (b_u ^ half) - half
+    bm = bm or delta_gemm.DEFAULT_BM
+    bn = bn or delta_gemm.DEFAULT_BN
+    bk = bk or delta_gemm.DEFAULT_BK
+    align = 8 if interpret else 128
+    bm_, bn_, bk_ = (_blocks(m, bm, align), _blocks(n, bn, align),
+                     _blocks(kd, bk, align))
+    a_p = _pad_to(a_s, bm_, bk_)
+    b_p = _pad_to(b_s, bk_, bn_)
+    exact_cancel = apply_residual and not fac.exact
+    if exact_cancel:
+        # truncated rank, bit-exactness requested: per-block rounding does not
+        # commute with the defect cancellation, so run the fused kernel for the
+        # base only and round correction + defect once (see error_delta docs)
+        base = delta_gemm.delta_matmul_fused(
+            a_p, b_p, jnp.zeros((span,), jnp.float32),
+            jnp.zeros((span,), jnp.float32), rank=0, span=span, bm=bm_, bn=bn_,
+            bk=bk_, interpret=interpret)[:m, :n]
+        corr = (error_delta._correction(a_u, b_u, fac) if fac.rank
+                else jnp.zeros((m, n), jnp.float32))
+        corr = corr + error_delta.defect_gather_matmul(a_u, b_u, fac)
+        return base + jnp.round(corr).astype(jnp.int32)
+    f_flat, g_flat = error_delta.factor_tables_jnp(n_bits, k, signed, acc_bits,
+                                                   rank=rank, tol=tol)
+    out = delta_gemm.delta_matmul_fused(a_p, b_p, f_flat, g_flat, rank=fac.rank,
+                                        span=span, bm=bm_, bn=bn_, bk=bk_,
+                                        interpret=interpret)
+    out = out[:m, :n]
+    k_pad = a_p.shape[1] - kd
+    if k_pad and fac.rank:
+        # padded K rows contribute 0 to the base and recon(E[0,0]) each to the
+        # per-block-rounded correction (== E[0,0] exactly at the exact rank)
+        out = out - k_pad * int(np.round(float(fac.f[0] @ fac.g[:, 0])))
     return out

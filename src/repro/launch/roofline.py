@@ -81,6 +81,9 @@ def collective_bytes(hlo_text: str) -> Dict[str, int]:
 
 def roofline_terms(cost: Dict[str, float], coll_bytes: int,
                    n_chips: int) -> Dict[str, float]:
+    if isinstance(cost, (list, tuple)):
+        # some jax versions wrap Compiled.cost_analysis() in a 1-element list
+        cost = cost[0] if cost else {}
     flops = float(cost.get("flops", 0.0))
     mem_bytes = float(cost.get("bytes accessed", 0.0))
     t_compute = flops / mesh_mod.PEAK_FLOPS

@@ -1,0 +1,6 @@
+"""Make the tests directory importable regardless of pytest import mode, so
+test modules can fall back to `_hypothesis_fallback` when hypothesis is absent."""
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))

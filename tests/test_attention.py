@@ -3,7 +3,10 @@ softcapped, GQA, cache-valid masking, odd shapes."""
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fallback, see _hypothesis_fallback.py
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.models.layers import chunked_attention
 

@@ -1,7 +1,10 @@
 """Bit-level PE emulation: exactness at k=0, approximation behaviour, oracle GEMM."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fallback, see _hypothesis_fallback.py
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import emulate
 from repro.core.emulate import matmul_oracle, nppc_count, pe_mac, ppc_count, product_table

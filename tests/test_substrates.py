@@ -7,7 +7,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fallback, see _hypothesis_fallback.py
+    from _hypothesis_fallback import given, settings, strategies as st
 
 from repro.checkpoint import ckpt
 from repro.configs import ARCHS
@@ -56,7 +59,7 @@ def test_policy_overrides_longest_prefix():
 
 
 @pytest.mark.parametrize("backend", ["mxu_int8", "approx_lut", "approx_oracle",
-                                     "approx_onehot"])
+                                     "approx_onehot", "approx_delta"])
 def test_sa_dot_backends_close_to_float(backend):
     rng = np.random.default_rng(1)
     x = jnp.asarray(rng.normal(size=(4, 24)), jnp.float32)
