@@ -198,6 +198,82 @@ def gemm_backends_bench(fast: bool = False):
     print(f"bench_backends_json,0,{os.path.normpath(path)}")
 
 
+def apps_bench(fast: bool = False):
+    """Application-workload backend sweep: DCT / edge / BDCN GEMMs routed
+    through GemmPolicy, backend x k x image size. The weight-stationary
+    ``approx_delta`` path (prepared G_B/F_A factors) must beat the
+    ``approx_lut`` gather path; results recorded in BENCH_apps_backends.json
+    with per-point bit-exactness vs the lut backend."""
+    import json
+    import os
+    import jax
+    from repro.apps import bdcn, dct, edge, images
+
+    backends = ("approx_lut", "approx_onehot", "approx_delta")
+    sizes = (64,) if fast else (128, 256)
+    ks = (4,) if fast else (2, 4, 6)
+    results = []
+
+    def sweep(app, size, kf, fn):
+        ref = None
+        for be in backends:
+            # sub-10ms workloads on a shared CPU need several reps to settle
+            reps = 2 if size >= 256 else 6
+            if be == "approx_onehot":
+                reps = 1
+            us, out = _timeit(fn, be, reps=reps)
+            if be == "approx_lut":
+                ref = (us, out)
+            exact = bool(np.array_equal(out, ref[1]))
+            row = {"app": app, "size": size, "k": kf, "backend": be,
+                   "us_per_call": round(us, 1), "bit_exact_vs_lut": exact}
+            if be != "approx_lut":
+                row["speedup_vs_lut"] = round(ref[0] / us, 2)
+            results.append(row)
+            print(f"apps_{app}_{size}px_k{kf}_{be},{us:.0f},"
+                  f"exact={exact}" + (f" speedup={ref[0] / us:.2f}x"
+                                      if be != "approx_lut" else ""))
+
+    for size in sizes:
+        img = images.test_image(size, 0)
+        blocks = images.to_blocks(img)
+        for kf in ks:
+            sweep("dct", size, kf,
+                  lambda be, b=blocks, k=kf:
+                  dct.forward_dct_blocks(b, k, policy=be))
+            sweep("edge", size, kf,
+                  lambda be, i=img, k=kf:
+                  np.asarray(edge.conv_gemm(i, edge.LAPLACIAN, k, policy=be)))
+    bdcn_size = 48 if fast else 64
+    ws = bdcn.make_weights([8, 16, 16, 16], 0)
+    img = images.test_image(bdcn_size, 0)
+    for kf in ks:
+        sweep("bdcn", bdcn_size, kf,
+              lambda be, k=kf: bdcn.bdcn_forward(img, ws, k, policy=be))
+    summary = {}
+    for app in ("dct", "edge", "bdcn"):
+        sp = [r["speedup_vs_lut"] for r in results
+              if r["app"] == app and r["backend"] == "approx_delta"]
+        if sp:
+            summary[f"{app}_delta_geomean_speedup_vs_lut"] = round(
+                float(np.exp(np.mean(np.log(sp)))), 2)
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_apps_backends.json")
+    with open(path, "w") as f:
+        json.dump({"device": jax.default_backend(),
+                   "mode": "interpret" if jax.default_backend() != "tpu"
+                   else "mosaic",
+                   "fast": fast,
+                   "note": "approx_delta runs weight-stationary (prepared "
+                           "weight-restricted rank-r' factors); approx_onehot "
+                           "prepares T_B where the weights sit on the right",
+                   "summary": summary,
+                   "results": results}, f, indent=1)
+    for k, v in summary.items():
+        print(f"bench_apps_{k},0,{v}x")
+    print(f"bench_apps_json,0,{os.path.normpath(path)}")
+
+
 def roofline_summary():
     """Dry-run roofline table (reads experiments/dryrun.jsonl if present)."""
     import json
@@ -241,6 +317,7 @@ def main() -> None:
     latency_wavefront()
     kernels_bench(args.fast)
     gemm_backends_bench(args.fast)
+    apps_bench(args.fast)
     roofline_summary()
 
 

@@ -2,6 +2,11 @@
 Table VI). PSNR/SSIM vs the exact-arithmetic pipeline at several k.
 
 Run:  PYTHONPATH=src python examples/dct_compression.py [--size 128]
+          [--backend approx_oracle|approx_lut|approx_delta|approx_onehot]
+
+``approx_oracle`` (default) is the paper's fused-MAC simulation;
+``approx_delta`` runs the same pipeline MXU-resident via the weight-stationary
+error-delta decomposition (bit-identical to ``approx_lut``).
 """
 import argparse
 
@@ -11,12 +16,16 @@ from repro.apps import dct
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--size", type=int, default=128)
+    ap.add_argument("--backend", default=None,
+                    help="GemmPolicy backend (default: the paper's "
+                         "fused-MAC oracle)")
     args = ap.parse_args()
     paper = {2: (45.97, 0.991), 4: (38.21, 0.955), 6: (35.67, 0.923),
              8: (28.43, 0.872)}
+    be = args.backend or dct.DEFAULT_BACKEND
     print(f"8x8 integer DCT on a {args.size}x{args.size} image "
-          f"(approx vs exact pipeline):")
-    for k, v in dct.run(size=args.size).items():
+          f"(backend {be}, approx vs exact pipeline):")
+    for k, v in dct.run(size=args.size, policy=args.backend).items():
         pp, ps = paper.get(k, (float('nan'),) * 2)
         print(f"  k={k}: PSNR {v['psnr']:6.2f} dB (paper {pp:5.2f})   "
               f"SSIM {v['ssim']:.3f} (paper {ps:.3f})")

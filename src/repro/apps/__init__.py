@@ -1,1 +1,12 @@
+"""Paper §V application reproductions (Table VI), routed through GemmPolicy.
+
+dct.py  — 8x8 integer DCT image compression (fixed T8 weights, both sides).
+edge.py — kernel-based edge detection via im2col GEMM (fixed conv kernel).
+bdcn.py — compact BDCN-style CNN with the paper's hybrid policy expressed as
+          per-layer GemmPolicy overrides (approx early blocks, exact late).
+
+Every app's ``run(..., policy=...)`` accepts a backend name or GemmPolicy;
+fixed weights are prepared once (``core.gemm.prepare_weights_cached``) so the
+weight-stationary backends amortize their precompute across all blocks/rows.
+"""
 from . import bdcn, dct, edge, images  # noqa: F401

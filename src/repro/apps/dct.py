@@ -1,10 +1,22 @@
 """8x8 integer-scaled DCT image compression through the approximate systolic GEMM
 (paper §V-A; integer DCT per Meher et al. [18], HEVC T8 matrix).
 
-Pipeline (all multiplies are 8-bit PE GEMMs):
+Pipeline (all multiplies are 8-bit PE GEMMs routed through ``GemmPolicy``):
   X (centered int8 block) -> T. X  (>>7, saturate int8) -> . T^T (>>7) = coeffs
   reconstruction uses the exact transpose pipeline; PSNR/SSIM measured against
   the exact-arithmetic output of the same pipeline, as in the paper.
+
+The DCT matrix is a fixed weight — the ideal weight-stationary case: its
+rank-r delta factor (``approx_delta``) / one-hot table (``approx_onehot``) is
+prepared once per k and reused by every 8x8 block of the image. ``T8``
+multiplies from the *left* in the first stage; the approximate product table
+is not symmetric, so the left/right operand roles are preserved end to end
+(``gemm.prepare_weights(..., side="left")``).
+
+Backends: the default ``approx_oracle`` chains the bit-level fused-MAC PE
+(faithful to the paper's simulation including accumulator error); pass
+``policy="approx_lut"`` for the product-table model or ``"approx_delta"`` for
+the MXU-resident weight-stationary path (both bit-identical to each other).
 """
 from __future__ import annotations
 
@@ -12,7 +24,7 @@ from typing import Dict
 
 import numpy as np
 
-from repro.core import emulate, errors
+from repro.core import errors, gemm
 from . import images
 
 # HEVC-style 8x8 integer DCT matrix (fits signed 8-bit operands)
@@ -26,32 +38,32 @@ T8 = np.array([
     [36, -83, 83, -36, -36, 83, -83, 36],
     [18, -50, 89, -75, 75, -89, 50, -18]], dtype=np.int32)
 
-
-def _gemm(a: np.ndarray, b: np.ndarray, k: int, *, fused: bool = True) -> np.ndarray:
-    """Batched 8x8 approximate GEMM. `fused=True` chains the bit-level PE
-    (faithful to the paper's fused-MAC simulation, including accumulator error);
-    False uses the faster product-table model."""
-    if fused:
-        acc = np.zeros(a.shape[:-1] + (b.shape[-1],), np.int32)
-        for kk in range(a.shape[-1]):
-            acc = np.asarray(emulate.pe_mac(
-                a[..., :, kk][..., :, None], b[..., kk, :][..., None, :], acc,
-                n_bits=8, k=k, signed=True, acc_bits=24))
-        return acc
-    table = emulate.product_table(8, k, True, 24)
-    return table[a[..., :, :, None] & 255, b[..., None, :, :] & 255].sum(axis=-2)
+# The paper's Table VI simulates the fused-MAC PE chain (incl. accumulator
+# error), which is backend "approx_oracle" in the GemmPolicy registry.
+DEFAULT_BACKEND = "approx_oracle"
 
 
 def _sat8(x: np.ndarray, shift: int) -> np.ndarray:
     return np.clip(x >> shift, -128, 127).astype(np.int32)
 
 
-def forward_dct_blocks(blocks: np.ndarray, k: int) -> np.ndarray:
-    """blocks: (N, 8, 8) uint8 -> (N, 8, 8) int coefficients via approx GEMM."""
+def forward_dct_blocks(blocks: np.ndarray, k: int = None,
+                       policy=None) -> np.ndarray:
+    """blocks: (N, 8, 8) uint8 -> (N, 8, 8) int coefficients under the policy.
+
+    ``policy`` may be None (paper-default backend at factor ``k``), a backend
+    name, or a ``GemmPolicy``; ``k`` (when given) overrides the policy's
+    approximation factor.
+    """
+    pol = gemm.as_policy(policy, backend=DEFAULT_BACKEND, k=k)
     x = blocks.astype(np.int32) - 128
-    t = np.broadcast_to(T8, x.shape)
-    s1 = _sat8(_gemm(t, x, k), 7)                  # T . X, rescale to int8
-    coeff = _gemm(s1, np.broadcast_to(T8.T.copy(), x.shape), k)
+    # T8 is the fixed weight of both stages: left operand of T.X, right
+    # operand (transposed) of (T.X >> 7).T^T — prepared once per call batch.
+    t_fwd = gemm.prepare_weights_cached(T8, pol, layer="dct.fwd", side="left")
+    t_tr = gemm.prepare_weights_cached(T8.T, pol, layer="dct.fwd",
+                                       side="right")
+    s1 = _sat8(np.asarray(gemm.execute(pol, t_fwd, x, layer="dct.fwd")), 7)
+    coeff = np.asarray(gemm.execute(pol, s1, t_tr, layer="dct.fwd"))
     return coeff
 
 
@@ -67,20 +79,22 @@ def inverse_dct_blocks(coeff: np.ndarray) -> np.ndarray:
     return x + 128.0
 
 
-def run(size: int = 256, ks=(0, 2, 4, 6, 8), seed: int = 0) -> Dict[int, Dict]:
+def run(size: int = 256, ks=(0, 2, 4, 6, 8), seed: int = 0,
+        policy=None) -> Dict[int, Dict]:
     """Returns {k: {psnr, ssim}} of approx-DCT reconstruction vs exact-DCT
-    reconstruction (the paper's methodology)."""
+    reconstruction (the paper's methodology) under the chosen backend."""
+    pol = gemm.as_policy(policy, backend=DEFAULT_BACKEND)
     img = images.test_image(size, seed)
     blocks = images.to_blocks(img)
     h = w = size
     recon = {}
     for k in ks:
-        coeff = forward_dct_blocks(blocks, k)
+        coeff = forward_dct_blocks(blocks, k, policy=pol)
         rec = inverse_dct_blocks(coeff)
         recon[k] = images.from_blocks(np.clip(rec, 0, 255), h, w)
     exact = recon.get(0)
     if exact is None:
-        coeff = forward_dct_blocks(blocks, 0)
+        coeff = forward_dct_blocks(blocks, 0, policy=pol)
         exact = images.from_blocks(np.clip(inverse_dct_blocks(coeff), 0, 255), h, w)
     out = {}
     for k in ks:

@@ -1,8 +1,14 @@
 """Kernel-based edge detection through the approximate systolic GEMM (paper §V-B).
 
 The Laplacian convolution is lowered to im2col GEMM — (H*W, 9) x (9, 1) — and
-executed with the approximate PE product-table model; output quality is measured
-against the exact-arithmetic output of the identical pipeline.
+routed through ``GemmPolicy``; output quality is measured against the
+exact-arithmetic output of the identical pipeline.
+
+The convolution kernel is a fixed weight: it is prepared once per k
+(``gemm.prepare_weights``) so the weight-stationary backends (``approx_delta``
+rank-r factor, ``approx_onehot`` T_B) amortize their precompute across every
+im2col row. The default ``approx_lut`` backend reproduces the paper's
+product-table model bit-for-bit.
 """
 from __future__ import annotations
 
@@ -10,11 +16,13 @@ from typing import Dict
 
 import numpy as np
 
-from repro.core import emulate, errors
+from repro.core import errors, gemm
 from . import images
 
 LAPLACIAN = np.array([[0, 1, 0], [1, -4, 1], [0, 1, 0]], dtype=np.int32)
 LAPLACIAN8 = np.array([[1, 1, 1], [1, -8, 1], [1, 1, 1]], dtype=np.int32)
+
+DEFAULT_BACKEND = "approx_lut"
 
 
 def im2col(img: np.ndarray, kh: int = 3, kw: int = 3) -> np.ndarray:
@@ -23,14 +31,17 @@ def im2col(img: np.ndarray, kh: int = 3, kw: int = 3) -> np.ndarray:
     return v.reshape(-1, kh * kw)
 
 
-def conv_gemm(img: np.ndarray, kernel: np.ndarray, k: int) -> np.ndarray:
-    """Approximate-GEMM convolution. img uint8 -> int32 response map."""
+def conv_gemm(img: np.ndarray, kernel: np.ndarray, k: int,
+              policy=None) -> np.ndarray:
+    """Approximate-GEMM convolution under the policy. img uint8 -> int32
+    response map."""
+    pol = gemm.as_policy(policy, backend=DEFAULT_BACKEND, k=k)
     h, w = img.shape
     cols = im2col(img.astype(np.int32) - 128)        # center into int8 range
     kflat = kernel.reshape(-1, 1)
-    table = emulate.product_table(8, k, True, 24)
-    out = table[cols & 255, kflat[None, :, 0] & 255].sum(axis=1)
-    return out.reshape(h - 2, w - 2)
+    prep = gemm.prepare_weights_cached(kflat, pol, layer="edge.conv")
+    out = np.asarray(gemm.execute(pol, cols, prep, layer="edge.conv"))
+    return out[:, 0].reshape(h - 2, w - 2)
 
 
 def edge_map(resp: np.ndarray) -> np.ndarray:
@@ -40,12 +51,13 @@ def edge_map(resp: np.ndarray) -> np.ndarray:
 
 
 def run(size: int = 256, ks=(2, 4, 6, 8), seed: int = 0,
-        kernel: np.ndarray = LAPLACIAN) -> Dict[int, Dict]:
+        kernel: np.ndarray = LAPLACIAN, policy=None) -> Dict[int, Dict]:
+    pol = gemm.as_policy(policy, backend=DEFAULT_BACKEND)
     img = images.test_image(size, seed)
-    exact = edge_map(conv_gemm(img, kernel, 0))
+    exact = edge_map(conv_gemm(img, kernel, 0, policy=pol))
     out = {}
     for k in ks:
-        approx = edge_map(conv_gemm(img, kernel, k))
+        approx = edge_map(conv_gemm(img, kernel, k, policy=pol))
         out[k] = {"psnr": errors.psnr(exact, approx),
                   "ssim": errors.ssim(exact, approx)}
     return out

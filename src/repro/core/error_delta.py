@@ -42,6 +42,7 @@ from __future__ import annotations
 import functools
 from typing import NamedTuple, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -210,6 +211,201 @@ def defect_gather_matmul(a_u: jnp.ndarray, b_u: jnp.ndarray,
     _, _, defect_flat = _device_factors(fac.n_bits, fac.k, fac.signed,
                                         fac.acc_bits, fac.rank)
     return lut.table_gather_matmul(a_u, b_u, defect_flat, span=span)
+
+
+class PreparedDelta(NamedTuple):
+    """Weight-stationary half of the delta decomposition for a fixed operand.
+
+    For a fixed weight matrix the operand-dependent factor of the correction —
+    ``G_B[kk, j, n] = g[j, b_u[kk, n]]`` when the weights sit on the right,
+    ``F_A[m, kk, j] = f[a_u[m, kk], j]`` when they sit on the left (the DCT
+    matrix multiplies from the left; the product table is not symmetric, so
+    the operand order cannot be swapped) — is computed **once** and reused for
+    every batch of activations: each call then costs one exact int8 matmul
+    plus one rank-r float32 contraction and only the *moving* operand's
+    gathers.
+
+    Because ``E`` only sees the fixed operand through its low-k bit patterns,
+    the factorization is further specialized to the ``d`` *distinct* patterns
+    the weights actually reach (``_restricted_factors``): an SVD of the
+    restricted table ``E[:, used]`` (or ``E[used, :]``) gives an exact rank
+    ``r' <= min(r, d)`` — e.g. the 8x8 DCT matrix needs rank 10 instead of 21
+    at k=6, the Laplacian kernel rank 2 — shrinking the per-call gather and
+    contraction by the same factor. Restriction applies only at the exact
+    rank; explicitly truncated ranks keep the generic factors so the
+    ``delta_tol`` semantics (and the defect table that cancels truncation)
+    stay identical to the unprepared path.
+    """
+    side: str              # "right": fixed B (K, N); "left": fixed A (M, K)
+    fac: DeltaFactors
+    rank: int              # effective (possibly weight-restricted) rank
+    w_u: jnp.ndarray       # fixed operand's unsigned bit patterns, int32
+    w_s: jnp.ndarray       # fixed operand's signed (or unsigned) values, int32
+    gather_tab: jnp.ndarray  # moving-side factor, (r', span) float32
+    factor: jnp.ndarray    # stationary factor: (K, r', N) right / (M, K, r') left
+
+
+def _signed_values(w_u: jnp.ndarray, n_bits: int, signed: bool) -> jnp.ndarray:
+    half = (1 << n_bits) >> 1
+    return (w_u ^ half) - half if signed else w_u
+
+
+def _base_matmul(a_s: jnp.ndarray, b_s: jnp.ndarray, signed: bool) -> jnp.ndarray:
+    """Exact integer base product. Signed int8 operands take the MXU int8 path
+    (int32 accumulate); unsigned values don't fit int8 and use an int32 dot."""
+    if signed:
+        return jax.lax.dot_general(
+            a_s.astype(jnp.int8), b_s.astype(jnp.int8), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32)
+    return jnp.matmul(a_s, b_s)
+
+
+# Restricted SVDs stay cheap: above this many distinct patterns the generic
+# factors are reused (the rank gain vanishes as d approaches the table rank).
+RESTRICT_MAX_PATTERNS = 128
+
+
+@functools.lru_cache(maxsize=256)
+def _restricted_factors(n_bits: int, k: int, signed: bool, acc_bits: int,
+                        axis: int, patterns: Tuple[int, ...]):
+    """Exact-rank factors of E restricted to the fixed operand's patterns.
+
+    ``axis=1`` restricts columns (fixed right operand indexes E by its b
+    patterns), ``axis=0`` rows. Returns (f, g, rank) with f (span, r') /
+    g (r', d) for axis=1 and f (d, r') / g (r', span) for axis=0 — the
+    d-sized side is indexed by position in ``patterns``. The restricted
+    reconstruction is rounding-exact by construction (r' <= d suffices)."""
+    e = error_table(n_bits, k, signed, acc_bits).astype(np.float64)
+    sub = e[:, list(patterns)] if axis == 1 else e[list(patterns), :]
+    u, s, vt = np.linalg.svd(sub, full_matrices=False)
+    rank = len(s)
+    for r in range(len(s) + 1):
+        recon = (u[:, :r] * s[:r]) @ vt[:r]
+        if np.abs(recon - sub).max() <= EXACT_RECON_EPS:
+            rank = r
+            break
+    sq = np.sqrt(s[:rank])
+    f = (u[:, :rank] * sq).astype(np.float32)
+    g = (sq[:, None] * vt[:rank]).astype(np.float32)
+    return f, g, rank
+
+
+def _low_patterns(w_u: np.ndarray, n_bits: int, k: int) -> Tuple[int, ...]:
+    low_mask = (1 << min(k, n_bits)) - 1
+    return tuple(int(v) for v in np.unique(w_u & low_mask))
+
+
+def prepare_delta(w, *, side: str = "right", n_bits: int = 8, k: int = 4,
+                  signed: bool = True, acc_bits: int = 24,
+                  rank: Optional[int] = None,
+                  tol: Optional[float] = None) -> PreparedDelta:
+    """Precompute the fixed operand's correction factor (G_B or F_A) once."""
+    if side not in ("right", "left"):
+        raise ValueError(f"side must be 'right' or 'left', got {side!r}")
+    fac = delta_factors(n_bits, k, signed, acc_bits, rank=rank, tol=tol)
+    span = 1 << n_bits
+    low_mask = (1 << min(k, n_bits)) - 1
+    w_u = jnp.asarray(w, jnp.int32) & (span - 1)
+    if w_u.ndim != 2:
+        raise ValueError(f"prepared operand must be 2D, got shape {w_u.shape}")
+    w_s = _signed_values(w_u, n_bits, signed)
+    w_np = np.asarray(w_u)
+    patterns = _low_patterns(w_np, n_bits, k) if fac.rank else ()
+    restrict = (fac.rank > 0 and fac.exact
+                and len(patterns) <= RESTRICT_MAX_PATTERNS)
+    if restrict:
+        # E depends on the fixed operand only through its low-k bit patterns;
+        # factor the reached sub-table at its own (smaller) exact rank.
+        axis = 1 if side == "right" else 0
+        f_np, g_np, r_eff = _restricted_factors(n_bits, k, signed, acc_bits,
+                                                axis, patterns)
+        pos = np.searchsorted(np.asarray(patterns), w_np & low_mask)
+        if side == "right":
+            kd, n = w_np.shape
+            gather_tab = jnp.asarray(f_np.T.copy())            # (r', span)
+            g_b = g_np[:, pos]                                 # (r', K, N)
+            factor = jnp.asarray(np.transpose(g_b, (1, 0, 2)).copy())
+        else:
+            m, kd = w_np.shape
+            gather_tab = jnp.asarray(g_np)                     # (r', span)
+            factor = jnp.asarray(f_np[pos])                    # (M, K, r')
+    else:
+        r_eff = fac.rank
+        if r_eff == 0:
+            gather_tab = jnp.zeros((0, span), jnp.float32)
+            rows, cols = w_np.shape
+            shape = ((rows, 0, cols) if side == "right" else
+                     (rows, cols, 0))
+            factor = jnp.zeros(shape, jnp.float32)
+        elif side == "right":
+            kd, n = w_np.shape
+            gather_tab = jnp.asarray(np.ascontiguousarray(fac.f.T))
+            g_b = fac.g[:, w_np]                               # (r, K, N)
+            factor = jnp.asarray(np.transpose(g_b, (1, 0, 2)).copy())
+        else:
+            gather_tab = jnp.asarray(fac.g)                    # (r, span)
+            factor = jnp.asarray(fac.f[w_np])                  # (M, K, r)
+    return PreparedDelta(side, fac, r_eff, w_u, w_s, gather_tab, factor)
+
+
+@functools.partial(jax.jit, static_argnames=("side", "rank", "n_bits",
+                                             "signed", "use_defect"))
+def _delta_prepared_impl(x, w_u, w_s, factor, gather_tab, defect_flat, *,
+                         side: str, rank: int, n_bits: int, signed: bool,
+                         use_defect: bool):
+    span = 1 << n_bits
+    x_u = jnp.asarray(x, jnp.int32) & (span - 1)
+    x_s = _signed_values(x_u, n_bits, signed)
+    if side == "right":
+        a_u, b_u = x_u, w_u
+        base = _base_matmul(x_s, w_s, signed)
+    else:
+        a_u, b_u = w_u, x_u
+        base = _base_matmul(w_s, x_s, signed)
+    if rank:
+        # transposed gather — r' row-contiguous sweeps over the flat moving
+        # indices (far faster than per-index rank-r row gathers on CPU), then
+        # one two-axis contraction against the precomputed stationary factor
+        mov = jnp.take(gather_tab, x_u.reshape(-1), axis=1)
+        if side == "right":
+            m, kd = x_u.shape
+            corr = jax.lax.dot_general(                 # (r,M,K) x (K,r,N)
+                mov.reshape(rank, m, kd), factor, (((0, 2), (1, 0)), ((), ())))
+        else:
+            kd, n = x_u.shape
+            corr = jax.lax.dot_general(                 # (M,K,r) x (r,K,N)
+                factor, mov.reshape(rank, kd, n), (((1, 2), (1, 0)), ((), ())))
+    else:
+        corr = jnp.zeros(base.shape, jnp.float32)
+    if use_defect:
+        from . import lut
+        corr = corr + lut.table_gather_matmul(a_u, b_u, defect_flat, span=span)
+    return base + jnp.round(corr).astype(jnp.int32)
+
+
+def delta_matmul_prepared(x, prep: PreparedDelta, *,
+                          apply_residual: bool = True) -> jnp.ndarray:
+    """Weight-stationary delta GEMM: only the moving operand ``x`` is gathered.
+
+    ``x`` is the activations — (M, K) when the prepared weights are on the
+    right, (K, N) when on the left. The whole call is one jit'd fusion of the
+    exact int8 base matmul, the moving operand's rank-r' gathers, and the
+    correction contraction against the precomputed stationary factor.
+    Bit-identical to ``delta_matmul_ref`` / ``lut.lut_matmul`` at the exact
+    rank and at any rank with ``apply_residual=True`` (single global rounding
+    over correction + defect, exact while K·max|E|·eps_f32 stays far below
+    0.5 — all app workloads)."""
+    fac = prep.fac
+    use_defect = apply_residual and not fac.exact
+    if use_defect:
+        _, _, defect_flat = _device_factors(fac.n_bits, fac.k, fac.signed,
+                                            fac.acc_bits, fac.rank)
+    else:
+        defect_flat = jnp.zeros((1,), jnp.float32)
+    return _delta_prepared_impl(x, prep.w_u, prep.w_s, prep.factor,
+                                prep.gather_tab, defect_flat, side=prep.side,
+                                rank=prep.rank, n_bits=fac.n_bits,
+                                signed=fac.signed, use_defect=use_defect)
 
 
 def delta_matmul_ref(a, b, *, k: int = 4, n_bits: int = 8, signed: bool = True,

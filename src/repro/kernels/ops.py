@@ -9,13 +9,15 @@ real Mosaic kernels).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+from typing import Callable, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import error_delta
+from repro.core import error_delta, lut
 from . import approx_gemm, delta_gemm, systolic_gemm
 
 
@@ -164,3 +166,115 @@ def approx_delta_matmul(a: jnp.ndarray, b: jnp.ndarray, *, k: int = 4,
         # per-block-rounded correction (== E[0,0] exactly at the exact rank)
         out = out - k_pad * int(np.round(float(fac.f[0] @ fac.g[:, 0])))
     return out
+
+
+# --- weight-stationary prepared operands + batched app workloads ------------
+
+@dataclasses.dataclass(frozen=True)
+class PreparedOperand:
+    """A fixed GEMM operand with its backend-specific precompute done once.
+
+    Built by ``prepare_operand`` (or ``core.gemm.prepare_weights``) for weight
+    matrices that are reused across calls — the DCT matrix, convolution
+    kernels, CNN layer weights. ``side`` says which operand of the product the
+    matrix is: ``"right"`` for ``x @ W``, ``"left"`` for ``W @ x`` (the
+    approximate product table is not symmetric, so the two are distinct).
+
+    Precomputes per backend: ``approx_delta`` stores the rank-r ``G_B`` /
+    ``F_A`` correction factor (core/error_delta.PreparedDelta);
+    ``approx_onehot`` stores the (K·2^N, N) ``T_B`` table (right side only —
+    a fixed left operand precomputes nothing, T_B then depends on the moving
+    operand). The remaining backends are stateless and store only the values.
+    """
+    backend: str
+    side: str
+    k: int
+    n_bits: int
+    acc_bits: int
+    values: jnp.ndarray
+    delta: Optional[error_delta.PreparedDelta] = None
+    t_b: Optional[jnp.ndarray] = None
+    rank: Optional[int] = None
+    tol: Optional[float] = None
+
+
+def prepare_operand(w, *, backend: str, k: int = 4, n_bits: int = 8,
+                    acc_bits: int = 24, side: str = "right",
+                    rank: int | None = None,
+                    tol: float | None = None) -> PreparedOperand:
+    """Precompute whatever ``backend`` can amortize for fixed operand ``w``."""
+    if side not in ("right", "left"):
+        raise ValueError(f"side must be 'right' or 'left', got {side!r}")
+    w = jnp.asarray(w, jnp.int32)
+    if w.ndim != 2:
+        raise ValueError(f"prepared operand must be 2D, got shape {w.shape}")
+    delta = t_b = None
+    if backend == "approx_delta":
+        delta = error_delta.prepare_delta(w, side=side, n_bits=n_bits, k=k,
+                                          acc_bits=acc_bits, rank=rank, tol=tol)
+    elif backend == "approx_onehot" and side == "right":
+        t_b = lut.build_onehot_weights(np.asarray(w), n_bits=n_bits, k=k,
+                                       acc_bits=acc_bits)
+    return PreparedOperand(backend, side, k, n_bits, acc_bits, w, delta, t_b,
+                           rank, tol)
+
+
+def prepared_matmul(x, prep: PreparedOperand) -> jnp.ndarray:
+    """2D integer GEMM of moving operand ``x`` against a prepared operand."""
+    x = jnp.asarray(x, jnp.int32)
+    a, b = (x, prep.values) if prep.side == "right" else (prep.values, x)
+    backend = prep.backend
+    if backend == "exact":
+        return jnp.matmul(a, b)
+    if backend == "mxu_int8":
+        return systolic_matmul(a, b)
+    if backend == "approx_lut":
+        return approx_matmul(a, b, k=prep.k, n_bits=prep.n_bits,
+                             acc_bits=prep.acc_bits)
+    if backend == "approx_oracle":
+        from repro.core import emulate
+        return emulate.matmul_oracle(a, b, n_bits=prep.n_bits, k=prep.k,
+                                     acc_bits=prep.acc_bits)
+    if backend == "approx_onehot":
+        t_b = prep.t_b
+        if t_b is None:     # left-fixed operand: T_B depends on the moving b
+            t_b = lut.build_onehot_weights(np.asarray(b), n_bits=prep.n_bits,
+                                           k=prep.k, acc_bits=prep.acc_bits)
+        return lut.onehot_matmul(a, t_b, n_bits=prep.n_bits)
+    if backend == "approx_delta":
+        return error_delta.delta_matmul_prepared(x, prep.delta)
+    raise ValueError(f"unknown backend {backend!r}")
+
+
+def batched_app_matmul(matmul2d: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray],
+                       a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Pad-and-batch shim: map batched app GEMMs onto the 2D kernel wrappers.
+
+    * ``(..., M, K) x (K, N)`` — batch flattened into the M (rows) dimension.
+    * ``(M, K) x (..., K, N)`` — batch flattened into the N (columns)
+      dimension. The operand order is preserved (no transpose trick): the
+      approximate product table is not symmetric, so ``T @ X`` computed as
+      ``(X^T @ T^T)^T`` would change the approximate bits.
+
+    The 2D wrappers then pad to block multiples, so ``(N, 8, 8)`` workloads
+    (DCT blocks, im2col tiles) run on the same Pallas kernels as big GEMMs.
+    At most one operand may carry batch dimensions.
+    """
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    if a.ndim == 2 and b.ndim == 2:
+        return matmul2d(a, b)
+    if a.ndim > 2 and b.ndim > 2:
+        raise ValueError(
+            f"at most one batched operand, got shapes {a.shape} x {b.shape}")
+    if b.ndim == 2:                                   # (..., M, K) x (K, N)
+        lead = a.shape[:-2]
+        m, kd = a.shape[-2:]
+        out = matmul2d(a.reshape(-1, kd), b)
+        return out.reshape(*lead, m, b.shape[-1])
+    lead = b.shape[:-2]                               # (M, K) x (..., K, N)
+    kd, n = b.shape[-2:]
+    b2 = jnp.moveaxis(b.reshape(-1, kd, n), 1, 0).reshape(kd, -1)
+    out = matmul2d(a, b2)                             # (M, batch*N)
+    m = a.shape[0]
+    return jnp.moveaxis(out.reshape(m, -1, n), 0, 1).reshape(*lead, m, n)

@@ -1,0 +1,175 @@
+"""Property tests for the weight-stationary prepared-operand path and the
+pad-and-batch shim (hypothesis, with the PR-1 deterministic fallback).
+
+Invariants:
+* ``prepare_delta`` + ``delta_matmul_prepared`` is bit-identical to the
+  unprepared ``approx_delta`` path (kernel wrapper and jnp reference) for
+  random shapes, ranks, and signedness, on both operand sides.
+* The pad-and-batch shim round-trips batched ``(L, M, K) x (K, N)`` and
+  ``(M, K) x (L, K, N)`` workloads (non-multiple-of-8 shapes included)
+  against a per-item 2D loop.
+* ``gemm.execute`` rejects stale/mis-sided prepared operands.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fallback, see _hypothesis_fallback.py
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.core import error_delta, gemm, lut
+from repro.kernels import ops
+
+
+def _rand(shape, rng, lo=-128, hi=128):
+    return jnp.asarray(rng.integers(lo, hi, shape), jnp.int32)
+
+
+# --- prepared == unprepared (property) --------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 32), st.integers(1, 32), st.integers(1, 32),
+       st.integers(0, 7), st.integers(0, 1))
+def test_property_prepared_matches_unprepared(m, kd, n, kf, signed):
+    signed = bool(signed)
+    rng = np.random.default_rng(m * 7919 + kd * 131 + n * 17 + kf * 3 + signed)
+    lo, hi = (-128, 128) if signed else (0, 256)
+    a, b = _rand((m, kd), rng, lo, hi), _rand((kd, n), rng, lo, hi)
+    want = np.asarray(error_delta.delta_matmul_ref(a, b, k=kf, signed=signed))
+    prep_r = error_delta.prepare_delta(b, side="right", k=kf, signed=signed)
+    np.testing.assert_array_equal(
+        np.asarray(error_delta.delta_matmul_prepared(a, prep_r)), want)
+    prep_l = error_delta.prepare_delta(a, side="left", k=kf, signed=signed)
+    np.testing.assert_array_equal(
+        np.asarray(error_delta.delta_matmul_prepared(b, prep_l)), want)
+    # and the unprepared path is itself the gather-table ground truth
+    np.testing.assert_array_equal(
+        want, np.asarray(lut.lut_matmul(a, b, k=kf, signed=signed)))
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(1, 24), st.integers(1, 24), st.integers(1, 24),
+       st.integers(2, 7), st.integers(0, 10))
+def test_property_prepared_truncated_rank_stays_exact(m, kd, n, kf, rank):
+    """apply_residual restores bit-exactness at any correction rank."""
+    rng = np.random.default_rng(m * 311 + kd * 73 + n * 11 + kf + rank)
+    a, b = _rand((m, kd), rng), _rand((kd, n), rng)
+    want = np.asarray(lut.lut_matmul(a, b, k=kf))
+    prep = error_delta.prepare_delta(b, side="right", k=kf, rank=rank)
+    np.testing.assert_array_equal(
+        np.asarray(error_delta.delta_matmul_prepared(a, prep)), want)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 20), st.integers(1, 20), st.integers(1, 20),
+       st.integers(0, 7))
+def test_property_ops_prepared_matmul_matches_kernel(m, kd, n, kf):
+    """The ops-level PreparedOperand dispatch equals the Pallas kernel path."""
+    rng = np.random.default_rng(m * 101 + kd * 37 + n * 13 + kf)
+    a, b = _rand((m, kd), rng), _rand((kd, n), rng)
+    want = np.asarray(ops.approx_delta_matmul(a, b, k=kf))
+    prep = ops.prepare_operand(b, backend="approx_delta", k=kf)
+    np.testing.assert_array_equal(np.asarray(ops.prepared_matmul(a, prep)),
+                                  want)
+
+
+# --- pad-and-batch shim (property) ------------------------------------------
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 5), st.integers(1, 12), st.integers(1, 12),
+       st.integers(1, 12), st.integers(0, 7))
+def test_property_shim_batched_right_roundtrip(batch, m, kd, n, kf):
+    rng = np.random.default_rng(batch * 997 + m * 89 + kd * 23 + n * 7 + kf)
+    a = _rand((batch, m, kd), rng)
+    b = _rand((kd, n), rng)
+    pol = gemm.GemmPolicy(backend="approx_delta", k=kf)
+    prep = gemm.prepare_weights(b, pol)
+    for out in (gemm.execute(pol, a, b), gemm.execute(pol, a, prep)):
+        out = np.asarray(out)
+        assert out.shape == (batch, m, n)
+        for i in range(batch):
+            np.testing.assert_array_equal(
+                out[i], np.asarray(lut.lut_matmul(a[i], b, k=kf)))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 5), st.integers(1, 12), st.integers(1, 12),
+       st.integers(1, 12), st.integers(0, 7))
+def test_property_shim_batched_left_roundtrip(batch, m, kd, n, kf):
+    """Fixed left operand (the DCT-matrix case): batch flattened into columns,
+    operand order preserved (the product table is not symmetric)."""
+    rng = np.random.default_rng(batch * 499 + m * 83 + kd * 29 + n * 5 + kf)
+    a = _rand((m, kd), rng)
+    b = _rand((batch, kd, n), rng)
+    pol = gemm.GemmPolicy(backend="approx_delta", k=kf)
+    prep = gemm.prepare_weights(a, pol, side="left")
+    for out in (gemm.execute(pol, a, b), gemm.execute(pol, prep, b)):
+        out = np.asarray(out)
+        assert out.shape == (batch, m, n)
+        for i in range(batch):
+            np.testing.assert_array_equal(
+                out[i], np.asarray(lut.lut_matmul(a, b[i], k=kf)))
+
+
+def test_shim_multi_lead_dims_and_lut_backend():
+    rng = np.random.default_rng(0)
+    a = _rand((2, 3, 5, 7), rng)                    # lead dims (2, 3)
+    b = _rand((7, 4), rng)
+    pol = gemm.GemmPolicy(backend="approx_lut", k=4)
+    out = np.asarray(gemm.execute(pol, a, b))
+    assert out.shape == (2, 3, 5, 4)
+    np.testing.assert_array_equal(
+        out[1, 2], np.asarray(lut.lut_matmul(a[1, 2], b, k=4)))
+
+
+def test_shim_rejects_double_batch():
+    rng = np.random.default_rng(1)
+    with pytest.raises(ValueError, match="batched"):
+        ops.batched_app_matmul(jnp.matmul, _rand((2, 3, 4), rng),
+                               _rand((2, 4, 5), rng))
+
+
+# --- guard rails ------------------------------------------------------------
+
+def test_execute_rejects_stale_prepared():
+    rng = np.random.default_rng(2)
+    a, b = _rand((6, 8), rng), _rand((8, 4), rng)
+    prep = gemm.prepare_weights(b, gemm.GemmPolicy(backend="approx_delta", k=4))
+    with pytest.raises(ValueError, match="stale"):
+        gemm.execute(gemm.GemmPolicy(backend="approx_delta", k=6), a, prep)
+    with pytest.raises(ValueError, match="stale"):
+        gemm.execute(gemm.GemmPolicy(backend="approx_lut", k=4), a, prep)
+    with pytest.raises(ValueError, match="stale"):
+        gemm.execute(gemm.GemmPolicy(backend="approx_delta", k=4,
+                                     delta_rank=3), a, prep)
+
+
+def test_execute_rejects_wrong_side():
+    rng = np.random.default_rng(3)
+    a, b = _rand((6, 8), rng), _rand((8, 4), rng)
+    pol = gemm.GemmPolicy(backend="approx_delta", k=4)
+    prep = gemm.prepare_weights(b, pol)                      # side="right"
+    with pytest.raises(ValueError, match="side"):
+        gemm.execute(pol, prep, b)
+    with pytest.raises(ValueError, match="prepared"):
+        gemm.execute(pol, prep, prep)
+
+
+def test_prepare_weights_resolves_layer_overrides():
+    pol = gemm.GemmPolicy(backend="approx_delta", k=4,
+                          overrides={"tail": "exact"})
+    rng = np.random.default_rng(4)
+    b = _rand((8, 4), rng)
+    assert gemm.prepare_weights(b, pol, layer="head").backend == "approx_delta"
+    assert gemm.prepare_weights(b, pol, layer="tail").backend == "exact"
+
+
+def test_prepared_onehot_caches_t_b():
+    rng = np.random.default_rng(5)
+    a, b = _rand((10, 6), rng), _rand((6, 4), rng)
+    prep = ops.prepare_operand(b, backend="approx_onehot", k=4)
+    assert prep.t_b is not None and prep.t_b.shape == (6 * 256, 4)
+    np.testing.assert_array_equal(np.asarray(ops.prepared_matmul(a, prep)),
+                                  np.asarray(lut.lut_matmul(a, b, k=4)))
