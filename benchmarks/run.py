@@ -274,6 +274,85 @@ def apps_bench(fast: bool = False):
     print(f"bench_apps_json,0,{os.path.normpath(path)}")
 
 
+def serve_bound_bench(fast: bool = False):
+    """Decode throughput, bound (weight-stationary) vs unbound params.
+
+    Builds the reduced smollm decode step under ``mxu_int8`` and
+    ``approx_delta`` policies, measures tokens/s with raw params (weights
+    quantized + factors rebuilt every step) vs ``gemm.bind``-bound params
+    (all weight work done once), checks the two decode streams are
+    bit-exact, and records the sweep in BENCH_serve_bound.json.
+    """
+    import json
+    import os
+    import time
+    import jax
+    import jax.numpy as jnp
+    from repro.configs import ARCHS, reduced
+    from repro.core import gemm
+    from repro.models import get_model
+
+    cfg = reduced(ARCHS["smollm-360m"])
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    b, pl = 2, 8
+    gl = 4 if fast else 8
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, pl)), jnp.int32)
+    results = []
+    for backend in ("mxu_int8", "approx_delta"):
+        pol = gemm.GemmPolicy(backend=backend, k=4)
+        dec = jax.jit(lambda p, t, c, pos:
+                      model.decode_step(p, t, c, pos, policy=pol))
+        pre = jax.jit(lambda p, bt, c: model.prefill(p, bt, c, policy=pol))
+        t0 = time.perf_counter()
+        bound = model.bind_params(params, pol)
+        bind_s = time.perf_counter() - t0
+        row = {"backend": backend, "batch": b, "gen_len": gl,
+               "bind_s": round(bind_s, 3)}
+        streams = {}
+        for name, p in (("unbound", params), ("bound", bound)):
+            cache = model.init_cache(b, pl + gl + 1)
+            logits, cache = pre(p, {"tokens": prompts}, cache)
+            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            # warmup decode (compile) — block so async dispatch of the warmup
+            # (and prefill) can't bleed into the timed region
+            jax.block_until_ready(dec(p, tok, cache, jnp.int32(pl)))
+            toks = [np.asarray(tok)]
+            t0 = time.perf_counter()
+            for i in range(gl):
+                logits, cache = dec(p, tok, cache, jnp.int32(pl + i))
+                tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+                toks.append(np.asarray(tok))
+            jax.block_until_ready(logits)
+            dt = time.perf_counter() - t0
+            streams[name] = (np.concatenate(toks, axis=1),
+                             np.asarray(logits))
+            row[f"{name}_us_per_tok"] = round(dt / (b * gl) * 1e6, 1)
+            row[f"{name}_tok_per_s"] = round(b * gl / dt, 1)
+        row["bit_exact"] = bool(
+            np.array_equal(streams["unbound"][1], streams["bound"][1])
+            and np.array_equal(streams["unbound"][0], streams["bound"][0]))
+        row["speedup"] = round(row["unbound_us_per_tok"]
+                               / row["bound_us_per_tok"], 2)
+        results.append(row)
+        print(f"serve_bound_{backend},{row['bound_us_per_tok']:.0f},"
+              f"speedup={row['speedup']}x exact={row['bit_exact']} "
+              f"bind={row['bind_s']}s")
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_serve_bound.json")
+    with open(path, "w") as f:
+        json.dump({"device": jax.default_backend(),
+                   "mode": "interpret" if jax.default_backend() != "tpu"
+                   else "mosaic",
+                   "fast": fast, "arch": "smollm-360m (reduced)",
+                   "note": "bound = gemm.bind(params, policy): weight "
+                           "quantization + backend factors built once; "
+                           "unbound re-derives them inside every decode step",
+                   "results": results}, f, indent=1)
+    print(f"bench_serve_bound_json,0,{os.path.normpath(path)}")
+
+
 def roofline_summary():
     """Dry-run roofline table (reads experiments/dryrun.jsonl if present)."""
     import json
@@ -302,23 +381,34 @@ def roofline_summary():
         print(f"roofline_worst_cell,0,{worst[0]}@{worst[1]:.1%}")
 
 
+BENCHES = {
+    "table1_cells": lambda fast: table1_cells(),
+    "table2_cells": lambda fast: table2_cells(),
+    "table3_pe": lambda fast: table3_pe(),
+    "table4_sa": table4_sa,
+    "table5_errors": table5_errors,
+    "table6_apps": table6_apps,
+    "fig9_fig10_pareto": fig9_fig10_pareto,
+    "latency_wavefront": lambda fast: latency_wavefront(),
+    "kernels_bench": kernels_bench,
+    "gemm_backends_bench": gemm_backends_bench,
+    "apps_bench": apps_bench,
+    "serve_bound_bench": serve_bound_bench,
+    "roofline_summary": lambda fast: roofline_summary(),
+}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("benches", nargs="*", choices=[[], *BENCHES],
+                    help="benchmarks to run (default: all), e.g. "
+                         "`python -m benchmarks.run serve_bound_bench`")
     ap.add_argument("--fast", action="store_true")
     args = ap.parse_args()
+    names = args.benches or list(BENCHES)
     print("name,us_per_call,derived")
-    table1_cells()
-    table2_cells()
-    table3_pe()
-    table4_sa(args.fast)
-    table5_errors(args.fast)
-    table6_apps(args.fast)
-    fig9_fig10_pareto(args.fast)
-    latency_wavefront()
-    kernels_bench(args.fast)
-    gemm_backends_bench(args.fast)
-    apps_bench(args.fast)
-    roofline_summary()
+    for name in names:
+        BENCHES[name](args.fast)
 
 
 if __name__ == "__main__":

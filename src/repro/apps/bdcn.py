@@ -88,7 +88,7 @@ def conv_layer(x: np.ndarray, w: np.ndarray, policy: gemm.GemmPolicy,
     xq = quant.quantize(np.asarray(cols))
     wq = quant.quantize(np.asarray(wmat), axis=0)
     prep = gemm.prepare_weights_cached(wq.values, policy, layer=layer)
-    acc = np.asarray(gemm.execute(policy, xq.values, prep, layer=layer))
+    acc = np.asarray(gemm.dot(xq.values, prep, policy, layer=layer))
     out = acc.astype(np.float64) * np.asarray(xq.scale) * np.asarray(wq.scale)
     out = np.maximum(out, 0.0)                          # ReLU
     return out.T.reshape(c_out, h, wd).astype(np.float32)

@@ -62,8 +62,8 @@ def forward_dct_blocks(blocks: np.ndarray, k: int = None,
     t_fwd = gemm.prepare_weights_cached(T8, pol, layer="dct.fwd", side="left")
     t_tr = gemm.prepare_weights_cached(T8.T, pol, layer="dct.fwd",
                                        side="right")
-    s1 = _sat8(np.asarray(gemm.execute(pol, t_fwd, x, layer="dct.fwd")), 7)
-    coeff = np.asarray(gemm.execute(pol, s1, t_tr, layer="dct.fwd"))
+    s1 = _sat8(np.asarray(gemm.dot(t_fwd, x, pol, layer="dct.fwd")), 7)
+    coeff = np.asarray(gemm.dot(s1, t_tr, pol, layer="dct.fwd"))
     return coeff
 
 

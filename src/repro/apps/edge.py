@@ -40,7 +40,7 @@ def conv_gemm(img: np.ndarray, kernel: np.ndarray, k: int,
     cols = im2col(img.astype(np.int32) - 128)        # center into int8 range
     kflat = kernel.reshape(-1, 1)
     prep = gemm.prepare_weights_cached(kflat, pol, layer="edge.conv")
-    out = np.asarray(gemm.execute(pol, cols, prep, layer="edge.conv"))
+    out = np.asarray(gemm.dot(cols, prep, pol, layer="edge.conv"))
     return out[:, 0].reshape(h - 2, w - 2)
 
 

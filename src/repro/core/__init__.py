@@ -4,7 +4,9 @@ Submodules: pe (Table I cells), emulate (bit-level fused MAC + GEMM oracle),
 lut (fast functional model + one-hot MXU trick), error_delta (exact-plus-delta
 low-rank decomposition of the approximate product), systolic (cycle-accurate
 SA), errors (NMED/MRED/PSNR/SSIM), energy (analytical model from paper tables),
-quant (int8 symmetric quantization), gemm (backend registry / sa_dot).
+quant (int8 symmetric quantization), gemm (backend registry / the unified
+`dot` entry point + `bind` for weight-stationary bound parameter pytrees).
 """
 from . import emulate, energy, error_delta, errors, gemm, lut, pe, quant, systolic  # noqa: F401
-from .gemm import EXACT, GemmPolicy, int_matmul, sa_dot  # noqa: F401
+from .gemm import (EXACT, BoundParams, GemmPolicy, bind, dot,  # noqa: F401
+                   int_matmul, sa_dot)

@@ -217,4 +217,5 @@ def product_table_jnp(n_bits: int = 8, k: int = 0, signed: bool = True,
     gather kernels index into.
     """
     table = product_table(n_bits, k, signed, acc_bits)
-    return jnp.asarray(table.reshape(-1) if flat else table)
+    with jax.ensure_compile_time_eval():   # lru_cache must not capture tracers
+        return jnp.asarray(table.reshape(-1) if flat else table)

@@ -39,6 +39,7 @@ truncation exactly).
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from typing import NamedTuple, Optional, Tuple
 
@@ -175,11 +176,14 @@ def factor_tables_jnp(n_bits: int = 8, k: int = 4, signed: bool = True,
     """
     fac = delta_factors(n_bits, k, signed, acc_bits, rank=rank, tol=tol)
     span = 1 << n_bits
-    if fac.rank == 0:
-        z = jnp.zeros((span,), jnp.float32)
-        return z, z
-    return (jnp.asarray(np.ascontiguousarray(fac.f).reshape(-1)),
-            jnp.asarray(np.ascontiguousarray(fac.g).reshape(-1)))
+    # force eager creation even under an outer jit/scan trace: these are
+    # compile-time constants and the lru_cache must never capture a tracer
+    with jax.ensure_compile_time_eval():
+        if fac.rank == 0:
+            z = jnp.zeros((span,), jnp.float32)
+            return z, z
+        return (jnp.asarray(np.ascontiguousarray(fac.f).reshape(-1)),
+                jnp.asarray(np.ascontiguousarray(fac.g).reshape(-1)))
 
 
 @functools.lru_cache(maxsize=32)
@@ -187,8 +191,9 @@ def _device_factors(n_bits: int, k: int, signed: bool, acc_bits: int,
                     rank: int) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
     """Device-resident (f, g, defect_flat) for the jnp paths, uploaded once."""
     fac = delta_factors(n_bits, k, signed, acc_bits, rank=rank)
-    return (jnp.asarray(fac.f), jnp.asarray(fac.g),
-            jnp.asarray(fac.defect.reshape(-1)))
+    with jax.ensure_compile_time_eval():   # lru_cache must not capture tracers
+        return (jnp.asarray(fac.f), jnp.asarray(fac.g),
+                jnp.asarray(fac.defect.reshape(-1)))
 
 
 def _correction(a_u: jnp.ndarray, b_u: jnp.ndarray, fac: DeltaFactors) -> jnp.ndarray:
@@ -213,7 +218,8 @@ def defect_gather_matmul(a_u: jnp.ndarray, b_u: jnp.ndarray,
     return lut.table_gather_matmul(a_u, b_u, defect_flat, span=span)
 
 
-class PreparedDelta(NamedTuple):
+@dataclasses.dataclass(frozen=True)
+class PreparedDelta:
     """Weight-stationary half of the delta decomposition for a fixed operand.
 
     For a fixed weight matrix the operand-dependent factor of the correction —
@@ -234,15 +240,35 @@ class PreparedDelta(NamedTuple):
     contraction by the same factor. Restriction applies only at the exact
     rank; explicitly truncated ranks keep the generic factors so the
     ``delta_tol`` semantics (and the defect table that cancels truncation)
-    stay identical to the unprepared path.
+    stay identical to the unprepared path. ``prepare_delta(restrict=False)``
+    forces the generic factors — ``core.gemm.bind`` uses this for *stacked*
+    layer weights so every layer shares one rank and the prepared pytrees can
+    ride a ``lax.scan``.
+
+    Registered as a JAX pytree (arrays are children; ``side``/``rank``/the
+    factorization spec are static aux data) so prepared operands can be jit
+    arguments and ``lax.scan`` xs.
     """
     side: str              # "right": fixed B (K, N); "left": fixed A (M, K)
-    fac: DeltaFactors
     rank: int              # effective (possibly weight-restricted) rank
+    spec: Tuple            # (n_bits, k, signed, acc_bits, rank_req, tol_req)
     w_u: jnp.ndarray       # fixed operand's unsigned bit patterns, int32
     w_s: jnp.ndarray       # fixed operand's signed (or unsigned) values, int32
     gather_tab: jnp.ndarray  # moving-side factor, (r', span) float32
     factor: jnp.ndarray    # stationary factor: (K, r', N) right / (M, K, r') left
+
+    @property
+    def fac(self) -> DeltaFactors:
+        n_bits, k, signed, acc_bits, rank_req, tol_req = self.spec
+        return delta_factors(n_bits, k, signed, acc_bits, rank=rank_req,
+                             tol=tol_req)
+
+
+jax.tree_util.register_pytree_node(
+    PreparedDelta,
+    lambda p: ((p.w_u, p.w_s, p.gather_tab, p.factor),
+               (p.side, p.rank, p.spec)),
+    lambda aux, ch: PreparedDelta(aux[0], aux[1], aux[2], *ch))
 
 
 def _signed_values(w_u: jnp.ndarray, n_bits: int, signed: bool) -> jnp.ndarray:
@@ -298,11 +324,20 @@ def _low_patterns(w_u: np.ndarray, n_bits: int, k: int) -> Tuple[int, ...]:
 def prepare_delta(w, *, side: str = "right", n_bits: int = 8, k: int = 4,
                   signed: bool = True, acc_bits: int = 24,
                   rank: Optional[int] = None,
-                  tol: Optional[float] = None) -> PreparedDelta:
-    """Precompute the fixed operand's correction factor (G_B or F_A) once."""
+                  tol: Optional[float] = None,
+                  restrict: bool = True) -> PreparedDelta:
+    """Precompute the fixed operand's correction factor (G_B or F_A) once.
+
+    ``restrict=False`` skips the weight-restricted re-factorization and keeps
+    the generic rank-r factors — the effective rank is then a function of the
+    policy alone, so prepared operands for different weight matrices share one
+    pytree structure (required when stacking per-layer preparations for a
+    ``lax.scan``, as ``core.gemm.bind`` does).
+    """
     if side not in ("right", "left"):
         raise ValueError(f"side must be 'right' or 'left', got {side!r}")
     fac = delta_factors(n_bits, k, signed, acc_bits, rank=rank, tol=tol)
+    spec = (n_bits, k, signed, acc_bits, rank, tol)
     span = 1 << n_bits
     low_mask = (1 << min(k, n_bits)) - 1
     w_u = jnp.asarray(w, jnp.int32) & (span - 1)
@@ -310,8 +345,8 @@ def prepare_delta(w, *, side: str = "right", n_bits: int = 8, k: int = 4,
         raise ValueError(f"prepared operand must be 2D, got shape {w_u.shape}")
     w_s = _signed_values(w_u, n_bits, signed)
     w_np = np.asarray(w_u)
-    patterns = _low_patterns(w_np, n_bits, k) if fac.rank else ()
-    restrict = (fac.rank > 0 and fac.exact
+    patterns = _low_patterns(w_np, n_bits, k) if (restrict and fac.rank) else ()
+    restrict = (restrict and fac.rank > 0 and fac.exact
                 and len(patterns) <= RESTRICT_MAX_PATTERNS)
     if restrict:
         # E depends on the fixed operand only through its low-k bit patterns;
@@ -345,7 +380,7 @@ def prepare_delta(w, *, side: str = "right", n_bits: int = 8, k: int = 4,
         else:
             gather_tab = jnp.asarray(fac.g)                    # (r, span)
             factor = jnp.asarray(fac.f[w_np])                  # (M, K, r)
-    return PreparedDelta(side, fac, r_eff, w_u, w_s, gather_tab, factor)
+    return PreparedDelta(side, r_eff, spec, w_u, w_s, gather_tab, factor)
 
 
 @functools.partial(jax.jit, static_argnames=("side", "rank", "n_bits",

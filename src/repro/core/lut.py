@@ -32,9 +32,8 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from .emulate import product_table, product_table_jnp
+from .emulate import product_table_jnp
 
 
 def table_gather_matmul(a_u: jnp.ndarray, b_u: jnp.ndarray,
@@ -68,14 +67,19 @@ def lut_matmul(a, b, *, n_bits: int = 8, k: int = 4, signed: bool = True,
 
 def build_onehot_weights(b, *, n_bits: int = 8, k: int = 4, signed: bool = True,
                          acc_bits: int = 24) -> jnp.ndarray:
-    """Precompute T_B (K*V, N) for `onehot_matmul` from weight matrix b (K, N)."""
-    table = np.asarray(product_table(n_bits, k, signed, acc_bits))  # (V, V)
+    """Precompute T_B (K*V, N) for `onehot_matmul` from weight matrix b (K, N).
+
+    Pure-jnp gather into the cached device table, so it is traceable: the
+    unbound ``approx_onehot`` model path rebuilds T_B under jit/scan (the cost
+    ``core.gemm.bind`` amortizes away), while prepared operands store it once.
+    """
+    table = product_table_jnp(n_bits, k, signed, acc_bits)  # (V, V) device
     span = 1 << n_bits
-    b_u = np.asarray(b, np.int32) & (span - 1)      # (K, N)
-    t_b = table[:, b_u]                             # (V, K, N)
-    t_b = np.transpose(t_b, (1, 0, 2))              # (K, V, N)
+    b_u = jnp.asarray(b, jnp.int32) & (span - 1)    # (K, N)
+    t_b = jnp.take(table, b_u, axis=1)              # (V, K, N)
+    t_b = jnp.transpose(t_b, (1, 0, 2))             # (K, V, N)
     kk, _, nn = t_b.shape
-    return jnp.asarray(t_b.reshape(kk * span, nn), jnp.float32)
+    return t_b.reshape(kk * span, nn).astype(jnp.float32)
 
 
 def onehot_matmul(a, t_b, *, n_bits: int = 8):

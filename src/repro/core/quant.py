@@ -12,6 +12,7 @@ from typing import NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class Quantized(NamedTuple):
@@ -21,14 +22,38 @@ class Quantized(NamedTuple):
 
 def quantize(x: jnp.ndarray, *, n_bits: int = 8, axis: Optional[int] = None,
              eps: float = 1e-8) -> Quantized:
-    """Symmetric quantization to [-2^{N-1}+1, 2^{N-1}-1]."""
+    """Symmetric quantization to [-2^{N-1}+1, 2^{N-1}-1].
+
+    The scale (and the division) are computed in float32 regardless of the
+    input dtype. Besides precision, this pins bit-parity between inline and
+    stored scales: a bf16 scale would exist as an f32->bf16->bf16->f32
+    convert chain when consumed inline, which XLA's excess-precision folding
+    collapses to the *unrounded* f32 value — so a weight quantized at bind
+    time (scale stored, rounded) and the same weight quantized in-line would
+    dequantize differently. An f32 scale has no narrowing convert to fold.
+
+    For the same reason, narrow-float inputs are re-rounded to their own
+    precision via ``lax.reduce_precision`` (which XLA never folds): a bf16
+    activation produced by an upstream f32 computation may reach this point
+    as a foldable convert pair, and whether the fold fires depends on the
+    surrounding graph — quantizing the pinned value makes the emitted bits a
+    function of the *values*, not of the compilation context.
+    """
     qmax = (1 << (n_bits - 1)) - 1
+    xf = x.astype(jnp.float32)
+    if jnp.issubdtype(x.dtype, jnp.floating) and x.dtype != jnp.float32:
+        fi = jnp.finfo(x.dtype)
+        xf = jax.lax.reduce_precision(xf, fi.nexp, fi.nmant)
     if axis is None:
-        amax = jnp.max(jnp.abs(x))
+        amax = jnp.max(jnp.abs(xf))
     else:
-        amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
-    scale = jnp.maximum(amax, eps) / qmax
-    q = jnp.clip(jnp.round(x / scale), -qmax, qmax).astype(jnp.int32)
+        amax = jnp.max(jnp.abs(xf), axis=axis, keepdims=True)
+    # multiply by the host-computed reciprocal instead of dividing by qmax:
+    # XLA rewrites division by a constant into reciprocal-multiply inside jit
+    # but not in eager mode — a one-ulp scale difference that flips boundary
+    # values, breaking eager(bind)-vs-jit(inline) quantization parity
+    scale = jnp.maximum(amax, eps) * np.float32(1.0 / qmax)
+    q = jnp.clip(jnp.round(xf / scale), -qmax, qmax).astype(jnp.int32)
     return Quantized(q, scale)
 
 

@@ -176,8 +176,8 @@ class PreparedOperand:
 
     Built by ``prepare_operand`` (or ``core.gemm.prepare_weights``) for weight
     matrices that are reused across calls — the DCT matrix, convolution
-    kernels, CNN layer weights. ``side`` says which operand of the product the
-    matrix is: ``"right"`` for ``x @ W``, ``"left"`` for ``W @ x`` (the
+    kernels, model layer weights. ``side`` says which operand of the product
+    the matrix is: ``"right"`` for ``x @ W``, ``"left"`` for ``W @ x`` (the
     approximate product table is not symmetric, so the two are distinct).
 
     Precomputes per backend: ``approx_delta`` stores the rank-r ``G_B`` /
@@ -185,6 +185,18 @@ class PreparedOperand:
     ``approx_onehot`` stores the (K·2^N, N) ``T_B`` table (right side only —
     a fixed left operand precomputes nothing, T_B then depends on the moving
     operand). The remaining backends are stateless and store only the values.
+
+    ``scale`` is the dequantization scale attached by ``core.gemm`` when the
+    operand was prepared from *float* weights (per-output-channel): its
+    presence switches ``gemm.dot`` into float mode (quantize the moving
+    operand only, dequantize with ``moving_scale * scale``).
+
+    Registered as a JAX pytree — arrays are children, the backend/shape-free
+    metadata is static aux data — so prepared operands (and whole bound
+    parameter pytrees containing them) can be jit arguments and ``lax.scan``
+    xs. Leaves may carry extra *leading* stack dimensions (stacked per-layer
+    or per-expert preparations built by ``core.gemm.bind``); 2-D consumers
+    slice them off via ``lax.scan`` / ``jax.tree.map`` indexing first.
     """
     backend: str
     side: str
@@ -196,13 +208,29 @@ class PreparedOperand:
     t_b: Optional[jnp.ndarray] = None
     rank: Optional[int] = None
     tol: Optional[float] = None
+    scale: Optional[jnp.ndarray] = None
+
+
+jax.tree_util.register_pytree_node(
+    PreparedOperand,
+    lambda p: ((p.values, p.delta, p.t_b, p.scale),
+               (p.backend, p.side, p.k, p.n_bits, p.acc_bits, p.rank, p.tol)),
+    lambda aux, ch: PreparedOperand(aux[0], aux[1], aux[2], aux[3], aux[4],
+                                    ch[0], ch[1], ch[2], aux[5], aux[6],
+                                    ch[3]))
 
 
 def prepare_operand(w, *, backend: str, k: int = 4, n_bits: int = 8,
                     acc_bits: int = 24, side: str = "right",
                     rank: int | None = None,
-                    tol: float | None = None) -> PreparedOperand:
-    """Precompute whatever ``backend`` can amortize for fixed operand ``w``."""
+                    tol: float | None = None,
+                    restrict: bool = True) -> PreparedOperand:
+    """Precompute whatever ``backend`` can amortize for fixed operand ``w``.
+
+    ``restrict=False`` disables the weight-restricted delta rank so prepared
+    operands of different weights share one pytree structure (see
+    ``error_delta.prepare_delta``).
+    """
     if side not in ("right", "left"):
         raise ValueError(f"side must be 'right' or 'left', got {side!r}")
     w = jnp.asarray(w, jnp.int32)
@@ -211,9 +239,10 @@ def prepare_operand(w, *, backend: str, k: int = 4, n_bits: int = 8,
     delta = t_b = None
     if backend == "approx_delta":
         delta = error_delta.prepare_delta(w, side=side, n_bits=n_bits, k=k,
-                                          acc_bits=acc_bits, rank=rank, tol=tol)
+                                          acc_bits=acc_bits, rank=rank, tol=tol,
+                                          restrict=restrict)
     elif backend == "approx_onehot" and side == "right":
-        t_b = lut.build_onehot_weights(np.asarray(w), n_bits=n_bits, k=k,
+        t_b = lut.build_onehot_weights(w, n_bits=n_bits, k=k,
                                        acc_bits=acc_bits)
     return PreparedOperand(backend, side, k, n_bits, acc_bits, w, delta, t_b,
                            rank, tol)
@@ -238,7 +267,7 @@ def prepared_matmul(x, prep: PreparedOperand) -> jnp.ndarray:
     if backend == "approx_onehot":
         t_b = prep.t_b
         if t_b is None:     # left-fixed operand: T_B depends on the moving b
-            t_b = lut.build_onehot_weights(np.asarray(b), n_bits=prep.n_bits,
+            t_b = lut.build_onehot_weights(b, n_bits=prep.n_bits,
                                            k=prep.k, acc_bits=prep.acc_bits)
         return lut.onehot_matmul(a, t_b, n_bits=prep.n_bits)
     if backend == "approx_delta":
@@ -278,3 +307,26 @@ def batched_app_matmul(matmul2d: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarra
     out = matmul2d(a, b2)                             # (M, batch*N)
     m = a.shape[0]
     return jnp.moveaxis(out.reshape(m, -1, n), 0, 1).reshape(*lead, m, n)
+
+
+def grouped_matmul(matmul2d: Callable[[jnp.ndarray, jnp.ndarray], jnp.ndarray],
+                   a: jnp.ndarray, b) -> jnp.ndarray:
+    """Grouped GEMM shim: ``(G, M, K) x (G, K, N) -> (G, M, N)``.
+
+    Both operands carry the *same* leading group dimension (MoE expert
+    einsums: one weight matrix per expert). The 2D kernel is ``jax.vmap``-ed
+    over the group axis — each group keeps its own quantization/preparation
+    (which a flattening shim could not express) while the jaxpr stays O(1)
+    in the expert count instead of unrolling G subgraphs per GEMM. ``b`` may
+    be a raw ``(G, K, N)`` array or a stacked ``PreparedOperand`` (leading
+    stack dim on every leaf — a registered pytree, so vmap maps it directly);
+    pass a ``matmul2d(a2, b2_or_prep)`` that accepts the corresponding slice.
+    """
+    a = jnp.asarray(a)
+    b_vals = b.values if isinstance(b, PreparedOperand) else jnp.asarray(b)
+    if a.ndim != 3 or b_vals.ndim != 3 or b_vals.shape[0] != a.shape[0]:
+        raise ValueError(f"grouped_matmul wants (G,M,K) x (G,K,N), got "
+                         f"{a.shape} x {b_vals.shape}")
+    if not isinstance(b, PreparedOperand):
+        b = b_vals
+    return jax.vmap(matmul2d)(a, b)

@@ -4,8 +4,13 @@ Debug mode (CPU container): reduced config, greedy-decodes a batch of prompts
 end-to-end — the serving example. Production mode lowers the same step
 functions onto the mesh.
 
+``--backend`` routes every model GEMM through that `GemmPolicy` backend;
+``--bind`` (the default for non-exact backends) binds the parameter pytree
+first (`core.gemm.bind`) so decode runs weight-stationary — weights are
+quantized and backend-prepared once instead of every token.
+
 Run:  PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --debug \
-          --prompt-len 16 --gen-len 16 --batch 4
+          --prompt-len 16 --gen-len 16 --batch 4 --backend mxu_int8 --bind
 """
 from __future__ import annotations
 
@@ -17,6 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCHS, reduced
+from repro.core import gemm
 from repro.models import get_model
 
 
@@ -27,6 +33,13 @@ def main(argv=None):
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--backend", default="exact", choices=gemm.BACKENDS,
+                    help="GemmPolicy backend for every model GEMM")
+    ap.add_argument("--k", type=int, default=4, help="approximation factor")
+    ap.add_argument("--bind", action="store_true",
+                    help="bind params to the policy (weight-stationary decode)")
+    ap.add_argument("--no-bind", dest="bind", action="store_false")
+    ap.set_defaults(bind=None)
     args = ap.parse_args(argv)
 
     cfg = ARCHS[args.arch]
@@ -34,8 +47,15 @@ def main(argv=None):
         cfg = reduced(cfg)
     if cfg.family == "audio":
         raise SystemExit("encoder-only arch has no decode step")
+    policy = gemm.GemmPolicy(backend=args.backend, k=args.k)
+    do_bind = (args.backend != "exact") if args.bind is None else args.bind
     model = get_model(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
+    if do_bind:
+        t0 = time.time()
+        params = model.bind_params(params, policy)
+        print(f"bound params to backend={args.backend} in "
+              f"{time.time() - t0:.2f}s (weight-stationary decode)")
     rng = np.random.default_rng(0)
     b, pl, gl = args.batch, args.prompt_len, args.gen_len
     prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, pl)), jnp.int32)
@@ -45,8 +65,9 @@ def main(argv=None):
         batch["input_embeds"] = jnp.asarray(
             rng.normal(size=(b, max(2, pl // 4), cfg.d_model)), jnp.float32)
 
-    prefill_j = jax.jit(lambda p, bt, c: model.prefill(p, bt, c))
-    decode_j = jax.jit(lambda p, t, c, pos: model.decode_step(p, t, c, pos))
+    prefill_j = jax.jit(lambda p, bt, c: model.prefill(p, bt, c, policy=policy))
+    decode_j = jax.jit(
+        lambda p, t, c, pos: model.decode_step(p, t, c, pos, policy=policy))
 
     t0 = time.time()
     logits, cache = prefill_j(params, batch, cache)

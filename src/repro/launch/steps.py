@@ -89,6 +89,7 @@ def make_train_step(cfg: ModelConfig, hp: TrainHParams,
 
 def make_prefill_step(cfg: ModelConfig, policy: GemmPolicy = EXACT,
                       batch_axes=()):
+    """`params` may be raw or a `gemm.BoundParams` from `bind_serving_params`."""
     model = model_api.get_model(cfg)
 
     def prefill_step(params, batch, cache):
@@ -100,6 +101,10 @@ def make_prefill_step(cfg: ModelConfig, policy: GemmPolicy = EXACT,
 
 def make_decode_step(cfg: ModelConfig, policy: GemmPolicy = EXACT,
                      batch_axes=()):
+    """Decode step builder. Pass `bind_serving_params(cfg, params, policy)`
+    instead of raw params to serve weight-stationary: every weight leaf is
+    quantized + backend-prepared once at bind time, so the per-token step
+    performs zero weight quantization / delta-factor construction."""
     model = model_api.get_model(cfg)
 
     def serve_step(params, token, cache, pos):
@@ -107,6 +112,16 @@ def make_decode_step(cfg: ModelConfig, policy: GemmPolicy = EXACT,
                                  batch_axes=batch_axes)
 
     return serve_step
+
+
+def bind_serving_params(cfg: ModelConfig, params, policy: GemmPolicy, **kw):
+    """Bind a param pytree to the serving policy (see `core.gemm.bind`).
+
+    The returned `BoundParams` drops into the same jit'd prefill/decode steps
+    as raw params. Note: binding is a serving-local transform — the sharded
+    `assemble_*` helpers lower against *raw* param shapes; bind on the loaded
+    (already sharded) params right before entering the serve loop."""
+    return model_api.get_model(cfg).bind_params(params, policy, **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -207,7 +222,8 @@ def assemble_prefill(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
             from repro.models import transformer
             hidden, _, _ = transformer.forward(
                 params, cfg, input_embeds=batch["input_embeds"], policy=policy)
-            return transformer.logits_from_hidden(params, cfg, hidden[:, -1:])
+            return transformer.logits_from_hidden(params, cfg, hidden[:, -1:],
+                                                  policy)
 
         return (enc_step, (params_shape, in_specs), (p_shard, b_shard),
                 NamedSharding(mesh, P()))

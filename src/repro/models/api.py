@@ -14,18 +14,31 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, ShapeSpec
+from repro.core import gemm
 from repro.core.gemm import EXACT, GemmPolicy
 from . import hybrid, transformer, xlstm_model
 
 
 @dataclasses.dataclass(frozen=True)
 class Model:
+    """Family-agnostic model handle.
+
+    Every step function accepts either raw params or a ``gemm.BoundParams``
+    pytree from ``bind_params`` — binding quantizes + backend-prepares each
+    weight leaf once under the policy, so prefill/decode run weight-stationary
+    (zero per-call weight quantization or delta-factor construction).
+    """
     cfg: ModelConfig
     init_params: Callable
     lm_loss: Callable            # (params, batch, policy) -> scalar
     prefill: Callable            # (params, batch, cache, policy) -> (logits, cache)
     decode_step: Callable        # (params, token, cache, pos, policy) -> (logits, cache)
     init_cache: Optional[Callable]
+
+    def bind_params(self, params, policy: GemmPolicy,
+                    **kw) -> "gemm.BoundParams":
+        """Prepare every policy-routed weight leaf once (see ``gemm.bind``)."""
+        return gemm.bind(params, policy, **kw)
 
 
 def get_model(cfg: ModelConfig) -> Model:

@@ -13,7 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.gemm import EXACT, GemmPolicy
+from repro.core.gemm import EXACT, GemmPolicy, dot
 from . import layers as L
 from . import ssm
 
@@ -87,7 +87,7 @@ def _mamba_group_scan(group_params, x, cfg, policy, states):
             out, new_state = ssm.mamba_block(
                 lp_["mamba"], h, cfg,
                 state=ssm.SSMState(st[0], st[1]) if use_state else None,
-                policy=policy)
+                policy=policy, layer="mamba")
             return x_ + out, (new_state.s, new_state.conv)
 
         if not use_state:
@@ -132,10 +132,12 @@ def forward(params, cfg: ModelConfig, *, tokens, cache: Optional[Dict] = None,
             sp["attn"], h, n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
             head_dim=cfg.hd, rope_theta=cfg.rope_theta, q_positions=positions,
             kv_cache=kv, cache_pos=cache_pos, kv_valid_len=kv_valid,
-            causal=True, window=0, softcap=0.0, chunk=attn_chunk, policy=policy)
+            causal=True, window=0, softcap=0.0, chunk=attn_chunk, policy=policy,
+            layer="attn")
         x = x + out
         h = L.rms_norm(x, sp["ln2"], cfg.norm_eps)
-        x = x + L.mlp_block(sp["mlp"], h, act=cfg.act, policy=policy)
+        x = x + L.mlp_block(sp["mlp"], h, act=cfg.act, policy=policy,
+                            layer="mlp")
         if cache is not None:
             new_cache["k"] = new_cache["k"].at[attn_idx].set(kv_new[0])
             new_cache["v"] = new_cache["v"].at[attn_idx].set(kv_new[1])
@@ -169,8 +171,8 @@ def lm_loss(params, cfg: ModelConfig, tokens, *, policy: GemmPolicy = EXACT,
     inp, tgt = tokens[:, :-1], tokens[:, 1:]
     hidden, _ = forward(params, cfg, tokens=inp, policy=policy,
                         batch_axes=batch_axes)
-    logits = jnp.matmul(hidden, params["lm_head"].astype(hidden.dtype))
-    logits = logits.astype(jnp.float32)
+    logits = dot(hidden, L.head_weight(params, hidden.dtype), policy,
+                 layer="lm_head").astype(jnp.float32)
     lse = jax.nn.logsumexp(logits, axis=-1)
     ll = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
     return (lse - ll).mean()
@@ -181,7 +183,8 @@ def prefill(params, cfg, tokens, cache, *, policy=EXACT, attn_chunk=1024,
     hidden, cache = forward(params, cfg, tokens=tokens, cache=cache, cache_pos=0,
                             policy=policy, attn_chunk=attn_chunk,
                             batch_axes=batch_axes)
-    logits = jnp.matmul(hidden[:, -1:], params["lm_head"].astype(hidden.dtype))
+    logits = dot(hidden[:, -1:], L.head_weight(params, hidden.dtype), policy,
+                 layer="lm_head")
     return logits.astype(jnp.float32), cache
 
 
@@ -191,5 +194,6 @@ def decode_step(params, cfg, token, cache, pos, *, policy=EXACT,
     hidden, cache = forward(params, cfg, tokens=token, cache=cache,
                             cache_pos=pos, positions=positions, policy=policy,
                             attn_chunk=attn_chunk, batch_axes=batch_axes)
-    logits = jnp.matmul(hidden, params["lm_head"].astype(hidden.dtype))
+    logits = dot(hidden, L.head_weight(params, hidden.dtype), policy,
+                 layer="lm_head")
     return logits.astype(jnp.float32), cache

@@ -1,8 +1,10 @@
 """Shared neural-net layers: RMSNorm, RoPE, chunked (flash-style) GQA attention
 with sliding-window / softcap support, SwiGLU MLP.
 
-All matmuls route through `core.gemm.sa_dot` so the paper's exact/approximate
-systolic backends are selectable per layer (the framework's first-class feature).
+All matmuls route through the unified `core.gemm.dot` so the paper's
+exact/approximate systolic backends are selectable per layer (the framework's
+first-class feature) and `gemm.bind`-prepared weight leaves run
+weight-stationary.
 Attention is computed with an online-softmax scan over KV chunks so 32k-token
 prefill never materializes an (S, S) score matrix.
 """
@@ -14,7 +16,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.gemm import EXACT, GemmPolicy, sa_dot
+from repro.core.gemm import EXACT, GemmPolicy, dot
 
 BIG_NEG = -2.3819763e38  # min bf16
 
@@ -28,6 +30,16 @@ def constrain_batch(x: jnp.ndarray, batch_axes) -> jnp.ndarray:
     from jax.sharding import PartitionSpec as P
     spec = P(tuple(batch_axes), *([None] * (x.ndim - 1)))
     return jax.lax.with_sharding_constraint(x, spec)
+
+
+def head_weight(params, dtype):
+    """Vocab-projection weight: the untied ``lm_head`` leaf, a ``bind``-prepared
+    head (present even for tied embeddings — see ``gemm.bind(tie_lm_head=)``),
+    or the transposed embedding table. Raw arrays are cast to the activation
+    dtype (a bf16 matmul even for an f32 checkpoint, as before the unified-dot
+    migration); prepared operands pass through uncast."""
+    w = params["lm_head"] if "lm_head" in params else params["embed"].T
+    return w.astype(dtype) if hasattr(w, "astype") else w
 
 
 def rms_norm(x: jnp.ndarray, w: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
@@ -248,9 +260,9 @@ def attention_block(p, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
     last `window` K/V. Returns (out, new_cache_or_ring).
     """
     b, sq, _ = x.shape
-    q = sa_dot(x, p["wq"], policy, layer=layer + "/wq")
-    k = sa_dot(x, p["wk"], policy, layer=layer + "/wk")
-    v = sa_dot(x, p["wv"], policy, layer=layer + "/wv")
+    q = dot(x, p["wq"], policy, layer=layer + "/wq")
+    k = dot(x, p["wk"], policy, layer=layer + "/wk")
+    v = dot(x, p["wv"], policy, layer=layer + "/wv")
     if "bq" in p:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
     q = q.reshape(b, sq, n_heads, head_dim)
@@ -272,7 +284,7 @@ def attention_block(p, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
             out = chunked_attention(q, k, v, q_positions, sq, causal=causal,
                                     window=window, softcap=softcap, chunk=chunk)
         out = out.reshape(b, sq, n_heads * head_dim)
-        return sa_dot(out, p["wo"], policy, layer=layer + "/wo"), (ck, cv, kpos)
+        return dot(out, p["wo"], policy, layer=layer + "/wo"), (ck, cv, kpos)
 
     if kv_cache is not None:
         ck, cv = kv_cache
@@ -290,7 +302,7 @@ def attention_block(p, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
     out = chunked_attention(q, k_all, v_all, q_positions, valid, causal=causal,
                             window=window, softcap=softcap, chunk=chunk)
     out = out.reshape(b, sq, n_heads * head_dim)
-    return sa_dot(out, p["wo"], policy, layer=layer + "/wo"), new_cache
+    return dot(out, p["wo"], policy, layer=layer + "/wo"), new_cache
 
 
 # ---------------------------------------------------------------------------
@@ -309,7 +321,7 @@ def init_mlp(key, d_model: int, d_ff: int, dtype):
 
 def mlp_block(p, x, *, act: str = "silu", policy: GemmPolicy = EXACT,
               layer: str = ""):
-    h1 = sa_dot(x, p["w1"], policy, layer=layer + "/w1")
-    h3 = sa_dot(x, p["w3"], policy, layer=layer + "/w3")
+    h1 = dot(x, p["w1"], policy, layer=layer + "/w1")
+    h3 = dot(x, p["w3"], policy, layer=layer + "/w3")
     actf = jax.nn.silu if act == "silu" else jax.nn.gelu
-    return sa_dot(actf(h1) * h3, p["w2"], policy, layer=layer + "/w2")
+    return dot(actf(h1) * h3, p["w2"], policy, layer=layer + "/w2")

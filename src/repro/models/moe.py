@@ -15,7 +15,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.gemm import EXACT, GemmPolicy
+from repro.core.gemm import EXACT, GemmPolicy, dot
 from repro.configs.base import ModelConfig
 
 
@@ -72,10 +72,14 @@ def moe_block(p, x, cfg: ModelConfig, *, policy: GemmPolicy = EXACT,
     buf = jnp.zeros((e * cap + 1, d), xf.dtype).at[dest].add(xf[tok_idx])
     buf = buf[:-1].reshape(e, cap, d)
 
-    h1 = jnp.einsum("ecd,edf->ecf", buf, p["w1"])
-    h3 = jnp.einsum("ecd,edf->ecf", buf, p["w3"])
+    # expert FFN: grouped (E, C, d) x (E, d, f) GEMMs through the policy —
+    # per-expert quantization/preparation under approximate backends, a plain
+    # batched matmul under `exact` (identical to the previous einsums)
+    h1 = dot(buf, p["w1"], policy, layer=layer + "/w1", grouped=True)
+    h3 = dot(buf, p["w3"], policy, layer=layer + "/w3", grouped=True)
     hidden = jax.nn.silu(h1) * h3
-    out_e = jnp.einsum("ecf,efd->ecd", hidden, p["w2"])             # (E, C, d)
+    out_e = dot(hidden, p["w2"], policy, layer=layer + "/w2",
+                grouped=True)                                       # (E, C, d)
 
     flat_out = out_e.reshape(e * cap, d)
     gathered = jnp.where(keep[:, None], flat_out[jnp.minimum(dest, e * cap - 1)], 0)

@@ -13,7 +13,7 @@ from typing import NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.gemm import EXACT, GemmPolicy, sa_dot
+from repro.core.gemm import EXACT, GemmPolicy, dot
 from repro.configs.base import ModelConfig
 
 
@@ -92,7 +92,7 @@ def mamba_block(p, x, cfg: ModelConfig, *, state: Optional[SSMState] = None,
     n = cfg.ssm_state
     heads = di // 64
     pdim = 64
-    proj = sa_dot(x, p["in_proj"], policy, layer=layer + "/in_proj")
+    proj = dot(x, p["in_proj"], policy, layer=layer + "/in_proj")
     z, xr, bflat, cflat, dt_raw = jnp.split(
         proj, [di, 2 * di, 2 * di + heads * n, 2 * di + 2 * heads * n], axis=-1)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # (B,T,H)
@@ -129,5 +129,5 @@ def mamba_block(p, x, cfg: ModelConfig, *, state: Optional[SSMState] = None,
     y = y.reshape(bsz, t, di).astype(x.dtype)
     from .layers import rms_norm
     y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
-    out = sa_dot(y, p["out_proj"], policy, layer=layer + "/out_proj")
+    out = dot(y, p["out_proj"], policy, layer=layer + "/out_proj")
     return out, SSMState(s_fin, conv_tail)

@@ -15,7 +15,7 @@ import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
 from repro.configs.base import ModelConfig
-from repro.core.gemm import EXACT, GemmPolicy
+from repro.core.gemm import EXACT, GemmPolicy, dot
 from . import layers as L
 from . import moe as moe_mod
 
@@ -122,7 +122,8 @@ def forward(params: PyTree, cfg: ModelConfig, *, tokens=None, input_embeds=None,
             tok_emb = params["embed"][tokens] * jnp.asarray(cfg.d_model ** 0.5,
                                                             x.dtype)
             x = jnp.concatenate(
-                [jnp.matmul(x, params["patch_proj"]), tok_emb], axis=1)
+                [dot(x, params["patch_proj"], policy, layer="patch_proj"),
+                 tok_emb], axis=1)
     x = L.constrain_batch(x, batch_axes)
     b, s, _ = x.shape
     if positions is None:
@@ -216,9 +217,10 @@ def _grouped_forward(params, cfg: ModelConfig, x, cache, cache_pos, positions,
     return x, new_cache, ys[5].sum()
 
 
-def logits_from_hidden(params, cfg: ModelConfig, hidden):
-    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
-    logits = jnp.matmul(hidden, w.astype(hidden.dtype))
+def logits_from_hidden(params, cfg: ModelConfig, hidden,
+                       policy: GemmPolicy = EXACT):
+    w = L.head_weight(params, hidden.dtype)
+    logits = dot(hidden, w, policy, layer="lm_head")
     return L._softcap(logits.astype(jnp.float32), cfg.final_softcap)
 
 
@@ -244,7 +246,7 @@ def lm_loss(params: PyTree, cfg: ModelConfig, tokens, *, input_embeds=None,
         # hidden covers [patches | text[:-1]]; the last S_txt-1 positions plus the
         # final patch position predict text tokens 1..S_txt-1 -> take text slice
         hidden = hidden[:, -tgt.shape[1]:]
-    w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    w = L.head_weight(params, hidden.dtype)
     b, s, d = hidden.shape
     n_chunks = -(-s // ce_chunk)
     pad = n_chunks * ce_chunk - s
@@ -258,8 +260,9 @@ def lm_loss(params: PyTree, cfg: ModelConfig, tokens, *, input_embeds=None,
 
     def ce(carry, inp3):
         h, t, m = inp3
-        logits = L._softcap(jnp.matmul(h, w.astype(h.dtype)).astype(jnp.float32),
-                            cfg.final_softcap)
+        logits = L._softcap(
+            dot(h, w, policy, layer="lm_head").astype(jnp.float32),
+            cfg.final_softcap)
         lse = jax.nn.logsumexp(logits, axis=-1)
         ll = jnp.take_along_axis(logits, t[..., None], axis=-1)[..., 0]
         loss_sum, n_sum = carry
@@ -302,7 +305,7 @@ def prefill(params, cfg: ModelConfig, tokens, cache, *, input_embeds=None,
                                input_embeds=input_embeds, cache=cache,
                                cache_pos=0, policy=policy, attn_chunk=attn_chunk,
                                batch_axes=batch_axes)
-    logits = logits_from_hidden(params, cfg, hidden[:, -1:])
+    logits = logits_from_hidden(params, cfg, hidden[:, -1:], policy)
     return logits, cache
 
 
@@ -314,4 +317,4 @@ def decode_step(params, cfg: ModelConfig, token, cache, pos, *,
     hidden, cache, _ = forward(params, cfg, tokens=token, cache=cache,
                                cache_pos=pos, positions=positions, policy=policy,
                                attn_chunk=attn_chunk, batch_axes=batch_axes)
-    return logits_from_hidden(params, cfg, hidden), cache
+    return logits_from_hidden(params, cfg, hidden, policy), cache

@@ -12,7 +12,7 @@ from typing import NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.gemm import EXACT, GemmPolicy, sa_dot
+from repro.core.gemm import EXACT, GemmPolicy, dot
 from repro.configs.base import ModelConfig
 
 
@@ -108,11 +108,11 @@ def mlstm_block(p, x, cfg: ModelConfig, *, state: Optional[MLSTMState] = None,
     di = cfg.ssm_expand * d
     h = cfg.n_heads
     hd = di // h
-    up = sa_dot(x, p["up"], policy, layer=layer + "/up")
+    up = dot(x, p["up"], policy, layer=layer + "/up")
     xi, z = jnp.split(up, 2, axis=-1)
-    q = sa_dot(xi, p["wq"], policy, layer=layer + "/wq").reshape(bsz, t, h, hd)
-    k = sa_dot(xi, p["wk"], policy, layer=layer + "/wk").reshape(bsz, t, h, hd) * hd ** -0.5
-    v = sa_dot(xi, p["wv"], policy, layer=layer + "/wv").reshape(bsz, t, h, hd)
+    q = dot(xi, p["wq"], policy, layer=layer + "/wq").reshape(bsz, t, h, hd)
+    k = dot(xi, p["wk"], policy, layer=layer + "/wk").reshape(bsz, t, h, hd) * hd ** -0.5
+    v = dot(xi, p["wv"], policy, layer=layer + "/wv").reshape(bsz, t, h, hd)
     gates = xi.astype(jnp.float32) @ p["w_if"]                       # (B,T,2H)
     log_i, f_raw = jnp.split(gates, 2, axis=-1)
     log_f = -jax.nn.softplus(-f_raw)                                 # log sigmoid
@@ -122,7 +122,7 @@ def mlstm_block(p, x, cfg: ModelConfig, *, state: Optional[MLSTMState] = None,
     y = y.reshape(bsz, t, di).astype(x.dtype)
     from .layers import rms_norm
     y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
-    return sa_dot(y, p["down"], policy, layer=layer + "/down"), new_state
+    return dot(y, p["down"], policy, layer=layer + "/down"), new_state
 
 
 def init_slstm(key, cfg: ModelConfig, dtype):
@@ -140,7 +140,7 @@ def slstm_block(p, x, cfg: ModelConfig, *, state: Optional[SLSTMState] = None,
                 policy: GemmPolicy = EXACT, layer: str = ""):
     """Sequential sLSTM (exponential gating, recurrent weights R)."""
     bsz, t, d = x.shape
-    wx = sa_dot(x, p["w_in"], policy, layer=layer + "/w_in")   # (B,T,4d)
+    wx = dot(x, p["w_in"], policy, layer=layer + "/w_in")   # (B,T,4d)
     if state is None:
         state = SLSTMState(*(jnp.zeros((bsz, d), jnp.float32) for _ in range(4)))
 
@@ -163,4 +163,4 @@ def slstm_block(p, x, cfg: ModelConfig, *, state: Optional[SLSTMState] = None,
 
     new_state, hs = jax.lax.scan(step, state, wx.swapaxes(0, 1))
     y = hs.swapaxes(0, 1).astype(x.dtype)                      # (B,T,d)
-    return sa_dot(y, p["out"], policy, layer=layer + "/out"), new_state
+    return dot(y, p["out"], policy, layer=layer + "/out"), new_state

@@ -12,7 +12,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.gemm import EXACT, GemmPolicy
+from repro.core.gemm import EXACT, GemmPolicy, dot
 from . import layers as L
 from . import xlstm as X
 
@@ -84,7 +84,7 @@ def forward(params, cfg: ModelConfig, *, tokens, cache: Optional[Dict] = None,
                 out, ns = X.mlstm_block(
                     lp_["mlstm"], h, cfg,
                     state=X.MLSTMState(*st) if use_cache else None,
-                    chunk=chunk, policy=policy)
+                    chunk=chunk, policy=policy, layer="mlstm")
                 return x_ + out, (ns.c, ns.n, ns.m)
 
             if not use_cache:   # training: checkpoint (chunk quadratics)
@@ -103,7 +103,8 @@ def forward(params, cfg: ModelConfig, *, tokens, cache: Optional[Dict] = None,
 
     def s_apply(sp, x, state):
         h = L.rms_norm(x, sp["ln"], cfg.norm_eps)
-        out, ns = X.slstm_block(sp["slstm"], h, cfg, state=state, policy=policy)
+        out, ns = X.slstm_block(sp["slstm"], h, cfg, state=state,
+                                policy=policy, layer="slstm")
         return x + out, ns
 
     def rep_body(x, xs):
@@ -142,8 +143,8 @@ def lm_loss(params, cfg: ModelConfig, tokens, *, policy: GemmPolicy = EXACT,
     inp, tgt = tokens[:, :-1], tokens[:, 1:]
     hidden, _ = forward(params, cfg, tokens=inp, policy=policy,
                         batch_axes=batch_axes)
-    logits = jnp.matmul(hidden, params["lm_head"].astype(hidden.dtype))
-    logits = logits.astype(jnp.float32)
+    logits = dot(hidden, L.head_weight(params, hidden.dtype), policy,
+                 layer="lm_head").astype(jnp.float32)
     lse = jax.nn.logsumexp(logits, axis=-1)
     ll = jnp.take_along_axis(logits, tgt[..., None], axis=-1)[..., 0]
     return (lse - ll).mean()
@@ -152,7 +153,8 @@ def lm_loss(params, cfg: ModelConfig, tokens, *, policy: GemmPolicy = EXACT,
 def prefill(params, cfg, tokens, cache, *, policy=EXACT, batch_axes=(), **_):
     hidden, cache = forward(params, cfg, tokens=tokens, cache=cache,
                             policy=policy, batch_axes=batch_axes)
-    logits = jnp.matmul(hidden[:, -1:], params["lm_head"].astype(hidden.dtype))
+    logits = dot(hidden[:, -1:], L.head_weight(params, hidden.dtype), policy,
+                 layer="lm_head")
     return logits.astype(jnp.float32), cache
 
 
@@ -160,5 +162,6 @@ def decode_step(params, cfg, token, cache, pos, *, policy=EXACT,
                 batch_axes=(), **_):
     hidden, cache = forward(params, cfg, tokens=token, cache=cache,
                             policy=policy, batch_axes=batch_axes)
-    logits = jnp.matmul(hidden, params["lm_head"].astype(hidden.dtype))
+    logits = dot(hidden, L.head_weight(params, hidden.dtype), policy,
+                 layer="lm_head")
     return logits.astype(jnp.float32), cache

@@ -1,5 +1,6 @@
 """Training loop: data -> step -> metrics -> periodic async checkpoint, with
-resume-from-latest, straggler watchdog, and bounded transient retry."""
+resume-from-latest, straggler watchdog, bounded transient retry, and an
+optional in-loop eval under a (possibly approximate) serving policy."""
 from __future__ import annotations
 
 import dataclasses
@@ -10,6 +11,7 @@ import jax
 import numpy as np
 
 from repro.checkpoint import ckpt
+from repro.core import gemm
 from repro.data.pipeline import DataConfig, SyntheticLM
 from repro.configs.base import ModelConfig, ShapeSpec
 from repro.optim import adamw
@@ -23,14 +25,70 @@ class LoopConfig:
     ckpt_every: int = 50
     ckpt_dir: Optional[str] = None
     resume: bool = True
+    # in-loop eval: every `eval_every` steps, run `eval_steps` batches under
+    # `eval_policy` (None = exact). Non-exact policies are evaluated
+    # weight-stationary: params are bound once per eval (gemm.bind).
+    eval_every: int = 0
+    eval_steps: int = 2
+    eval_policy: Optional[gemm.GemmPolicy] = None
+
+
+# jitted eval-loss wrappers, keyed on (loss_fn, policy contents): a fresh
+# jax.jit(lambda ...) per evaluate() call would miss jit's function cache
+# and recompile the whole eval forward at every eval interval
+_JITTED_LOSS: Dict = {}
+
+
+def _jitted_loss(loss_fn: Callable, policy: gemm.GemmPolicy) -> Callable:
+    key = (loss_fn, policy.backend, policy.k, policy.n_bits, policy.acc_bits,
+           tuple(sorted(policy.overrides.items())) if policy.overrides else None,
+           policy.delta_rank, policy.delta_tol)
+    fn = _JITTED_LOSS.get(key)
+    if fn is None:
+        if len(_JITTED_LOSS) > 32:
+            _JITTED_LOSS.clear()
+        fn = _JITTED_LOSS[key] = jax.jit(lambda p, b: loss_fn(p, b, policy))
+    return fn
+
+
+def evaluate(loss_fn: Callable, params, batches, *,
+             policy: Optional[gemm.GemmPolicy] = None,
+             bind_weights: bool = True) -> Dict[str, float]:
+    """Forward-only eval of `loss_fn(params, batch, policy)` over `batches`.
+
+    ``params`` may be raw or already-bound (`gemm.BoundParams`). With
+    ``bind_weights`` (default) and a non-exact policy, raw params are bound
+    once — every weight leaf quantized + backend-prepared up front — so the
+    eval forward passes pay only the moving-activation cost per batch, the
+    same weight-stationary regime the serve path uses. Bit-exact with the
+    unbound forward (pinned by tests/test_bound_params.py).
+    """
+    policy = policy or gemm.EXACT
+    if bind_weights and (policy.backend != "exact" or policy.overrides):
+        # cached=False: mid-training params are transient — caching their
+        # prepared forms would pin dead device tensors until LRU eviction
+        params = gemm.bind(params, policy, cached=False)
+    jitted = _jitted_loss(loss_fn, policy)
+    losses = []
+    for batch in batches:
+        losses.append(float(jitted(params, batch)))
+    out = {"eval_loss": float(np.mean(losses)) if losses else float("nan"),
+           "eval_batches": float(len(losses))}
+    return out
 
 
 def train(cfg: ModelConfig, shape: ShapeSpec, step_fn: Callable,
           init_params_fn: Callable, lc: LoopConfig, *, n_micro: int = 1,
-          data=None, shardings=None,
+          data=None, shardings=None, eval_loss_fn: Optional[Callable] = None,
           log: Callable[[str], None] = print) -> Dict[str, float]:
     """Run the loop. `step_fn(params, opt, batch) -> (params, opt, metrics)`
-    must already be jit'd (with shardings for the production mesh)."""
+    must already be jit'd (with shardings for the production mesh).
+
+    With `lc.eval_every` and an `eval_loss_fn(params, batch, policy)` (e.g.
+    `model.lm_loss`), every `eval_every` steps the current params are
+    evaluated on held-out synthetic batches under `lc.eval_policy` —
+    weight-stationary via `gemm.bind`, so approximate-backend eval does not
+    re-quantize weights per batch."""
     data = data or SyntheticLM(cfg, shape, DataConfig(n_micro=n_micro))
     start_step = 0
     params = None
@@ -50,6 +108,7 @@ def train(cfg: ModelConfig, shape: ShapeSpec, step_fn: Callable,
     saver = ckpt.AsyncCheckpointer(lc.ckpt_dir) if lc.ckpt_dir else None
     watchdog = fault.StragglerWatchdog()
     losses = []
+    last_eval = None
     for step in range(start_step, lc.steps):
         batch = data.batch(step)
         t0 = time.time()
@@ -65,10 +124,22 @@ def train(cfg: ModelConfig, shape: ShapeSpec, step_fn: Callable,
             log(f"step {step}: loss {loss:.4f}  ({dt:.2f}s/step)")
         if saver and step > start_step and step % lc.ckpt_every == 0:
             saver.save_async(step, {"params": params})
+        if (eval_loss_fn and lc.eval_every and step > start_step
+                and step % lc.eval_every == 0):
+            ev = evaluate(eval_loss_fn, params,
+                          [data.batch(lc.steps + 1 + i)
+                           for i in range(lc.eval_steps)],
+                          policy=lc.eval_policy)
+            last_eval = ev
+            log(f"step {step}: eval_loss {ev['eval_loss']:.4f} "
+                f"(policy={getattr(lc.eval_policy, 'backend', 'exact')})")
     if saver:
         saver.save_async(lc.steps, {"params": params})
         saver.wait()
-    return {"first_loss": losses[0] if losses else float("nan"),
-            "last_loss": losses[-1] if losses else float("nan"),
-            "steps": len(losses),
-            "straggler_events": len(watchdog.flagged)}
+    out = {"first_loss": losses[0] if losses else float("nan"),
+           "last_loss": losses[-1] if losses else float("nan"),
+           "steps": len(losses),
+           "straggler_events": len(watchdog.flagged)}
+    if last_eval is not None:
+        out.update(last_eval)
+    return out

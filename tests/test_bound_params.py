@@ -1,0 +1,266 @@
+"""Bound parameter pytrees and the unified `dot` API.
+
+Pins the PR-3 redesign invariants:
+
+* `GemmPolicy.resolve` longest-prefix semantics incl. tie/empty-layer edges.
+* `bind` idempotence and leaf selection (norms/embeddings/routers stay raw).
+* Bit-exact parity of bound vs unbound prefill+decode for every backend on a
+  small transformer config (the weight-stationary path may not change a bit).
+* The acceptance assertion: a bound decode step performs **zero** per-call
+  weight quantization or backend-factor construction — checked by tracing the
+  jitted step with spies on `quant.quantize(axis=0)`, `prepare_delta`, and
+  `build_onehot_weights`, not by timing.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.core import error_delta, gemm, lut, quant
+from repro.kernels import ops
+from repro.models import get_model
+
+BACKENDS = ("mxu_int8", "approx_lut", "approx_oracle", "approx_onehot",
+            "approx_delta")
+
+
+# --- GemmPolicy.resolve edge cases ------------------------------------------
+
+def test_resolve_longest_prefix_wins():
+    p = gemm.GemmPolicy(backend="exact",
+                        overrides={"attn": "approx_lut",
+                                   "attn/wq": "mxu_int8"})
+    assert p.resolve("attn/wq") == "mxu_int8"
+    assert p.resolve("attn/wk") == "approx_lut"
+    assert p.resolve("mlp/w1") == "exact"
+
+
+def test_resolve_empty_layer_and_empty_prefix():
+    # the empty prefix matches everything: a default-override
+    p = gemm.GemmPolicy(backend="exact", overrides={"": "mxu_int8"})
+    assert p.resolve("") == "mxu_int8"
+    assert p.resolve("anything") == "mxu_int8"
+    # an empty layer name matches only the empty prefix
+    p2 = gemm.GemmPolicy(backend="exact", overrides={"attn": "approx_lut"})
+    assert p2.resolve("") == "exact"
+    # empty prefix loses to any longer matching prefix
+    p3 = gemm.GemmPolicy(backend="exact",
+                         overrides={"": "mxu_int8", "attn": "approx_lut"})
+    assert p3.resolve("attn/wq") == "approx_lut"
+    assert p3.resolve("mlp/w1") == "mxu_int8"
+
+
+def test_resolve_same_length_prefixes_are_disjoint():
+    # equal-length prefixes can never both match one layer (dict keys are
+    # unique), so "tie" resolution reduces to: the one that matches wins
+    p = gemm.GemmPolicy(backend="exact",
+                        overrides={"ab": "mxu_int8", "ax": "approx_lut"})
+    assert p.resolve("ab/w") == "mxu_int8"
+    assert p.resolve("ax/w") == "approx_lut"
+    assert p.resolve("a") == "exact"
+
+
+# --- bind mechanics ----------------------------------------------------------
+
+def _small_dense():
+    return reduced(ARCHS["smollm-360m"])
+
+
+def test_bind_selects_gemm_weights_only():
+    cfg = _small_dense()
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    pol = gemm.GemmPolicy(backend="mxu_int8")
+    bound = model.bind_params(params, pol)
+    assert isinstance(bound, gemm.BoundParams)
+    # embeddings / norms stay raw arrays
+    assert isinstance(bound["embed"], jnp.ndarray)
+    assert isinstance(bound["final_norm"], jnp.ndarray)
+    # attention/MLP weights are prepared, stacked over layers
+    for leaf_name in ("wq", "wk", "wv", "wo"):
+        prep = bound["layers"]["attn"][leaf_name]
+        assert isinstance(prep, ops.PreparedOperand), leaf_name
+        assert prep.values.shape[0] == cfg.n_layers
+        assert prep.scale is not None          # float-prepared: scale attached
+    # tied embeddings: a prepared lm_head entry is added for the hot path
+    assert cfg.tie_embeddings and "lm_head" not in params
+    assert isinstance(bound["lm_head"], ops.PreparedOperand)
+
+
+def test_bind_idempotent():
+    cfg = _small_dense()
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    pol = gemm.GemmPolicy(backend="approx_delta", k=4)
+    b1 = model.bind_params(params, pol)
+    b2 = model.bind_params(b1, pol)
+    l1 = jax.tree_util.tree_leaves(b1, is_leaf=lambda x: isinstance(x, ops.PreparedOperand))
+    l2 = jax.tree_util.tree_leaves(b2, is_leaf=lambda x: isinstance(x, ops.PreparedOperand))
+    assert len(l1) == len(l2)
+    for a, b in zip(l1, l2):
+        if isinstance(a, ops.PreparedOperand):
+            assert a is b                      # untouched, not re-prepared
+
+
+def test_bind_exact_layers_stay_raw():
+    cfg = _small_dense()
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    pol = gemm.GemmPolicy(backend="exact", overrides={"mlp": "mxu_int8"})
+    bound = model.bind_params(params, pol)
+    assert isinstance(bound["layers"]["attn"]["wq"], jnp.ndarray)
+    assert isinstance(bound["layers"]["mlp"]["w1"], ops.PreparedOperand)
+    assert "lm_head" not in bound              # lm_head resolves exact
+
+
+def test_bound_params_is_pytree_jit_arg():
+    cfg = _small_dense()
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    pol = gemm.GemmPolicy(backend="mxu_int8")
+    bound = model.bind_params(params, pol)
+    leaves, treedef = jax.tree_util.tree_flatten(bound)
+    rebuilt = jax.tree_util.tree_unflatten(treedef, leaves)
+    assert isinstance(rebuilt, gemm.BoundParams)
+    assert set(rebuilt) == set(bound)
+
+
+def test_stale_bound_params_rejected():
+    cfg = _small_dense()
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    bound = model.bind_params(params, gemm.GemmPolicy(backend="mxu_int8"))
+    wrong = gemm.GemmPolicy(backend="approx_lut", k=4)
+    batch = {"tokens": jnp.zeros((1, 4), jnp.int32)}
+    cache = model.init_cache(1, 8)
+    with pytest.raises(ValueError, match="stale"):
+        model.prefill(bound, batch, cache, policy=wrong)
+
+
+# --- bit-exact parity: bound vs unbound, every backend -----------------------
+
+def _parity_case(cfg, backend, k=4):
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    pol = gemm.GemmPolicy(backend=backend, k=k)
+    rng = np.random.default_rng(0)
+    b, s = 2, 8
+    batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (b, s)),
+                                   jnp.int32)}
+    bound = model.bind_params(params, pol)
+    cu, cb = model.init_cache(b, s + 2), model.init_cache(b, s + 2)
+    pre = jax.jit(lambda p, bt, c: model.prefill(p, bt, c, policy=pol))
+    dec = jax.jit(lambda p, t, c, pos:
+                  model.decode_step(p, t, c, pos, policy=pol))
+    lu, cu = pre(params, batch, cu)
+    lb, cb = pre(bound, batch, cb)
+    np.testing.assert_array_equal(np.asarray(lu), np.asarray(lb),
+                                  err_msg=f"{backend}: prefill logits differ")
+    tok = jnp.argmax(lu[:, -1:], axis=-1).astype(jnp.int32)
+    du, _ = dec(params, tok, cu, jnp.int32(s))
+    db, _ = dec(bound, tok, cb, jnp.int32(s))
+    np.testing.assert_array_equal(np.asarray(du), np.asarray(db),
+                                  err_msg=f"{backend}: decode logits differ")
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_bound_unbound_bit_exact_dense(backend):
+    cfg = _small_dense()
+    if backend == "approx_oracle":
+        # the bit-level oracle is slow: shrink to 1 layer / tiny vocab
+        cfg = dataclasses.replace(cfg, n_layers=1, vocab_size=64)
+    _parity_case(cfg, backend)
+
+
+@pytest.mark.parametrize("backend", ("mxu_int8", "approx_delta"))
+def test_bound_unbound_bit_exact_moe(backend):
+    _parity_case(reduced(ARCHS["qwen3-moe-30b-a3b"]), backend)
+
+
+@pytest.mark.parametrize("arch", ("zamba2-1.2b", "xlstm-350m", "gemma3-12b"))
+def test_bound_unbound_bit_exact_families(arch):
+    _parity_case(reduced(ARCHS[arch]), "approx_delta")
+
+
+# --- acceptance: zero per-call weight work on the bound decode path ----------
+
+def _trace_decode(model, cfg, params, pol, monkeypatch):
+    """Trace one `launch.steps.make_decode_step` step, recording
+    weight-quantize / backend-factor-build calls."""
+    from repro.launch import steps as launch_steps
+    weight_quant_calls = []
+    orig_quant = quant.quantize
+
+    def spy_quant(x, *, n_bits=8, axis=None, eps=1e-8):
+        if axis is not None:
+            weight_quant_calls.append(getattr(x, "shape", None))
+        return orig_quant(x, n_bits=n_bits, axis=axis, eps=eps)
+
+    factor_calls = []
+    orig_prep_delta = error_delta.prepare_delta
+    orig_onehot = lut.build_onehot_weights
+    orig_prep_op = ops.prepare_operand
+    monkeypatch.setattr(quant, "quantize", spy_quant)
+    monkeypatch.setattr(error_delta, "prepare_delta",
+                        lambda *a, **kw: (factor_calls.append("delta"),
+                                          orig_prep_delta(*a, **kw))[1])
+    monkeypatch.setattr(lut, "build_onehot_weights",
+                        lambda *a, **kw: (factor_calls.append("onehot"),
+                                          orig_onehot(*a, **kw))[1])
+    monkeypatch.setattr(ops, "prepare_operand",
+                        lambda *a, **kw: (factor_calls.append("prep"),
+                                          orig_prep_op(*a, **kw))[1])
+    tok = jnp.zeros((1, 1), jnp.int32)
+    cache = model.init_cache(1, 4)
+    step = launch_steps.make_decode_step(cfg, pol)
+    jax.make_jaxpr(lambda p, t, c: step(p, t, c, 1))(params, tok, cache)
+    return weight_quant_calls, factor_calls
+
+
+@pytest.mark.parametrize("backend", ("mxu_int8", "approx_delta",
+                                     "approx_onehot"))
+def test_bound_decode_zero_weight_work(backend, monkeypatch):
+    from repro.launch import steps as launch_steps
+    cfg = _small_dense()
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    pol = gemm.GemmPolicy(backend=backend, k=4)
+    bound = launch_steps.bind_serving_params(cfg, params, pol)
+    wq_calls, factor_calls = _trace_decode(model, cfg, bound, pol, monkeypatch)
+    assert wq_calls == [], f"bound decode quantized weights: {wq_calls}"
+    assert factor_calls == [], \
+        f"bound decode rebuilt backend factors: {factor_calls}"
+
+
+def test_unbound_decode_does_weight_work(monkeypatch):
+    # sanity check that the spies actually see the per-call weight work
+    cfg = _small_dense()
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    pol = gemm.GemmPolicy(backend="mxu_int8")
+    wq_calls, _ = _trace_decode(model, cfg, params, pol, monkeypatch)
+    assert wq_calls, "unbound decode should quantize weights per call"
+
+
+# --- eval-path integration ---------------------------------------------------
+
+def test_evaluate_binds_and_matches_unbound():
+    from repro.train import loop as train_loop
+    cfg = _small_dense()
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    batches = [{"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 8)),
+                                      jnp.int32)} for _ in range(2)]
+    pol = gemm.GemmPolicy(backend="mxu_int8")
+
+    def loss_fn(p, b, policy):
+        return model.lm_loss(p, b, policy=policy, remat=False)
+
+    ev_bound = train_loop.evaluate(loss_fn, params, batches, policy=pol)
+    ev_raw = train_loop.evaluate(loss_fn, params, batches, policy=pol,
+                                 bind_weights=False)
+    assert ev_bound["eval_loss"] == ev_raw["eval_loss"]
