@@ -8,5 +8,4 @@ quant (int8 symmetric quantization), gemm (backend registry / the unified
 `dot` entry point + `bind` for weight-stationary bound parameter pytrees).
 """
 from . import emulate, energy, error_delta, errors, gemm, lut, pe, quant, systolic  # noqa: F401
-from .gemm import (EXACT, BoundParams, GemmPolicy, bind, dot,  # noqa: F401
-                   int_matmul, sa_dot)
+from .gemm import EXACT, BoundParams, GemmPolicy, bind, dot  # noqa: F401

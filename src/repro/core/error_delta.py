@@ -332,7 +332,11 @@ def prepare_delta(w, *, side: str = "right", n_bits: int = 8, k: int = 4,
     the generic rank-r factors — the effective rank is then a function of the
     policy alone, so prepared operands for different weight matrices share one
     pytree structure (required when stacking per-layer preparations for a
-    ``lax.scan``, as ``core.gemm.bind`` does).
+    ``lax.scan``, as ``core.gemm.bind`` does). With ``restrict=False`` the
+    fixed operand may also carry leading *stack* dimensions (scan-over-layers
+    params, MoE expert stacks): the stationary factor for the whole stack is
+    built by one fancy-index gather over the stacked bit patterns, and every
+    array of the result keeps the stack dims in front.
     """
     if side not in ("right", "left"):
         raise ValueError(f"side must be 'right' or 'left', got {side!r}")
@@ -341,8 +345,11 @@ def prepare_delta(w, *, side: str = "right", n_bits: int = 8, k: int = 4,
     span = 1 << n_bits
     low_mask = (1 << min(k, n_bits)) - 1
     w_u = jnp.asarray(w, jnp.int32) & (span - 1)
-    if w_u.ndim != 2:
-        raise ValueError(f"prepared operand must be 2D, got shape {w_u.shape}")
+    if w_u.ndim < 2:
+        raise ValueError(f"prepared operand must be >= 2D, got {w_u.shape}")
+    if w_u.ndim > 2 and restrict:
+        raise ValueError(
+            f"stacked preparation (shape {w_u.shape}) requires restrict=False")
     w_s = _signed_values(w_u, n_bits, signed)
     w_np = np.asarray(w_u)
     patterns = _low_patterns(w_np, n_bits, k) if (restrict and fac.rank) else ()
@@ -356,30 +363,32 @@ def prepare_delta(w, *, side: str = "right", n_bits: int = 8, k: int = 4,
                                                 axis, patterns)
         pos = np.searchsorted(np.asarray(patterns), w_np & low_mask)
         if side == "right":
-            kd, n = w_np.shape
             gather_tab = jnp.asarray(f_np.T.copy())            # (r', span)
             g_b = g_np[:, pos]                                 # (r', K, N)
             factor = jnp.asarray(np.transpose(g_b, (1, 0, 2)).copy())
         else:
-            m, kd = w_np.shape
             gather_tab = jnp.asarray(g_np)                     # (r', span)
             factor = jnp.asarray(f_np[pos])                    # (M, K, r')
     else:
         r_eff = fac.rank
         if r_eff == 0:
             gather_tab = jnp.zeros((0, span), jnp.float32)
-            rows, cols = w_np.shape
-            shape = ((rows, 0, cols) if side == "right" else
-                     (rows, cols, 0))
+            shape = (w_np.shape[:-1] + (0,) + w_np.shape[-1:]
+                     if side == "right" else w_np.shape + (0,))
             factor = jnp.zeros(shape, jnp.float32)
         elif side == "right":
-            kd, n = w_np.shape
             gather_tab = jnp.asarray(np.ascontiguousarray(fac.f.T))
-            g_b = fac.g[:, w_np]                               # (r, K, N)
-            factor = jnp.asarray(np.transpose(g_b, (1, 0, 2)).copy())
+            g_b = fac.g[:, w_np]                    # (r, *stack, K, N)
+            factor = jnp.asarray(np.ascontiguousarray(
+                np.moveaxis(g_b, 0, -2)))           # (*stack, K, r, N)
         else:
             gather_tab = jnp.asarray(fac.g)                    # (r, span)
-            factor = jnp.asarray(fac.f[w_np])                  # (M, K, r)
+            factor = jnp.asarray(fac.f[w_np])       # (*stack, M, K, r)
+        stack = w_np.shape[:-2]
+        if stack:
+            # the moving-side table is weight-independent, but a stacked
+            # preparation rides lax.scan — every leaf needs the stack dims
+            gather_tab = jnp.broadcast_to(gather_tab, stack + gather_tab.shape)
     return PreparedDelta(side, r_eff, spec, w_u, w_s, gather_tab, factor)
 
 

@@ -33,7 +33,6 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-import warnings
 from collections import OrderedDict
 from typing import Any, Callable, Dict, Optional
 
@@ -194,9 +193,12 @@ def dot(a, b, policy: GemmPolicy = EXACT, *, layer: str = "",
     Operand forms (either side, at most one prepared):
 
     * **raw floats** — the model path: the 2-D right-hand weight is quantized
-      per-output-channel, the moving activations per-tensor, the integer GEMM
-      runs under the layer's backend, and the result is dequantized back to
-      the activations' dtype. ``backend="exact"`` is a plain float matmul.
+      per-output-channel, the moving activations per-row (one scale per
+      token, so a token's bits never depend on what else shares its batch —
+      the invariant the continuous-batching serve engine relies on for
+      per-request determinism), the integer GEMM runs under the layer's
+      backend, and the result is dequantized back to the activations' dtype.
+      ``backend="exact"`` is a plain float matmul.
     * **raw integers** — the app path (previously ``execute``/``int_matmul``):
       integer-in / int32-out under the layer's backend, batched operands
       flattened onto the 2D kernels by ``kernels.ops.batched_app_matmul``.
@@ -281,7 +283,7 @@ def dot(a, b, policy: GemmPolicy = EXACT, *, layer: str = "",
     lead = a.shape[:-1]
     k_dim = a.shape[-1]
     x2 = a.reshape(-1, k_dim)
-    xq = quant.quantize(x2, n_bits=policy.n_bits)
+    xq = quant.quantize(x2, n_bits=policy.n_bits, axis=-1)  # per-row (token)
     wq = quant.quantize(b, n_bits=policy.n_bits, axis=0)   # per-output-channel
     acc = _int_gemm(xq.values, wq.values, backend, policy)
     out = _dequant(acc, xq.scale, wq.scale)
@@ -292,23 +294,24 @@ def _dot_float_prepared(x, prep, policy: GemmPolicy) -> jnp.ndarray:
     """Float-in/float-out against a float-prepared (scaled) fixed operand.
 
     Mirrors the unprepared float path bit-for-bit: the moving operand is
-    quantized per-tensor exactly as there, the integer GEMM is the same
-    backend kernel, and the dequantization multiplies the same two scales.
+    quantized per-row (per-column when the fixed operand is on the left)
+    exactly as there, the integer GEMM is the same backend kernel, and the
+    dequantization multiplies the same two scales.
     """
     from repro.kernels import ops
     x = jnp.asarray(x)
     if prep.side == "right":
         lead = x.shape[:-1]
         x2 = x.reshape(-1, x.shape[-1])
-        xq = quant.quantize(x2, n_bits=policy.n_bits)
+        xq = quant.quantize(x2, n_bits=policy.n_bits, axis=-1)     # per-row
         acc = ops.prepared_matmul(xq.values, prep)
-        out = _dequant(acc, xq.scale, prep.scale)                  # (1, N)
+        out = _dequant(acc, xq.scale, prep.scale)          # (R, 1) x (1, N)
         return _round_to(out.reshape(*lead, prep.values.shape[-1]), x.dtype)
     # fixed left operand W (M, K) x moving (..., K, N)
-    xq = quant.quantize(x, n_bits=policy.n_bits)
+    xq = quant.quantize(x, n_bits=policy.n_bits, axis=-2)          # per-column
     mm = lambda _, bb: ops.prepared_matmul(bb, prep)               # noqa: E731
     acc = ops.batched_app_matmul(mm, prep.values, xq.values)
-    out = _dequant(acc, xq.scale, prep.scale)                      # (M, 1)
+    out = _dequant(acc, xq.scale, prep.scale)          # (M, 1) x (..., 1, N)
     return _round_to(out, x.dtype)
 
 
@@ -320,7 +323,7 @@ def _dot_grouped(x, w_or_prep, policy: GemmPolicy, layer: str) -> jnp.ndarray:
         def mm(x2, w2):
             if isinstance(w2, ops.PreparedOperand):
                 return _dot_float_prepared(x2, w2, policy)
-            xq = quant.quantize(x2, n_bits=policy.n_bits)
+            xq = quant.quantize(x2, n_bits=policy.n_bits, axis=-1)
             wq = quant.quantize(w2, n_bits=policy.n_bits, axis=0)
             backend = policy.resolve(layer)
             acc = _int_gemm(xq.values, wq.values, backend, policy)
@@ -345,15 +348,22 @@ def prepare_weights(w, policy: GemmPolicy, *, layer: str = "",
 
     Returns a ``kernels.ops.PreparedOperand`` that ``dot`` accepts in place
     of the raw matrix. Integer weights prepare as-is (integer-in/int32-out
-    calls); **float** weights are first quantized per-output-channel (axis 0
-    for ``side="right"``, axis 1 for ``side="left"`` — the output dimension
-    either way) and the scale is attached, so ``dot`` runs float-in/float-out
-    quantizing only the moving activations per call.
+    calls); **float** weights are first quantized per-output-channel (the
+    second-to-last axis for ``side="right"``, the last for ``side="left"`` —
+    the output dimension either way) and the scale is attached, so ``dot``
+    runs float-in/float-out quantizing only the moving activations per call.
 
     For ``approx_delta`` this builds the rank-r ``G_B`` (or ``F_A`` for
     ``side="left"``, e.g. the DCT matrix multiplying from the left) once; for
     ``approx_onehot`` the ``T_B`` table. Prepare once per (weights, policy,
     layer) and reuse across every call — or use ``bind`` for a whole model.
+
+    ``w`` may carry extra *leading* stack dimensions (scan-over-layers
+    params, MoE expert stacks); the whole stack is then quantized and
+    prepared in one vectorized pass — a single gather over the stacked bit
+    patterns instead of a host loop over slices. Stacked preparation
+    requires ``restrict=False`` so every slice shares one rank and the
+    prepared pytree can ride a ``lax.scan`` (see ``bind``).
     """
     from repro.kernels import ops
     backend = policy.resolve(layer)
@@ -363,7 +373,7 @@ def prepare_weights(w, policy: GemmPolicy, *, layer: str = "",
             raise ValueError(
                 f"layer {layer!r} resolves to the exact float backend — "
                 "nothing to prepare; pass the raw weights to dot()")
-        axis = 0 if side == "right" else 1
+        axis = -2 if side == "right" else -1
         wq = quant.quantize(jnp.asarray(w), n_bits=policy.n_bits, axis=axis)
         w, scale = wq.values, wq.scale
     prep = ops.prepare_operand(w, backend=backend, k=policy.k,
@@ -465,19 +475,14 @@ def default_layer_name(path) -> Optional[str]:
 def _bind_leaf(w, policy: GemmPolicy, name: str, cached: bool):
     """Prepare one weight leaf; extra leading dims are per-layer/expert stacks."""
     prep_fn = prepare_weights_cached if cached else prepare_weights
-    lead = w.shape[:-2]
-    if not lead:
+    if w.ndim == 2:
         return prep_fn(w, policy, layer=name)
-    # Stacked weights (scan-over-layers params, MoE expert stacks): prepare
-    # every 2-D slice with the generic (unrestricted) factors so all slices
-    # share one rank/pytree structure, then re-stack leaf-wise. lax.scan /
-    # indexed tree.map slice the stack back off at run time.
-    flat = np.asarray(w).reshape((-1,) + w.shape[-2:])
-    preps = [prep_fn(flat[i], policy, layer=name, restrict=False)
-             for i in range(flat.shape[0])]
-    stacked = jax.tree.map(lambda *leaves: jnp.stack(leaves), *preps)
-    return jax.tree.map(lambda leaf: leaf.reshape(lead + leaf.shape[1:]),
-                        stacked)
+    # Stacked weights (scan-over-layers params, MoE expert stacks): one
+    # vectorized quantize + one gather over the stacked bit patterns, with
+    # the generic (unrestricted) factors so all slices share one rank/pytree
+    # structure. lax.scan / indexed tree.map slice the stack back off at run
+    # time.
+    return prep_fn(w, policy, layer=name, restrict=False)
 
 
 def bind(params, policy: GemmPolicy, *,
@@ -531,36 +536,3 @@ def bind(params, policy: GemmPolicy, *,
     return out
 
 
-# ---------------------------------------------------------------------------
-# Deprecated entry points (one-PR migration shims onto `dot`)
-# ---------------------------------------------------------------------------
-
-def _deprecated(old: str) -> None:
-    warnings.warn(f"core.gemm.{old} is deprecated; use core.gemm.dot(a, b, "
-                  "policy, layer=...) — one entry point for float, integer "
-                  "and prepared operands", DeprecationWarning, stacklevel=3)
-
-
-def sa_dot(x: jnp.ndarray, w: jnp.ndarray, policy: GemmPolicy = EXACT, *,
-           layer: str = "") -> jnp.ndarray:
-    """Deprecated alias: float (..., K) x (K, N) GEMM. Use ``dot``."""
-    _deprecated("sa_dot")
-    return dot(x, w, policy, layer=layer)
-
-
-def int_matmul(x_q, w_q, policy: GemmPolicy, *, layer: str = ""):
-    """Deprecated alias: integer-in/integer-out GEMM. Use ``dot``."""
-    _deprecated("int_matmul")
-    return dot(jnp.asarray(x_q, jnp.int32), jnp.asarray(w_q, jnp.int32),
-               policy, layer=layer)
-
-
-def execute(policy: GemmPolicy, a, b, *, layer: str = "") -> jnp.ndarray:
-    """Deprecated alias: integer GEMM with optional prepared operand. Use ``dot``."""
-    from repro.kernels import ops
-    _deprecated("execute")
-    if not isinstance(a, ops.PreparedOperand):
-        a = jnp.asarray(a, jnp.int32)
-    if not isinstance(b, ops.PreparedOperand):
-        b = jnp.asarray(b, jnp.int32)
-    return dot(a, b, policy, layer=layer)

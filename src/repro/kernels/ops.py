@@ -229,21 +229,33 @@ def prepare_operand(w, *, backend: str, k: int = 4, n_bits: int = 8,
 
     ``restrict=False`` disables the weight-restricted delta rank so prepared
     operands of different weights share one pytree structure (see
-    ``error_delta.prepare_delta``).
+    ``error_delta.prepare_delta``). ``w`` may carry leading stack dims
+    (``restrict=False`` only): the whole stack is prepared in one vectorized
+    pass and every leaf of the result keeps the stack dims in front.
     """
     if side not in ("right", "left"):
         raise ValueError(f"side must be 'right' or 'left', got {side!r}")
     w = jnp.asarray(w, jnp.int32)
-    if w.ndim != 2:
-        raise ValueError(f"prepared operand must be 2D, got shape {w.shape}")
+    if w.ndim < 2:
+        raise ValueError(f"prepared operand must be >= 2D, got shape {w.shape}")
+    if w.ndim > 2 and restrict:
+        raise ValueError(
+            f"stacked preparation (shape {w.shape}) requires restrict=False "
+            "so every slice shares one rank/pytree structure")
     delta = t_b = None
     if backend == "approx_delta":
         delta = error_delta.prepare_delta(w, side=side, n_bits=n_bits, k=k,
                                           acc_bits=acc_bits, rank=rank, tol=tol,
                                           restrict=restrict)
     elif backend == "approx_onehot" and side == "right":
-        t_b = lut.build_onehot_weights(w, n_bits=n_bits, k=k,
-                                       acc_bits=acc_bits)
+        build = functools.partial(lut.build_onehot_weights, n_bits=n_bits,
+                                  k=k, acc_bits=acc_bits)
+        if w.ndim == 2:
+            t_b = build(w)
+        else:
+            lead = w.shape[:-2]
+            flat = jax.vmap(build)(w.reshape((-1,) + w.shape[-2:]))
+            t_b = flat.reshape(lead + flat.shape[1:])
     return PreparedOperand(backend, side, k, n_bits, acc_bits, w, delta, t_b,
                            rank, tol)
 

@@ -1,0 +1,67 @@
+"""Per-slot token sampling for the continuous-batching serve engine.
+
+Every slot of the batched decode step carries its own sampling parameters and
+its own RNG stream, so a request's sampled tokens are a function of (request
+seed, request id, token index) only — never of which other requests happen to
+share its batch. `sample_tokens` is vmapped over slots and jit-friendly; the
+engine folds a per-request base key with a per-slot token counter each step.
+
+Knobs (all per slot):
+
+* ``temperature`` — 0 selects greedy argmax (the bit-parity reference path);
+  > 0 divides logits before sampling.
+* ``top_k``       — keep only the k highest logits (0 disables).
+* ``top_p``       — nucleus sampling: keep the smallest set of tokens whose
+  probability mass reaches p (1.0 disables). Applied after top-k, matching
+  the usual serving convention.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling configuration (see module docstring)."""
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
+
+
+GREEDY = SamplingParams()
+
+
+def request_key(seed: int, rid: int) -> jnp.ndarray:
+    """Base RNG key for one request: seed stream folded with the request id."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), rid)
+
+
+def _sample_one(logits, temperature, top_k, top_p, key):
+    """Sample one token from one slot's (V,) logits row."""
+    v = logits.shape[-1]
+    greedy = jnp.argmax(logits).astype(jnp.int32)
+    l = logits.astype(jnp.float32) / jnp.maximum(temperature, 1e-6)
+    # top-k: keep the k highest logits (ties at the threshold all survive)
+    kth = jnp.sort(l)[::-1][jnp.clip(top_k, 1, v) - 1]
+    l = jnp.where((top_k > 0) & (l < kth), -jnp.inf, l)
+    # top-p: smallest prefix of the sorted distribution with mass >= p
+    probs = jax.nn.softmax(l)
+    sorted_p = jnp.sort(probs)[::-1]
+    thr = sorted_p[jnp.argmax(jnp.cumsum(sorted_p) >= top_p)]
+    l = jnp.where((top_p < 1.0) & (probs < thr), -jnp.inf, l)
+    sampled = jax.random.categorical(key, l).astype(jnp.int32)
+    return jnp.where(temperature > 0.0, sampled, greedy)
+
+
+def sample_tokens(logits, temperature, top_k, top_p, keys) -> jnp.ndarray:
+    """Sample one token per slot.
+
+    logits: (B, V) float; temperature (B,), top_k (B,) int32, top_p (B,);
+    keys: (B, 2) uint32 per-slot RNG keys. Returns (B,) int32. Slots with
+    temperature == 0 take the greedy argmax (and ignore their key).
+    """
+    return jax.vmap(_sample_one)(logits, temperature, top_k, top_p, keys)

@@ -1,8 +1,18 @@
-"""Serving driver: batched prefill + decode with a KV cache.
+"""Serving driver: lockstep reference loop + continuous-batching engine CLI.
 
-Debug mode (CPU container): reduced config, greedy-decodes a batch of prompts
-end-to-end — the serving example. Production mode lowers the same step
-functions onto the mesh.
+Two modes:
+
+* **lockstep** (default) — batched prefill + greedy decode with one shared
+  position: every request padded to the same prompt/gen length. This is the
+  bit-parity *reference* for the engine (`lockstep_generate`) and the
+  baseline the engine's throughput is measured against.
+* **``--engine``** — the continuous-batching engine (`launch.engine`):
+  admission queue, prefill-on-admit, per-slot ragged decode, EOS/max-len
+  retirement, slot reuse, per-slot sampling. Give it a ragged workload with
+  ``--requests/--poisson-rate`` (synthetic Poisson trace) or replay a
+  recorded trace with ``--trace FILE`` (JSON lines:
+  ``{"arrival": 3, "prompt_len": 12, "gen_len": 16, "temperature": 0.7}``;
+  unknown lengths fall back to --prompt-len/--gen-len).
 
 ``--backend`` routes every model GEMM through that `GemmPolicy` backend;
 ``--bind`` (the default for non-exact backends) binds the parameter pytree
@@ -10,11 +20,13 @@ first (`core.gemm.bind`) so decode runs weight-stationary — weights are
 quantized and backend-prepared once instead of every token.
 
 Run:  PYTHONPATH=src python -m repro.launch.serve --arch smollm-360m --debug \
-          --prompt-len 16 --gen-len 16 --batch 4 --backend mxu_int8 --bind
+          --engine --requests 8 --poisson-rate 2 --backend mxu_int8 --bind
 """
 from __future__ import annotations
 
 import argparse
+import functools
+import json
 import time
 
 import jax
@@ -25,12 +37,88 @@ from repro.configs import ARCHS, reduced
 from repro.core import gemm
 from repro.models import get_model
 
+from . import engine as engine_mod
+from . import sampling
+
+
+def _build_lockstep_steps(cfg, policy):
+    model = get_model(cfg)
+    prefill = jax.jit(
+        lambda p, bt, c: model.prefill(p, bt, c, policy=policy))
+    decode = jax.jit(
+        lambda p, t, c, pos: model.decode_step(p, t, c, pos, policy=policy))
+    return prefill, decode
+
+
+_cached_lockstep_steps = functools.lru_cache(maxsize=64)(_build_lockstep_steps)
+
+
+def _lockstep_steps(cfg, policy):
+    try:
+        return _cached_lockstep_steps(cfg, policy)
+    except TypeError:    # unhashable policy (dict overrides): fresh build
+        return _build_lockstep_steps(cfg, policy)
+
+
+def lockstep_generate(cfg, model, params, prompts, gen_len, *,
+                      policy=gemm.EXACT, input_embeds=None):
+    """The lockstep reference: batched prefill + greedy decode, one scalar
+    position shared by the whole batch. Returns (B, gen_len) int32 tokens.
+
+    Per-request bit-parity contract: running a request alone here (batch 1)
+    produces exactly the tokens the continuous-batching engine produces for
+    it under greedy sampling, whatever else shares the engine's batch.
+    """
+    b, pl = prompts.shape
+    start = pl + (input_embeds.shape[1] if input_embeds is not None else 0)
+    cache = model.init_cache(b, start + gen_len)
+    batch = {"tokens": prompts}
+    if input_embeds is not None:
+        batch["input_embeds"] = input_embeds
+    # module-level jit cache: repeated calls (bench reps, per-request parity
+    # references) hit compiled executables
+    prefill_j, decode_j = _lockstep_steps(cfg, policy)
+    logits, cache = prefill_j(params, batch, cache)
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    out_tokens = [np.asarray(tok)]
+    for i in range(gen_len - 1):
+        logits, cache = decode_j(params, tok, cache, jnp.int32(start + i))
+        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+        out_tokens.append(np.asarray(tok))
+    return np.concatenate(out_tokens, axis=1)
+
+
+def load_trace(path, vocab_size, default_prompt_len, default_gen_len, *,
+               seed=0):
+    """Replay a recorded request trace (JSON lines) as engine Requests."""
+    rng = np.random.default_rng(seed)
+    requests = []
+    with open(path) as f:
+        for rid, line in enumerate(f):
+            line = line.strip()
+            if not line:
+                continue
+            rec = json.loads(line)
+            plen = int(rec.get("prompt_len", default_prompt_len))
+            requests.append(engine_mod.Request(
+                rid=rid,
+                prompt=rng.integers(0, vocab_size, plen).astype(np.int32),
+                max_new_tokens=int(rec.get("gen_len", default_gen_len)),
+                params=sampling.SamplingParams(
+                    temperature=float(rec.get("temperature", 0.0)),
+                    top_k=int(rec.get("top_k", 0)),
+                    top_p=float(rec.get("top_p", 1.0)),
+                    seed=int(rec.get("seed", 0))),
+                arrival=int(rec.get("arrival", 0))))
+    return requests
+
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="smollm-360m")
     ap.add_argument("--debug", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="lockstep batch size / engine slot count")
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--backend", default="exact", choices=gemm.BACKENDS,
@@ -39,6 +127,22 @@ def main(argv=None):
     ap.add_argument("--bind", action="store_true",
                     help="bind params to the policy (weight-stationary decode)")
     ap.add_argument("--no-bind", dest="bind", action="store_false")
+    ap.add_argument("--engine", action="store_true",
+                    help="continuous-batching engine instead of lockstep")
+    ap.add_argument("--requests", type=int, default=0,
+                    help="engine: synthetic Poisson trace of N requests")
+    ap.add_argument("--poisson-rate", type=float, default=2.0,
+                    help="engine: mean arrivals per decode step")
+    ap.add_argument("--trace", default=None,
+                    help="engine: replay a JSONL request trace")
+    ap.add_argument("--max-len", type=int, default=0,
+                    help="engine: per-slot cache length (default: "
+                         "prompt-len + gen-len)")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--eos-id", type=int, default=None)
     ap.set_defaults(bind=None)
     args = ap.parse_args(argv)
 
@@ -56,30 +160,49 @@ def main(argv=None):
         params = model.bind_params(params, policy)
         print(f"bound params to backend={args.backend} in "
               f"{time.time() - t0:.2f}s (weight-stationary decode)")
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(args.seed)
+
+    if args.engine:
+        sp = sampling.SamplingParams(temperature=args.temperature,
+                                     top_k=args.top_k, top_p=args.top_p,
+                                     seed=args.seed)
+        if args.trace:
+            requests = load_trace(args.trace, cfg.vocab_size, args.prompt_len,
+                                  args.gen_len, seed=args.seed)
+        else:
+            n = args.requests or 2 * args.batch
+            requests = engine_mod.make_poisson_trace(
+                n, rate=args.poisson_rate, vocab_size=cfg.vocab_size,
+                prompt_lens=(args.prompt_len,), gen_lens=(args.gen_len,),
+                seed=args.seed, params=sp)
+        max_len = args.max_len or (args.prompt_len + args.gen_len)
+        eng = engine_mod.ServeEngine(cfg, params, policy=policy,
+                                     max_slots=args.batch, max_len=max_len,
+                                     eos_id=args.eos_id)
+        t0 = time.time()
+        finished = eng.run(requests)
+        dt = time.time() - t0
+        st = eng.stats
+        print(f"engine: {st['finished']} requests, "
+              f"{st['generated_tokens']} tokens in {dt:.2f}s "
+              f"({st['generated_tokens'] / dt:.1f} tok/s) over "
+              f"{st['decode_steps']} decode steps")
+        for rid in sorted(finished)[:4]:
+            f = finished[rid]
+            print(f"  rid={rid} [{f.finish_reason}] "
+                  f"tokens={f.tokens[:8].tolist()}...")
+        return finished
+
     b, pl, gl = args.batch, args.prompt_len, args.gen_len
     prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, pl)), jnp.int32)
-    cache = model.init_cache(b, pl + gl)
-    batch = {"tokens": prompts}
+    input_embeds = None
     if cfg.family == "vlm":
-        batch["input_embeds"] = jnp.asarray(
+        input_embeds = jnp.asarray(
             rng.normal(size=(b, max(2, pl // 4), cfg.d_model)), jnp.float32)
-
-    prefill_j = jax.jit(lambda p, bt, c: model.prefill(p, bt, c, policy=policy))
-    decode_j = jax.jit(
-        lambda p, t, c, pos: model.decode_step(p, t, c, pos, policy=policy))
-
     t0 = time.time()
-    logits, cache = prefill_j(params, batch, cache)
-    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    out_tokens = [np.asarray(tok)]
-    pos = pl + (batch["input_embeds"].shape[1] if cfg.family == "vlm" else 0)
-    for i in range(gl - 1):
-        logits, cache = decode_j(params, tok, cache, jnp.int32(pos + i))
-        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        out_tokens.append(np.asarray(tok))
+    gen = lockstep_generate(cfg, model, params, prompts, gl, policy=policy,
+                            input_embeds=input_embeds)
     dt = time.time() - t0
-    gen = np.concatenate(out_tokens, axis=1)
     print(f"generated {gen.shape} tokens in {dt:.2f}s "
           f"({b * gl / dt:.1f} tok/s); first row: {gen[0][:12]}")
     return gen

@@ -104,7 +104,11 @@ def make_decode_step(cfg: ModelConfig, policy: GemmPolicy = EXACT,
     """Decode step builder. Pass `bind_serving_params(cfg, params, policy)`
     instead of raw params to serve weight-stationary: every weight leaf is
     quantized + backend-prepared once at bind time, so the per-token step
-    performs zero weight quantization / delta-factor construction."""
+    performs zero weight quantization / delta-factor construction.
+
+    `pos` may be a scalar (lockstep decode) or a per-slot `(B,)` position
+    vector — the ragged form the continuous-batching engine
+    (`launch.engine.ServeEngine`) drives this step with."""
     model = model_api.get_model(cfg)
 
     def serve_step(params, token, cache, pos):
@@ -195,7 +199,9 @@ def assemble_decode(cfg: ModelConfig, shape: ShapeSpec, mesh: Mesh,
     c_shard = sh.cache_shardings(cache_shape, mesh, batch=b)
     tok = jax.ShapeDtypeStruct((b, 1), jnp.int32)
     tok_shard = sh.input_shardings({"t": tok}, mesh)["t"]
-    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    # per-slot position vector: the production decode cell lowers the ragged
+    # continuous-batching form (lockstep is its all-equal special case)
+    pos = jax.ShapeDtypeStruct((b,), jnp.int32)
     step = make_decode_step(cfg, policy, batch_axes=sh.batch_axes(mesh))
     logits_shard = NamedSharding(mesh, P())
     return (step, (params_shape, tok, cache_shape, pos),

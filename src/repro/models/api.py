@@ -32,7 +32,11 @@ class Model:
     init_params: Callable
     lm_loss: Callable            # (params, batch, policy) -> scalar
     prefill: Callable            # (params, batch, cache, policy) -> (logits, cache)
-    decode_step: Callable        # (params, token, cache, pos, policy) -> (logits, cache)
+    decode_step: Callable        # (params, token, cache, positions, policy)
+    #                              -> (logits, cache); `positions` is a scalar
+    #                              (lockstep) or a (B,) per-slot vector
+    #                              (ragged continuous batching — the scalar
+    #                              form is the all-equal degenerate case)
     init_cache: Optional[Callable]
 
     def bind_params(self, params, policy: GemmPolicy,
@@ -133,3 +137,24 @@ def cache_specs(cfg: ModelConfig, batch: int, max_len: int, **kw):
     if model.init_cache is None:
         return None
     return jax.eval_shape(lambda: model.init_cache(batch, max_len, **kw))
+
+
+# Batch-dimension index of every cache leaf, by top-level key — uniform and
+# windowed transformer caches, hybrid SSM+KV caches, xLSTM recurrent states.
+# The serve engine uses this to scatter a freshly prefilled single-request
+# cache into its slot of the batched cache (and to gather one slot back out).
+CACHE_BATCH_AXIS = {
+    "k": 1, "v": 1,
+    "k_loc": 2, "v_loc": 2, "kpos_loc": 2, "k_glob": 1, "v_glob": 1,
+    "ssm_s": 2, "ssm_conv": 2, "tail_s": 1, "tail_conv": 1,
+    "m_c": 2, "m_n": 2, "m_m": 2, "s_c": 1, "s_n": 1, "s_h": 1, "s_m": 1,
+}
+
+
+def cache_batch_axes(cache) -> Dict[str, int]:
+    """Per-leaf batch axis for a concrete cache dict (see CACHE_BATCH_AXIS)."""
+    try:
+        return {key: CACHE_BATCH_AXIS[key] for key in cache}
+    except KeyError as err:
+        raise KeyError(f"cache leaf {err.args[0]!r} has no registered batch "
+                       "axis — extend models.api.CACHE_BATCH_AXIS") from None

@@ -117,8 +117,11 @@ def forward(params, cfg: ModelConfig, *, tokens, cache: Optional[Dict] = None,
                                               params["embed"].dtype)
     x = L.constrain_batch(x, batch_axes)
     b, s, _ = x.shape
+    cache_pos = jnp.asarray(cache_pos, jnp.int32)
     if positions is None:
-        positions = jnp.arange(s, dtype=jnp.int32) + (cache_pos if cache is not None else 0)
+        base = cache_pos if cache is not None else jnp.int32(0)
+        offs = jnp.arange(s, dtype=jnp.int32)
+        positions = base[:, None] + offs[None, :] if base.ndim else offs + base
     kv_valid = (cache_pos + s) if cache is not None else s
     new_cache = {k: v for k, v in cache.items()} if cache is not None else None
 
@@ -190,7 +193,10 @@ def prefill(params, cfg, tokens, cache, *, policy=EXACT, attn_chunk=1024,
 
 def decode_step(params, cfg, token, cache, pos, *, policy=EXACT,
                 attn_chunk=1024, batch_axes=(), **_):
-    positions = jnp.full((1,), pos, jnp.int32)
+    """`pos` may be a scalar (lockstep) or a (B,) per-slot position vector
+    (ragged continuous batching) — see `transformer.decode_step`."""
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = pos[:, None] if pos.ndim else jnp.full((1,), pos, jnp.int32)
     hidden, cache = forward(params, cfg, tokens=token, cache=cache,
                             cache_pos=pos, positions=positions, policy=policy,
                             attn_chunk=attn_chunk, batch_axes=batch_axes)

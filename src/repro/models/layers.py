@@ -21,6 +21,12 @@ from repro.core.gemm import EXACT, GemmPolicy, dot
 BIG_NEG = -2.3819763e38  # min bf16
 
 
+def _as_batched(x, dtype=jnp.int32) -> jnp.ndarray:
+    """Normalize a per-sequence vector to batched form: (S,) -> (1, S)."""
+    x = jnp.asarray(x, dtype)
+    return x[None, :] if x.ndim == 1 else x
+
+
 def constrain_batch(x: jnp.ndarray, batch_axes) -> jnp.ndarray:
     """Pin the leading (batch) dim's sharding on activations. GSPMD otherwise
     replicates after the embedding gather (vocab-sharded table x batch-sharded
@@ -84,8 +90,12 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     (B, H, q_chunk, chunk), so 32k prefill fits HBM.
 
     q: (B, Sq, H, D); k/v: (B, Skv, KH, D) (the cache, possibly partly invalid).
-    q_positions: (Sq,) global positions of the queries. kv_valid_len: scalar —
+    q_positions: (Sq,) global positions of the queries, or (B, Sq) per-slot
+    positions (ragged continuous batching — every batch row sits at its own
+    point in its own sequence). kv_valid_len: scalar or per-slot (B,) vector —
     entries at kv index >= kv_valid_len are masked (unwritten cache slots).
+    kv_positions (ring caches): (Skv,) or per-slot (B, Skv). The unbatched
+    forms are the lockstep degenerate case and broadcast to all rows.
     `window` may be a traced per-layer scalar; 0/negative means full attention.
     """
     b, sq, h, d = q.shape
@@ -96,50 +106,53 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     nq = -(-sq // qc)
     qpad = nq * qc - sq
     qh = (q * scale).reshape(b, sq, kh, g, d).transpose(0, 2, 3, 1, 4)
-    qpos = q_positions.astype(jnp.int32)
+    qpos = _as_batched(q_positions)                         # (Bq, Sq)
     if qpad:
         qh = jnp.pad(qh, ((0, 0), (0, 0), (0, 0), (0, qpad), (0, 0)))
-        qpos = jnp.pad(qpos, (0, qpad))
+        qpos = jnp.pad(qpos, ((0, 0), (0, qpad)))
     qh = qh.reshape(b, kh, g, nq, qc, d).transpose(3, 0, 1, 2, 4, 5)  # NQ,B,KH,G,qc,D
-    qpos_c = qpos.reshape(nq, qc)
+    qpos_c = qpos.reshape(qpos.shape[0], nq, qc).swapaxes(0, 1)  # NQ,Bq,qc
 
     nk = -(-skv // chunk)
     kpad = nk * chunk - skv
     if kv_positions is not None:
-        kv_positions = jnp.asarray(kv_positions, jnp.int32)
+        kv_positions = _as_batched(kv_positions)            # (Bk, Skv)
     if kpad:
         k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
         if kv_positions is not None:
-            kv_positions = jnp.pad(kv_positions, (0, kpad),
+            kv_positions = jnp.pad(kv_positions, ((0, 0), (0, kpad)),
                                    constant_values=-(10 ** 9))
     kc = k.reshape(b, nk, chunk, kh, d).transpose(1, 0, 3, 2, 4)      # NK,B,KH,C,D
     vc = v.reshape(b, nk, chunk, kh, d).transpose(1, 0, 3, 2, 4)
-    kvp_c = (kv_positions.reshape(nk, chunk) if kv_positions is not None
-             else None)
+    kvp_c = (kv_positions.reshape(kv_positions.shape[0], nk, chunk)
+             .swapaxes(0, 1) if kv_positions is not None else None)  # NK,Bk,C
+    kv_len = jnp.asarray(kv_valid_len, jnp.int32).reshape(-1)   # (1,) or (B,)
     window_eff = jnp.where(jnp.asarray(window) > 0, jnp.asarray(window),
                            jnp.iinfo(jnp.int32).max).astype(jnp.int32)
 
     def q_body(_, q_in):
-        q_blk, qp = q_in                                   # (B,KH,G,qc,D), (qc,)
+        q_blk, qp = q_in                               # (B,KH,G,qc,D), (Bq,qc)
 
         def kv_body(state: AttnState, kv_in):
             idx, k_blk, v_blk, kp = kv_in
-            kpos = (kp if kvp_c is not None
-                    else idx * chunk + jnp.arange(chunk, dtype=jnp.int32))
+            kpos = (kp if kvp_c is not None            # (Bk, C)
+                    else (idx * chunk
+                          + jnp.arange(chunk, dtype=jnp.int32))[None, :])
             s = jnp.einsum("bkgqd,bkcd->bkgqc", q_blk.astype(jnp.float32),
                            k_blk.astype(jnp.float32))
             s = _softcap(s, softcap)
             if kvp_c is not None:
-                valid = (kpos[None, :] >= 0)      # ring slots carry positions
+                valid = (kpos[:, None, :] >= 0)   # ring slots carry positions
             else:
-                valid = (kpos[None, :] < kv_valid_len)
+                valid = (kpos[:, None, :] < kv_len[:, None, None])
             if causal:
-                delta = qp[:, None] - kpos[None, :]        # (qc, C)
+                delta = qp[:, :, None] - kpos[:, None, :]  # (B*, qc, C)
                 valid = valid & (delta >= 0) & (delta < window_eff)
             else:
-                valid = jnp.broadcast_to(valid, (qc, chunk))
-            s = jnp.where(valid[None, None, None], s, BIG_NEG)
+                valid = jnp.broadcast_to(valid,
+                                         (valid.shape[0], qc, chunk))
+            s = jnp.where(valid[:, None, None], s, BIG_NEG)
             m_new = jnp.maximum(state.m, s.max(axis=-1))
             p = jnp.exp(s - m_new[..., None])
             corr = jnp.exp(state.m - m_new)
@@ -154,7 +167,7 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
             jnp.zeros((b, kh, g, qc), jnp.float32),
         )
         idxs = jnp.arange(nk, dtype=jnp.int32)
-        kvp_xs = kvp_c if kvp_c is not None else jnp.zeros((nk, chunk),
+        kvp_xs = kvp_c if kvp_c is not None else jnp.zeros((nk, 1, chunk),
                                                            jnp.int32)
         # checkpoint the chunk body: backward recomputes each chunk's scores
         # instead of saving O(S^2/chunk) probability residuals (flash backward)
@@ -192,19 +205,22 @@ def cache_load(x: jnp.ndarray) -> jnp.ndarray:
 def ring_write(ck, cv, kpos, k_new, v_new, cache_pos, window: int):
     """Write new K/V into a ring buffer of size `window`.
 
-    ck/cv: (B, W, KH, D); kpos: (W,) positions held by each slot (-inf if empty).
-    Decode (sq=1): slot = pos % W. Prefill (sq=S): requires S % W == 0 or S <= W;
-    the last W entries land contiguously because S % W == 0.
+    ck/cv: (B, W, KH, D); kpos: (B, W) positions held by each row's slots
+    (-2^30 if empty — per-slot rows so ragged batches track their own rings).
+    Decode (sq=1): slot = pos % W per batch row; `cache_pos` may be a scalar
+    (lockstep) or a (B,) per-slot vector. Prefill (sq=S): scalar `cache_pos`;
+    requires S % W == 0 or S <= W — the last W entries land contiguously
+    because S % W == 0.
     """
     b, sq = k_new.shape[0], k_new.shape[1]
+    cp = jnp.asarray(cache_pos, jnp.int32)
     if sq == 1:
-        slot = jnp.mod(jnp.asarray(cache_pos, jnp.int32), window)
-        ck = jax.lax.dynamic_update_slice(
-            ck, cache_store(k_new, ck.dtype), (0, slot, 0, 0))
-        cv = jax.lax.dynamic_update_slice(
-            cv, cache_store(v_new, cv.dtype), (0, slot, 0, 0))
-        kpos = jax.lax.dynamic_update_slice(
-            kpos, jnp.asarray(cache_pos, jnp.int32)[None], (slot,))
+        posv = cp if cp.ndim else jnp.full((b,), cp)        # (B,)
+        slot = jnp.mod(posv, window)
+        bidx = jnp.arange(b)
+        ck = ck.at[bidx, slot].set(cache_store(k_new[:, 0], ck.dtype))
+        cv = cv.at[bidx, slot].set(cache_store(v_new[:, 0], cv.dtype))
+        kpos = kpos.at[bidx, slot].set(posv)
         return ck, cv, kpos
     w = ck.shape[1]
     if sq < w:
@@ -213,16 +229,17 @@ def ring_write(ck, cv, kpos, k_new, v_new, cache_pos, window: int):
             ck, cache_store(k_new, ck.dtype), (0, 0, 0, 0))
         cv = jax.lax.dynamic_update_slice(
             cv, cache_store(v_new, cv.dtype), (0, 0, 0, 0))
-        newpos = jnp.arange(sq, dtype=jnp.int32) + jnp.asarray(cache_pos,
-                                                               jnp.int32)
-        kpos = jax.lax.dynamic_update_slice(kpos, newpos, (0,))
+        newpos = jnp.arange(sq, dtype=jnp.int32) + cp
+        kpos = jax.lax.dynamic_update_slice(
+            kpos, jnp.broadcast_to(newpos, (b, sq)), (0, 0))
         return ck, cv, kpos
     # sq >= w: the last w tokens land at slots ((start + j) % w) — a roll
-    start = jnp.asarray(cache_pos, jnp.int32) + sq - w
+    start = cp + sq - w
     shift = jnp.mod(start, w)
     ck = jnp.roll(cache_store(k_new[:, -w:], ck.dtype), shift, axis=1)
     cv = jnp.roll(cache_store(v_new[:, -w:], cv.dtype), shift, axis=1)
-    kpos = start + jnp.mod(jnp.arange(w, dtype=jnp.int32) - shift, w)
+    kpos = jnp.broadcast_to(
+        start + jnp.mod(jnp.arange(w, dtype=jnp.int32) - shift, w), (b, w))
     return ck, cv, kpos
 
 
@@ -258,6 +275,12 @@ def attention_block(p, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
     buffer of size `window` — decode attends over the ring via per-slot
     positions; prefill attends in-sequence and then fills the ring with the
     last `window` K/V. Returns (out, new_cache_or_ring).
+
+    `q_positions` may be (Sq,) or per-slot (B, Sq); `cache_pos` and
+    `kv_valid_len` may be scalars (lockstep decode — the whole batch at one
+    position) or (B,) vectors (ragged continuous batching — each batch row
+    writes and masks its own cache length). Scalar and all-equal-vector
+    forms are bit-identical.
     """
     b, sq, _ = x.shape
     q = dot(x, p["wq"], policy, layer=layer + "/wq")
@@ -288,10 +311,17 @@ def attention_block(p, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
 
     if kv_cache is not None:
         ck, cv = kv_cache
-        ck = jax.lax.dynamic_update_slice(ck, cache_store(k, ck.dtype),
-                                          (0, cache_pos, 0, 0))
-        cv = jax.lax.dynamic_update_slice(cv, cache_store(v, cv.dtype),
-                                          (0, cache_pos, 0, 0))
+        cp = jnp.asarray(cache_pos, jnp.int32)
+        if cp.ndim:         # per-slot scatter: row i writes at its own cp[i]
+            bidx = jnp.arange(b)[:, None]
+            sidx = cp[:, None] + jnp.arange(sq, dtype=jnp.int32)[None, :]
+            ck = ck.at[bidx, sidx].set(cache_store(k, ck.dtype))
+            cv = cv.at[bidx, sidx].set(cache_store(v, cv.dtype))
+        else:
+            ck = jax.lax.dynamic_update_slice(ck, cache_store(k, ck.dtype),
+                                              (0, cp, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, cache_store(v, cv.dtype),
+                                              (0, cp, 0, 0))
         new_cache = (ck, cv)
         k_all, v_all = cache_load(ck), cache_load(cv)
         valid = kv_valid_len if kv_valid_len is not None else cache_pos + sq

@@ -42,11 +42,17 @@ def init_moe(key, cfg: ModelConfig, dtype):
 
 def moe_block(p, x, cfg: ModelConfig, *, policy: GemmPolicy = EXACT,
               layer: str = ""):
-    """x: (B, S, d) -> (B, S, d). Returns (out, aux_loss)."""
+    """x: (B, S, d) -> (B, S, d). Returns (out, aux_loss).
+
+    Decode (S == 1) runs at full capacity: the buffer is only (E, B, d) and a
+    capacity drop there would make one request's output depend on which other
+    requests happen to share its batch — continuous batching needs each
+    slot's decode to be batch-composition-independent.
+    """
     b, s, d = x.shape
     t = b * s
     e, topk = cfg.n_experts, cfg.n_active_experts
-    cap = int(t * topk / e * cfg.capacity_factor) + 1
+    cap = t if s == 1 else int(t * topk / e * cfg.capacity_factor) + 1
 
     xf = x.reshape(t, d)
     logits = xf.astype(jnp.float32) @ p["router"]                  # (T, E)
@@ -84,7 +90,11 @@ def moe_block(p, x, cfg: ModelConfig, *, policy: GemmPolicy = EXACT,
     flat_out = out_e.reshape(e * cap, d)
     gathered = jnp.where(keep[:, None], flat_out[jnp.minimum(dest, e * cap - 1)], 0)
     contrib = gathered * flat_p[:, None].astype(gathered.dtype)
-    combined = jnp.zeros((t, d), gathered.dtype).at[tok_idx].add(contrib)
+    # combine each token's top-k contributions with a fixed association order
+    # (token-major reshape + axis sum) — a scatter-add over tok_idx leaves the
+    # f32 summation order to the backend, which is shape-dependent and would
+    # break bit-parity between lockstep and ragged-batch decode
+    combined = contrib.reshape(t, topk, d).sum(axis=1)
     out = combined.reshape(b, s, d).astype(x.dtype)
 
     if "shared" in p:

@@ -111,7 +111,9 @@ def forward(params: PyTree, cfg: ModelConfig, *, tokens=None, input_embeds=None,
             remat: bool = False, remat_save_attn: bool = False,
             batch_axes=()):
     """Returns (hidden, new_cache, aux_loss). Input is tokens (B, S) or
-    precomputed embeddings (audio/vlm stubs)."""
+    precomputed embeddings (audio/vlm stubs). `cache_pos` may be a scalar
+    (lockstep) or a (B,) per-slot vector (ragged continuous batching);
+    `positions` then defaults to per-row `cache_pos[:, None] + arange(S)`."""
     if input_embeds is None:
         x = params["embed"][tokens]                          # (B, S, d)
         if cfg.family != "audio":
@@ -126,9 +128,11 @@ def forward(params: PyTree, cfg: ModelConfig, *, tokens=None, input_embeds=None,
                  tok_emb], axis=1)
     x = L.constrain_batch(x, batch_axes)
     b, s, _ = x.shape
+    cache_pos = jnp.asarray(cache_pos, jnp.int32)
     if positions is None:
-        positions = jnp.arange(s, dtype=jnp.int32) + (
-            cache_pos if cache is not None else 0)
+        base = cache_pos if cache is not None else jnp.int32(0)
+        offs = jnp.arange(s, dtype=jnp.int32)
+        positions = base[:, None] + offs[None, :] if base.ndim else offs + base
     windows = layer_windows(cfg)
     kv_valid = (cache_pos + s) if cache is not None else s
 
@@ -291,7 +295,8 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
         return {
             "k_loc": jnp.zeros((g, per - 1, batch, w, kh, hd), dtype),
             "v_loc": jnp.zeros((g, per - 1, batch, w, kh, hd), dtype),
-            "kpos_loc": jnp.full((g, per - 1, w), -(2 ** 30), jnp.int32),
+            "kpos_loc": jnp.full((g, per - 1, batch, w), -(2 ** 30),
+                                 jnp.int32),
             "k_glob": jnp.zeros((g, batch, max_len, kh, hd), dtype),
             "v_glob": jnp.zeros((g, batch, max_len, kh, hd), dtype),
         }
@@ -312,8 +317,12 @@ def prefill(params, cfg: ModelConfig, tokens, cache, *, input_embeds=None,
 def decode_step(params, cfg: ModelConfig, token, cache, pos, *,
                 policy: GemmPolicy = EXACT, attn_chunk: int = 1024,
                 batch_axes=()):
-    """One decode step. token: (B, 1); pos: scalar int32 (current length)."""
-    positions = jnp.full((1,), pos, jnp.int32)
+    """One decode step. token: (B, 1); pos: scalar int32 (current length,
+    lockstep — the whole batch at one position) or (B,) int32 per-slot
+    positions (ragged continuous batching; the scalar form is the all-equal
+    degenerate case and is bit-identical to the vector form)."""
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = pos[:, None] if pos.ndim else jnp.full((1,), pos, jnp.int32)
     hidden, cache, _ = forward(params, cfg, tokens=token, cache=cache,
                                cache_pos=pos, positions=positions, policy=policy,
                                attn_chunk=attn_chunk, batch_axes=batch_axes)

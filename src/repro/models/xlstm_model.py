@@ -160,6 +160,9 @@ def prefill(params, cfg, tokens, cache, *, policy=EXACT, batch_axes=(), **_):
 
 def decode_step(params, cfg, token, cache, pos, *, policy=EXACT,
                 batch_axes=(), **_):
+    """`pos` (scalar or per-slot (B,) vector) is accepted for API uniformity
+    but unused: the recurrence carries no positional state, so ragged
+    continuous batching is position-free here."""
     hidden, cache = forward(params, cfg, tokens=token, cache=cache,
                             policy=policy, batch_axes=batch_axes)
     logits = dot(hidden, L.head_weight(params, hidden.dtype), policy,

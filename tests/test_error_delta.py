@@ -159,15 +159,15 @@ def test_policy_delta_backend_bit_equals_lut_backend():
     wq = _rand((33, 5), rng)
     pol_d = gemm.GemmPolicy(backend="approx_delta", k=4)
     pol_l = gemm.GemmPolicy(backend="approx_lut", k=4)
-    np.testing.assert_array_equal(np.asarray(gemm.int_matmul(xq, wq, pol_d)),
-                                  np.asarray(gemm.int_matmul(xq, wq, pol_l)))
+    np.testing.assert_array_equal(np.asarray(gemm.dot(xq, wq, pol_d)),
+                                  np.asarray(gemm.dot(xq, wq, pol_l)))
 
 
-def test_sa_dot_delta_close_to_float():
+def test_dot_delta_close_to_float():
     rng = np.random.default_rng(12)
     x = jnp.asarray(rng.normal(size=(4, 24)), jnp.float32)
     w = jnp.asarray(rng.normal(size=(24, 8)), jnp.float32)
-    out = gemm.sa_dot(x, w, gemm.GemmPolicy(backend="approx_delta", k=2))
+    out = gemm.dot(x, w, gemm.GemmPolicy(backend="approx_delta", k=2))
     ref = x @ w
     rel = float(jnp.abs(out - ref).mean() / jnp.abs(ref).mean())
     assert rel < 0.08, rel

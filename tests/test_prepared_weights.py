@@ -8,7 +8,7 @@ Invariants:
 * The pad-and-batch shim round-trips batched ``(L, M, K) x (K, N)`` and
   ``(M, K) x (L, K, N)`` workloads (non-multiple-of-8 shapes included)
   against a per-item 2D loop.
-* ``gemm.execute`` rejects stale/mis-sided prepared operands.
+* ``gemm.dot`` rejects stale/mis-sided prepared operands.
 """
 import numpy as np
 import jax.numpy as jnp
@@ -86,7 +86,7 @@ def test_property_shim_batched_right_roundtrip(batch, m, kd, n, kf):
     b = _rand((kd, n), rng)
     pol = gemm.GemmPolicy(backend="approx_delta", k=kf)
     prep = gemm.prepare_weights(b, pol)
-    for out in (gemm.execute(pol, a, b), gemm.execute(pol, a, prep)):
+    for out in (gemm.dot(a, b, pol), gemm.dot(a, prep, pol)):
         out = np.asarray(out)
         assert out.shape == (batch, m, n)
         for i in range(batch):
@@ -105,7 +105,7 @@ def test_property_shim_batched_left_roundtrip(batch, m, kd, n, kf):
     b = _rand((batch, kd, n), rng)
     pol = gemm.GemmPolicy(backend="approx_delta", k=kf)
     prep = gemm.prepare_weights(a, pol, side="left")
-    for out in (gemm.execute(pol, a, b), gemm.execute(pol, prep, b)):
+    for out in (gemm.dot(a, b, pol), gemm.dot(prep, b, pol)):
         out = np.asarray(out)
         assert out.shape == (batch, m, n)
         for i in range(batch):
@@ -118,7 +118,7 @@ def test_shim_multi_lead_dims_and_lut_backend():
     a = _rand((2, 3, 5, 7), rng)                    # lead dims (2, 3)
     b = _rand((7, 4), rng)
     pol = gemm.GemmPolicy(backend="approx_lut", k=4)
-    out = np.asarray(gemm.execute(pol, a, b))
+    out = np.asarray(gemm.dot(a, b, pol))
     assert out.shape == (2, 3, 5, 4)
     np.testing.assert_array_equal(
         out[1, 2], np.asarray(lut.lut_matmul(a[1, 2], b, k=4)))
@@ -133,28 +133,28 @@ def test_shim_rejects_double_batch():
 
 # --- guard rails ------------------------------------------------------------
 
-def test_execute_rejects_stale_prepared():
+def test_dot_rejects_stale_prepared():
     rng = np.random.default_rng(2)
     a, b = _rand((6, 8), rng), _rand((8, 4), rng)
     prep = gemm.prepare_weights(b, gemm.GemmPolicy(backend="approx_delta", k=4))
     with pytest.raises(ValueError, match="stale"):
-        gemm.execute(gemm.GemmPolicy(backend="approx_delta", k=6), a, prep)
+        gemm.dot(a, prep, gemm.GemmPolicy(backend="approx_delta", k=6))
     with pytest.raises(ValueError, match="stale"):
-        gemm.execute(gemm.GemmPolicy(backend="approx_lut", k=4), a, prep)
+        gemm.dot(a, prep, gemm.GemmPolicy(backend="approx_lut", k=4))
     with pytest.raises(ValueError, match="stale"):
-        gemm.execute(gemm.GemmPolicy(backend="approx_delta", k=4,
-                                     delta_rank=3), a, prep)
+        gemm.dot(a, prep, gemm.GemmPolicy(backend="approx_delta", k=4,
+                                     delta_rank=3))
 
 
-def test_execute_rejects_wrong_side():
+def test_dot_rejects_wrong_side():
     rng = np.random.default_rng(3)
     a, b = _rand((6, 8), rng), _rand((8, 4), rng)
     pol = gemm.GemmPolicy(backend="approx_delta", k=4)
     prep = gemm.prepare_weights(b, pol)                      # side="right"
     with pytest.raises(ValueError, match="side"):
-        gemm.execute(pol, prep, b)
+        gemm.dot(prep, b, pol)
     with pytest.raises(ValueError, match="prepared"):
-        gemm.execute(pol, prep, prep)
+        gemm.dot(prep, prep, pol)
 
 
 def test_prepare_weights_resolves_layer_overrides():

@@ -60,24 +60,37 @@ def test_policy_overrides_longest_prefix():
 
 @pytest.mark.parametrize("backend", ["mxu_int8", "approx_lut", "approx_oracle",
                                      "approx_onehot", "approx_delta"])
-def test_sa_dot_backends_close_to_float(backend):
+def test_dot_backends_close_to_float(backend):
     rng = np.random.default_rng(1)
     x = jnp.asarray(rng.normal(size=(4, 24)), jnp.float32)
     w = jnp.asarray(rng.normal(size=(24, 8)), jnp.float32)
     pol = gemm.GemmPolicy(backend=backend, k=2)
-    out = gemm.sa_dot(x, w, pol)
+    out = gemm.dot(x, w, pol)
     ref = x @ w
     rel = float(jnp.abs(out - ref).mean() / jnp.abs(ref).mean())
     assert rel < 0.08, (backend, rel)
 
 
-def test_sa_dot_exact_k0_matches_int_quant():
+def test_dot_exact_k0_matches_int_quant():
     rng = np.random.default_rng(2)
     x = jnp.asarray(rng.normal(size=(6, 16)), jnp.float32)
     w = jnp.asarray(rng.normal(size=(16, 6)), jnp.float32)
-    lut0 = gemm.sa_dot(x, w, gemm.GemmPolicy(backend="approx_lut", k=0))
-    mxu = gemm.sa_dot(x, w, gemm.GemmPolicy(backend="mxu_int8"))
+    lut0 = gemm.dot(x, w, gemm.GemmPolicy(backend="approx_lut", k=0))
+    mxu = gemm.dot(x, w, gemm.GemmPolicy(backend="mxu_int8"))
     np.testing.assert_allclose(np.asarray(lut0), np.asarray(mxu), atol=1e-5)
+
+
+def test_dot_float_rows_are_batch_independent():
+    """Per-row activation quantization: a row's output bits don't depend on
+    what else shares the batch (the serve-engine ragged-batch invariant)."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.normal(size=(5, 16)), jnp.float32)
+    w = jnp.asarray(rng.normal(size=(16, 6)), jnp.float32)
+    pol = gemm.GemmPolicy(backend="mxu_int8")
+    full = np.asarray(gemm.dot(x, w, pol))
+    for i in range(x.shape[0]):
+        alone = np.asarray(gemm.dot(x[i:i + 1], w, pol))
+        np.testing.assert_array_equal(full[i:i + 1], alone)
 
 
 # --- optimizer / schedule ---------------------------------------------------
