@@ -1,0 +1,82 @@
+"""Regression gate for serve-engine benchmarks.
+
+Compares a freshly produced BENCH_serve_engine.json against the committed
+baseline and fails (exit 1) when any matched **relative** metric drops by
+more than ``--max-drop`` (default 20%). The gated metrics are same-run
+ratios — engine-vs-lockstep speedup, paged-vs-contiguous concurrency, and
+the chunked-vs-per-request prefill speedup — because absolute tokens/s is a
+property of the runner (a CI machine differs from the baseline's machine by
+far more than any real regression), while each row's ratio divides out the
+hardware: a >20% ratio drop means the engine lost ground against its own
+baseline measured in the same process. Absolute tok/s keys are printed for
+context but never gate. Rows are matched on their identifying keys (cell,
+backend, bound); cells present in only one file are reported but not fatal,
+so adding a cell never breaks the gate.
+
+Usage (the scheduled CI job):
+    git show HEAD:BENCH_serve_engine.json > /tmp/baseline.json
+    python -m benchmarks.run serve_engine_bench
+    python benchmarks/compare.py BENCH_serve_engine.json /tmp/baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+# same-run ratios: machine-invariant, gate-worthy
+GATED_KEYS = ("speedup", "speedup_vs_per_batch", "concurrency_ratio")
+# absolute throughputs: printed for context only
+INFO_KEYS = ("engine_tok_per_s", "paged_tok_per_s", "chunked_tok_per_s")
+
+
+def row_key(row: dict) -> tuple:
+    return (row.get("cell", "engine_vs_lockstep"), row.get("backend", ""),
+            row.get("bound", False))
+
+
+def compare(new: dict, base: dict, max_drop: float) -> int:
+    base_rows = {row_key(r): r for r in base.get("results", [])}
+    failures = []
+    for row in new.get("results", []):
+        ref = base_rows.get(row_key(row))
+        if ref is None:
+            print(f"new cell (no baseline): {row_key(row)}")
+            continue
+        for key in INFO_KEYS:
+            if key in row and key in ref and ref[key]:
+                print(f"info {row_key(row)} {key}: {ref[key]} -> {row[key]} "
+                      f"({row[key] / ref[key]:.2f}x, not gated)")
+        for key in GATED_KEYS:
+            if key not in row or key not in ref or not ref[key]:
+                continue
+            ratio = row[key] / ref[key]
+            status = "FAIL" if ratio < 1.0 - max_drop else "ok"
+            print(f"{status} {row_key(row)} {key}: {ref[key]} -> {row[key]} "
+                  f"({ratio:.2f}x)")
+            if ratio < 1.0 - max_drop:
+                failures.append((row_key(row), key, ratio))
+    if failures:
+        print(f"\n{len(failures)} relative metric(s) dropped more than "
+              f"{max_drop:.0%} vs the committed baseline")
+        return 1
+    print("\nall matched relative metrics within tolerance")
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("new", help="freshly produced bench json")
+    ap.add_argument("baseline", help="committed baseline json")
+    ap.add_argument("--max-drop", type=float, default=0.2,
+                    help="fatal fractional throughput drop (default 0.2)")
+    args = ap.parse_args()
+    with open(args.new) as f:
+        new = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+    sys.exit(compare(new, base, args.max_drop))
+
+
+if __name__ == "__main__":
+    main()

@@ -362,10 +362,17 @@ def serve_engine_bench(fast: bool = False):
     requests grouped into arrival-order batches, every request padded to the
     slowest one; (b) a per-batch-padded lockstep variant (each batch padded
     only to its own maxima — a stronger baseline, recorded for reference);
-    and (c) `launch.engine.ServeEngine` with the same number of slots.
-    Useful-token throughput (each request's own tokens / wall time) per
-    backend x bind cell, plus the vectorized `gemm.bind` latency, recorded
-    in BENCH_serve_engine.json.
+    and (c) `launch.engine.ServeEngine` (paged + chunked prefill) with the
+    same number of slots. Useful-token throughput (each request's own
+    tokens / wall time) per backend x bind cell, plus the vectorized
+    `gemm.bind` latency, recorded in BENCH_serve_engine.json.
+
+    Two PR-5 cells ride along: **capacity** (max concurrent requests at one
+    fixed KV budget, paged block pool vs contiguous per-slot regions) and
+    **chunked_prefill** (useful tokens/s on a bursty arrival trace, chunked
+    prefill vs the contiguous engine's one-request-per-dispatch prefill).
+    The scheduled CI job diffs this file against the committed baseline and
+    fails on a >20% drop in the same-run relative metrics — engine-vs-lockstep speedup, concurrency ratio, chunked-prefill speedup (benchmarks/compare.py).
     """
     import json
     import os
@@ -441,13 +448,16 @@ def serve_engine_bench(fast: bool = False):
                 eng_s, st = dt, st_i
         assert st["generated_tokens"] == useful, (st, useful)
         padded = run_lockstep(False)
-        row = {"backend": backend, "bound": bind, "bind_s": round(bind_s, 3),
+        row = {"cell": "engine_vs_lockstep",
+               "backend": backend, "bound": bind, "bind_s": round(bind_s, 3),
                "slots": slots, "requests": n_req,
                "useful_tokens": useful, "lockstep_padded_tokens": padded,
                "lockstep_tok_per_s": round(useful / lock_s, 1),
                "lockstep_per_batch_tok_per_s": round(useful / lock_pb_s, 1),
                "engine_tok_per_s": round(useful / eng_s, 1),
                "engine_decode_steps": st["decode_steps"],
+               "slot_utilization": st["slot_utilization"],
+               "block_utilization": st["block_utilization"],
                "speedup": round(lock_s / eng_s, 2),
                "speedup_vs_per_batch": round(lock_pb_s / eng_s, 2)}
         results.append(row)
@@ -457,6 +467,95 @@ def serve_engine_bench(fast: bool = False):
               f"engine={row['engine_tok_per_s']}tok/s "
               f"lockstep={row['lockstep_tok_per_s']}tok/s "
               f"bind={bind_s:.2f}s")
+
+    # --- capacity cell: concurrent requests at one fixed KV budget ----------
+    cap_len, cap_bs, cap_slots_c = 32, 4, 4
+    budget_blocks = cap_slots_c * (cap_len // cap_bs)   # contiguous budget
+    n_cap = 12 if fast else 18
+    cap_trace = [engine_mod.Request(
+        rid=r, prompt=np.random.default_rng(r).integers(
+            0, cfg.vocab_size, 6).astype(np.int32), max_new_tokens=6)
+        for r in range(n_cap)]                          # 3 blocks each
+
+    def run_cap(paged):
+        if paged:
+            eng = engine_mod.ServeEngine(
+                cfg, params, max_slots=n_cap, max_len=cap_len,
+                block_size=cap_bs, n_blocks=budget_blocks, prefill_chunk=6)
+        else:
+            eng = engine_mod.ServeEngine(cfg, params, max_slots=cap_slots_c,
+                                         max_len=cap_len, paged=False)
+        eng.run(list(cap_trace))
+        return eng.stats, eng.stats["peak_active_slots"]
+
+    run_cap(True), run_cap(False)                       # warm compile caches
+    (st_p, peak_p), dt_p = engine_mod.elapsed(lambda: run_cap(True))
+    (st_c, peak_c), dt_c = engine_mod.elapsed(lambda: run_cap(False))
+    useful_cap = sum(r.max_new_tokens for r in cap_trace)
+    row = {"cell": "capacity", "kv_budget_tokens": budget_blocks * cap_bs,
+           "block_size": cap_bs, "requests": n_cap,
+           "paged_peak_concurrent": int(peak_p),
+           "contiguous_peak_concurrent": int(peak_c),
+           "concurrency_ratio": round(peak_p / peak_c, 2),
+           "paged_tok_per_s": round(useful_cap / dt_p, 1),
+           "contiguous_tok_per_s": round(useful_cap / dt_c, 1),
+           "paged_block_utilization": st_p["block_utilization"]}
+    results.append(row)
+    print(f"serve_capacity,{dt_p / useful_cap * 1e6:.0f},"
+          f"paged={peak_p}req vs contiguous={peak_c}req at "
+          f"{row['kv_budget_tokens']}tok budget "
+          f"({row['concurrency_ratio']}x concurrency)")
+
+    # --- chunked-prefill cell: bursty arrivals, heterogeneous prompts -------
+    # Real traffic carries many distinct prompt lengths. The contiguous
+    # engine's fused prefill-on-admit jit-specializes per prompt length, so a
+    # bursty heterogeneous trace pays one compilation per new length *at
+    # serve time*; chunked prefill feeds prompts through the shared batched
+    # step and compiles at most prefill_chunk widths. Measured **cold**
+    # (single shot, each path paying its own jit specializations — the
+    # admission overhead the ROADMAP item targets), with steady-state warm
+    # numbers recorded alongside.
+    n_cp = 10 if fast else 16
+    rng_cp = np.random.default_rng(7)
+    t_arr = 0.0
+    cp_trace = []
+    for r in range(n_cp):
+        t_arr += rng_cp.exponential(0.5)
+        cp_trace.append(engine_mod.Request(
+            rid=r,
+            prompt=rng_cp.integers(0, cfg.vocab_size,
+                                   8 + r).astype(np.int32),
+            max_new_tokens=6, arrival=int(t_arr)))      # 16 distinct lengths
+
+    def run_cp(paged):
+        eng = engine_mod.ServeEngine(
+            cfg, params, max_slots=4, max_len=8 + n_cp + 8, paged=paged,
+            **({"block_size": cap_bs, "prefill_chunk": 8} if paged else {}))
+        eng.run(list(cp_trace))
+        return eng.stats
+
+    useful_cp = sum(r.max_new_tokens for r in cp_trace)
+    _, cold_p = engine_mod.elapsed(lambda: run_cp(True))
+    _, cold_c = engine_mod.elapsed(lambda: run_cp(False))
+    reps = 2 if fast else 3
+    warm_p = min(engine_mod.elapsed(lambda: run_cp(True))[1]
+                 for _ in range(reps))
+    warm_c = min(engine_mod.elapsed(lambda: run_cp(False))[1]
+                 for _ in range(reps))
+    row = {"cell": "chunked_prefill", "requests": n_cp,
+           "distinct_prompt_lens": n_cp, "prefill_chunk": 8,
+           "chunked_tok_per_s": round(useful_cp / cold_p, 1),
+           "per_request_tok_per_s": round(useful_cp / cold_c, 1),
+           "speedup": round(cold_c / cold_p, 2),
+           "warm_chunked_tok_per_s": round(useful_cp / warm_p, 1),
+           "warm_per_request_tok_per_s": round(useful_cp / warm_c, 1)}
+    results.append(row)
+    print(f"serve_chunked_prefill,{cold_p / useful_cp * 1e6:.0f},"
+          f"{row['speedup']}x vs per-request prefill on {n_cp} distinct "
+          f"prompt lengths ({row['chunked_tok_per_s']} vs "
+          f"{row['per_request_tok_per_s']} tok/s cold; warm "
+          f"{row['warm_chunked_tok_per_s']} vs "
+          f"{row['warm_per_request_tok_per_s']})")
     path = os.path.join(os.path.dirname(__file__), "..",
                         "BENCH_serve_engine.json")
     with open(path, "w") as f:

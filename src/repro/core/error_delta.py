@@ -321,6 +321,39 @@ def _low_patterns(w_u: np.ndarray, n_bits: int, k: int) -> Tuple[int, ...]:
     return tuple(int(v) for v in np.unique(w_u & low_mask))
 
 
+def _restrict_eligible(fac: DeltaFactors, patterns: Tuple[int, ...]) -> bool:
+    """Whether the weight-restricted re-factorization applies — the single
+    eligibility rule shared by `prepare_delta` and `restricted_rank`, so the
+    adaptive correction-form decision can never diverge from what the
+    preparation actually builds."""
+    return (fac.rank > 0 and fac.exact
+            and len(patterns) <= RESTRICT_MAX_PATTERNS)
+
+
+def restricted_rank(w, *, side: str = "right", n_bits: int = 8, k: int = 4,
+                    signed: bool = True, acc_bits: int = 24,
+                    rank: Optional[int] = None,
+                    tol: Optional[float] = None) -> int:
+    """The correction rank ``prepare_delta(..., restrict=True)`` would use.
+
+    Cheap relative to the full preparation (one cached SVD of the reached
+    sub-table, no gathers over the weights) — `core.gemm.prepare_weights`
+    uses it to decide, per layer, whether the rank-r' correction matmuls are
+    even worth it: when r' exceeds the fixed operand's output width the
+    per-element gather path (``approx_lut``) does strictly less work (the
+    ROADMAP DCT-k=6 regime), and the two are bit-identical at exact rank.
+    """
+    fac = delta_factors(n_bits, k, signed, acc_bits, rank=rank, tol=tol)
+    if fac.rank == 0:
+        return 0
+    w_np = np.asarray(jnp.asarray(w, jnp.int32)) & ((1 << n_bits) - 1)
+    patterns = _low_patterns(w_np, n_bits, k)
+    if not _restrict_eligible(fac, patterns):
+        return fac.rank
+    axis = 1 if side == "right" else 0
+    return _restricted_factors(n_bits, k, signed, acc_bits, axis, patterns)[2]
+
+
 def prepare_delta(w, *, side: str = "right", n_bits: int = 8, k: int = 4,
                   signed: bool = True, acc_bits: int = 24,
                   rank: Optional[int] = None,
@@ -353,8 +386,7 @@ def prepare_delta(w, *, side: str = "right", n_bits: int = 8, k: int = 4,
     w_s = _signed_values(w_u, n_bits, signed)
     w_np = np.asarray(w_u)
     patterns = _low_patterns(w_np, n_bits, k) if (restrict and fac.rank) else ()
-    restrict = (restrict and fac.rank > 0 and fac.exact
-                and len(patterns) <= RESTRICT_MAX_PATTERNS)
+    restrict = restrict and _restrict_eligible(fac, patterns)
     if restrict:
         # E depends on the fixed operand only through its low-k bit patterns;
         # factor the reached sub-table at its own (smaller) exact rank.

@@ -58,6 +58,14 @@ class GemmPolicy:
     (None = exact rank, bit-identical to ``approx_lut``; a tolerance trades
     correction FLOPs for a bounded per-product error on top of the paper's
     approximation).
+
+    ``delta_adaptive`` auto-selects the correction *form* per layer on the
+    weight-stationary path: when the weight-restricted rank r' of a prepared
+    layer exceeds its output width, the rank-r' correction matmuls cost more
+    than the per-element gather they replace (the ROADMAP DCT-k=6 regime),
+    so ``resolve`` falls back to ``approx_lut`` for that layer — bit-
+    identical output, strictly less work. `prepare_weights` supplies the
+    (out_width, delta_rank) hints; without hints resolution is unchanged.
     """
     backend: str = "exact"
     k: int = 4
@@ -66,8 +74,10 @@ class GemmPolicy:
     overrides: Optional[Dict[str, str]] = None
     delta_rank: Optional[int] = None
     delta_tol: Optional[float] = None
+    delta_adaptive: bool = False
 
-    def resolve(self, layer: str = "") -> str:
+    def resolve(self, layer: str = "", *, out_width: Optional[int] = None,
+                delta_rank: Optional[int] = None) -> str:
         if self.overrides:
             best = None
             choice = self.backend
@@ -75,8 +85,13 @@ class GemmPolicy:
                 if layer.startswith(prefix) and (best is None
                                                  or len(prefix) > len(best)):
                     best, choice = prefix, be
-            return choice
-        return self.backend
+        else:
+            choice = self.backend
+        if (choice == "approx_delta" and self.delta_adaptive
+                and out_width is not None and delta_rank is not None
+                and delta_rank > out_width):
+            return "approx_lut"
+        return choice
 
 
 EXACT = GemmPolicy(backend="exact")
@@ -130,14 +145,23 @@ def _int_gemm(x_q, w_q, backend: str, policy: GemmPolicy):
 
 def _check_prepared(prep, backend: str, policy: GemmPolicy, layer: str) -> None:
     mismatches = []
-    if prep.backend != backend:
+    # the adaptive form: prepare_weights may resolve an approx_delta layer to
+    # the (bit-identical) gather path when its restricted rank exceeds the
+    # output width — accept the lut-prepared operand under the delta policy.
+    # Only at the exact rank: a truncated delta_rank/delta_tol policy has no
+    # bit-identical gather counterpart, so there the mismatch stays fatal.
+    adaptive_ok = (policy.delta_adaptive and backend == "approx_delta"
+                   and prep.backend == "approx_lut"
+                   and policy.delta_rank is None and policy.delta_tol is None)
+    if prep.backend != backend and not adaptive_ok:
         mismatches.append(f"backend {prep.backend!r} != {backend!r}")
     if prep.k != policy.k:
         mismatches.append(f"k {prep.k} != {policy.k}")
     if (prep.n_bits, prep.acc_bits) != (policy.n_bits, policy.acc_bits):
         mismatches.append("n_bits/acc_bits differ")
-    if backend == "approx_delta" and (prep.rank, prep.tol) != (
-            policy.delta_rank, policy.delta_tol):
+    if (backend == "approx_delta" and not adaptive_ok
+            and (prep.rank, prep.tol) != (policy.delta_rank,
+                                          policy.delta_tol)):
         mismatches.append("delta_rank/delta_tol differ")
     if mismatches:
         raise ValueError(
@@ -364,7 +388,16 @@ def prepare_weights(w, policy: GemmPolicy, *, layer: str = "",
     patterns instead of a host loop over slices. Stacked preparation
     requires ``restrict=False`` so every slice shares one rank and the
     prepared pytree can ride a ``lax.scan`` (see ``bind``).
+
+    Under ``policy.delta_adaptive``, an ``approx_delta`` layer whose
+    weight-restricted rank exceeds its output width is prepared for the
+    (bit-identical) ``approx_lut`` gather path instead — the per-layer
+    correction-form auto-selection (`GemmPolicy.resolve` hints). Adaptive
+    selection needs the restricted rank, so it applies to the 2-D
+    ``restrict=True`` path only (stacked/bound preparations share the
+    generic rank and keep the delta form).
     """
+    from repro.core import error_delta
     from repro.kernels import ops
     backend = policy.resolve(layer)
     scale = None
@@ -376,6 +409,18 @@ def prepare_weights(w, policy: GemmPolicy, *, layer: str = "",
         axis = -2 if side == "right" else -1
         wq = quant.quantize(jnp.asarray(w), n_bits=policy.n_bits, axis=axis)
         w, scale = wq.values, wq.scale
+    if (backend == "approx_delta" and policy.delta_adaptive and restrict
+            and policy.delta_rank is None and policy.delta_tol is None
+            and getattr(w, "ndim", 0) == 2):
+        # adaptive only at the exact (default) rank, where the delta and
+        # gather forms are bit-identical — a truncated delta_rank/delta_tol
+        # correction is deliberately approximate and must not be silently
+        # swapped for the exact gather path
+        r_eff = error_delta.restricted_rank(
+            w, side=side, n_bits=policy.n_bits, k=policy.k,
+            acc_bits=policy.acc_bits)
+        out_w = w.shape[-1] if side == "right" else w.shape[-2]
+        backend = policy.resolve(layer, out_width=out_w, delta_rank=r_eff)
     prep = ops.prepare_operand(w, backend=backend, k=policy.k,
                                n_bits=policy.n_bits, acc_bits=policy.acc_bits,
                                side=side, rank=policy.delta_rank,
@@ -406,7 +451,7 @@ def prepare_weights_cached(w, policy: GemmPolicy, *, layer: str = "",
     digest = hashlib.blake2b(w_np.tobytes(), digest_size=16).digest()
     key = (digest, w_np.shape, w_np.dtype.str, policy.resolve(layer),
            policy.k, policy.n_bits, policy.acc_bits, policy.delta_rank,
-           policy.delta_tol, side, restrict)
+           policy.delta_tol, policy.delta_adaptive, side, restrict)
     hit = _PREPARED_CACHE.get(key)
     if hit is not None:
         _PREPARED_CACHE.move_to_end(key)

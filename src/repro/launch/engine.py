@@ -8,24 +8,39 @@ of one jit'd decode step) continuously busy under ragged real-world traffic:
 * **admission queue** — submitted requests wait FIFO; a request is admitted
   as soon as a slot is free (and, in trace replay, its arrival step has
   passed — full-queue backpressure is just the queue outlasting the pool).
-* **prefill-on-admit** — the admitted request is prefilled alone (exact
-  prompt length, batch 1, a fresh single-slot cache) and the resulting cache
-  is scattered into its slot of the batched cache, wiping all state a prior
-  occupant left there. jit caches one executable per distinct prompt length.
+* **paged KV cache** (default) — full-attention KV lives in a shared block
+  pool (`launch.paged.BlockPool`): admission reserves a request's worst-case
+  block footprint (backpressuring on the *pool*, not on `slots x max_len`
+  contiguous regions), blocks are allocated on first write and freed at
+  retirement. At a fixed HBM budget concurrency is bounded by the tokens
+  requests actually hold, not by the per-slot maximum.
+* **chunked prefill** — prompts stream through the *same* jit'd batched step
+  as decode, in chunks of `prefill_chunk` tokens: a step's batch mixes
+  prompt chunks and single decode tokens (per-slot `q_len`), so admission
+  never dispatches a one-request prefill and bursty arrivals batch their
+  prompt work. The final chunk samples the request's first token with the
+  same RNG stream the fused admit used to.
 * **per-slot ragged decode** — one jit'd step decodes all slots at their own
   `positions: (B,)`, writes each slot's KV/SSM state at its own offset, and
   samples each slot under its own parameters and RNG stream
   (`launch.sampling`). Inactive slots ride along as masked garbage: their
-  outputs are discarded and their state is rebuilt at the next admit.
+  writes are redirected to the pool's dump block and their state is wiped at
+  the next admit (`models.api.reset_slot`).
 * **retirement & slot reuse** — a slot retires on EOS or on its request's
-  token budget and is immediately available to the admission loop.
+  token budget, returns its blocks to the pool, and is immediately
+  available to the admission loop.
+
+``paged=False`` keeps the PR-4 contiguous engine: per-slot `max_len` cache
+regions, fused whole-prompt prefill-on-admit — the baseline the capacity
+benchmark compares against, bit-identical streams to the paged engine.
 
 Per-request determinism: activations are quantized per-row (`core.gemm.dot`),
-attention/caches are per-slot, MoE decode dispatch runs at full capacity, and
-sampling keys are per-request — so each request's token stream is bit-identical
-to running it alone through the lockstep loop (`launch.serve.lockstep_generate`),
-for every GEMM backend, with raw or `gemm.bind`-bound params. See
-docs/serving.md.
+attention/caches are per-slot, MoE serving dispatch runs at full capacity,
+recurrent and ring state advances per token under a validity mask (so prompt
+chunking cannot move a bit), and sampling keys are per-request — so each
+request's token stream is bit-identical to running it alone through the
+lockstep loop (`launch.serve.lockstep_generate`), for every GEMM backend,
+with raw or `gemm.bind`-bound params. See docs/serving.md.
 """
 from __future__ import annotations
 
@@ -42,7 +57,9 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core.gemm import EXACT, GemmPolicy
 from repro.models import api as model_api
+from . import paged as paged_mod
 from . import sampling
+from . import steps as steps_mod
 
 PyTree = Any
 
@@ -105,17 +122,64 @@ def _build_steps(cfg: ModelConfig, policy: GemmPolicy):
     return jax.jit(admit), jax.jit(decode), jax.jit(retire)
 
 
+def _build_paged_steps(cfg: ModelConfig, policy: GemmPolicy):
+    """Jitted paged-engine steps: one fused **chunk step** (mixed
+    prefill+decode batch -> per-slot sample + device-side state advance; jit
+    specializes per chunk width T, bounded by `prefill_chunk` distinct
+    widths — the step narrows to the widest live chunk), a fused **admit** (slot state + per-slot cache
+    wipe), and the retire flag-flip. The scheduler syncs one sampled-token
+    vector per step, exactly like the contiguous engine."""
+    step_fn = steps_mod.make_chunk_step(cfg, policy)
+
+    def chunk(params, tokens, cache, state, q_len, emit, input_embeds=None,
+              embed_mask=None):
+        logits, cache = step_fn(params, tokens, cache, state["positions"],
+                                q_len, input_embeds, embed_mask)
+        # token i of a request samples with fold_in(base_key, i): the final
+        # prefill chunk emits token 0, decode steps fold the counter
+        keys = jax.vmap(jax.random.fold_in)(state["keys"], state["counters"])
+        tok = sampling.sample_tokens(logits[:, 0].astype(jnp.float32),
+                                     state["temperature"], state["top_k"],
+                                     state["top_p"], keys)
+        state = dict(
+            state,
+            positions=state["positions"] + q_len,
+            counters=state["counters"] + emit.astype(jnp.int32),
+            last_tok=jnp.where(emit, tok, state["last_tok"][:, 0])[:, None])
+        return tok, cache, state
+
+    def admit(cache, state, slot, new_temp, new_topk, new_topp, new_key):
+        cache = model_api.reset_slot(cache, slot)
+        state = dict(
+            state,
+            positions=state["positions"].at[slot].set(0),
+            counters=state["counters"].at[slot].set(0),
+            active=state["active"].at[slot].set(True),
+            temperature=state["temperature"].at[slot].set(new_temp),
+            top_k=state["top_k"].at[slot].set(new_topk),
+            top_p=state["top_p"].at[slot].set(new_topp),
+            keys=state["keys"].at[slot].set(new_key))
+        return cache, state
+
+    def retire(state, slot):
+        return dict(state, active=state["active"].at[slot].set(False))
+
+    return jax.jit(chunk), jax.jit(admit), jax.jit(retire)
+
+
 _cached_build_steps = functools.lru_cache(maxsize=64)(_build_steps)
+_cached_build_paged = functools.lru_cache(maxsize=64)(_build_paged_steps)
 
 
-def cached_steps(cfg: ModelConfig, policy: GemmPolicy):
+def cached_steps(cfg: ModelConfig, policy: GemmPolicy, paged: bool = False):
     """`_build_steps` memoized by (cfg, policy) so every engine instance (and
     benchmark rep) reuses the compiled executables. Policies with dict
     overrides are unhashable and fall back to a fresh build."""
+    build = _cached_build_paged if paged else _cached_build_steps
     try:
-        return _cached_build_steps(cfg, policy)
+        return build(cfg, policy)
     except TypeError:
-        return _build_steps(cfg, policy)
+        return (_build_paged_steps if paged else _build_steps)(cfg, policy)
 
 
 @dataclasses.dataclass
@@ -146,11 +210,22 @@ class FinishedRequest:
 
 
 class ServeEngine:
-    """Slot-based continuous batching for any decode-capable model family."""
+    """Slot-based continuous batching for any decode-capable model family.
+
+    ``paged=True`` (default) serves from a paged KV cache with chunked
+    prefill: ``block_size`` tokens per block, ``n_blocks`` pool blocks
+    (default: the contiguous budget, ``max_slots * ceil(max_len /
+    block_size)`` — shrink it, or raise ``max_slots`` at the same pool, to
+    trade per-slot headroom for concurrency), ``prefill_chunk`` prompt
+    tokens admitted per step. ``paged=False`` is the PR-4 contiguous
+    engine; both produce bit-identical per-request streams.
+    """
 
     def __init__(self, cfg: ModelConfig, params: PyTree, *,
                  policy: GemmPolicy = EXACT, max_slots: int = 4,
-                 max_len: int = 64, eos_id: Optional[int] = None):
+                 max_len: int = 64, eos_id: Optional[int] = None,
+                 paged: bool = True, block_size: int = 8,
+                 n_blocks: Optional[int] = None, prefill_chunk: int = 8):
         if cfg.family == "audio":
             raise ValueError("encoder-only arch has no decode step")
         self.cfg = cfg
@@ -160,10 +235,28 @@ class ServeEngine:
         self.n_slots = max_slots
         self.max_len = max_len
         self.eos_id = eos_id
+        self.paged = paged
 
-        self.cache = self.model.init_cache(max_slots, max_len)
-        # a pristine single-slot cache reused (never mutated) by every admit
-        self._zero_cache1 = self.model.init_cache(1, max_len)
+        if paged:
+            spec = (paged_mod.PagedSpec(n_blocks, block_size)
+                    if n_blocks is not None
+                    else paged_mod.default_spec(max_slots, max_len, block_size))
+            self.pool = paged_mod.BlockPool(spec, max_slots, max_len)
+            self.cache = self.model.init_paged_cache(
+                max_slots, max_len, spec.n_blocks, spec.block_size)
+            self.prefill_chunk = max(1, prefill_chunk)
+            # per-slot prefill cursor (None once the slot is decoding) and
+            # host mirror of the device-side write position
+            self.slot_prefill_off: List[Optional[int]] = [None] * max_slots
+            self.slot_pos = np.zeros(max_slots, np.int64)
+            self._tables_dev = None          # device mirror, rebuilt on change
+            self.occ = {"slot_steps": 0, "slot_active_steps": 0,
+                        "block_steps": 0, "block_alloc_steps": 0,
+                        "prefill_tokens": 0, "decode_tokens": 0}
+        else:
+            self.cache = self.model.init_cache(max_slots, max_len)
+            # a pristine single-slot cache reused (never mutated) by every admit
+            self._zero_cache1 = self.model.init_cache(1, max_len)
 
         b = max_slots
         # device-resident per-slot state, touched only inside the jitted
@@ -188,9 +281,14 @@ class ServeEngine:
         self.finished: Dict[int, FinishedRequest] = {}
         self.step_count = 0
         self.decode_steps = 0
+        self.peak_active = 0                 # measured, both engine modes
 
-        self._admit_step, self._decode, self._retire = cached_steps(cfg,
-                                                                    policy)
+        if paged:
+            self._chunk, self._admit_paged_step, self._retire = cached_steps(
+                cfg, policy, paged=True)
+        else:
+            self._admit_step, self._decode, self._retire = cached_steps(cfg,
+                                                                        policy)
 
     # --- scheduler ----------------------------------------------------------
 
@@ -202,6 +300,30 @@ class ServeEngine:
         if req.input_embeds is not None:
             n += req.input_embeds.shape[0]
         return n
+
+    def _reserved_blocks(self, req: Request) -> int:
+        """Worst-case block footprint: prompt + clamped budget, minus the
+        final token whose KV is never written."""
+        return self.pool.spec.blocks_for(self._start_len(req)
+                                         + self._budget(req) - 1)
+
+    def _admit_paged(self, slot: int, req: Request) -> None:
+        start = self._start_len(req)
+        if start > self.max_len:
+            raise ValueError(f"request {req.rid}: prompt length {start} "
+                             f"exceeds max_len {self.max_len}")
+        self.pool.reserve(slot, self._reserved_blocks(req))
+        sp = req.params
+        self.cache, self.state = self._admit_paged_step(
+            self.cache, self.state, slot, jnp.float32(sp.temperature),
+            jnp.int32(sp.top_k), jnp.float32(sp.top_p),
+            sampling.request_key(sp.seed, req.rid))
+        self.active[slot] = True
+        self.slot_req[slot] = req
+        self.slot_out[slot] = []
+        self.slot_admitted[slot] = self.step_count
+        self.slot_prefill_off[slot] = 0
+        self.slot_pos[slot] = 0
 
     def _admit(self, slot: int, req: Request) -> None:
         start = self._start_len(req)
@@ -248,6 +370,10 @@ class ServeEngine:
             self.state = self._retire(self.state, slot)
             self.slot_req[slot] = None
             self.slot_out[slot] = []
+            if self.paged:
+                self.pool.release(slot)      # free-on-retire
+                self.slot_prefill_off[slot] = None
+                self._tables_dev = None      # force re-upload of the tables
 
     def _admit_ready(self) -> None:
         for slot in range(self.n_slots):
@@ -257,13 +383,111 @@ class ServeEngine:
                 return                       # trace replay: not yet arrived
             if self.active[slot]:
                 continue
-            self._admit(slot, self.queue.popleft())
+            if self.paged:
+                need = self._reserved_blocks(self.queue[0])
+                if need > self.pool.spec.n_blocks:
+                    raise ValueError(
+                        f"request {self.queue[0].rid} needs {need} blocks "
+                        f"but the pool holds {self.pool.spec.n_blocks} — "
+                        "raise n_blocks or lower max_new_tokens")
+                if not self.pool.can_reserve(need):
+                    return                   # out of blocks: FIFO backpressure
+                self._admit_paged(slot, self.queue.popleft())
+            else:
+                self._admit(slot, self.queue.popleft())
+
+    def _paged_step(self) -> None:
+        """One mixed prefill+decode chunk step over all slots."""
+        live = np.flatnonzero(self.active)
+        prefilling = [s for s in live if self.slot_prefill_off[s] is not None]
+        # step width: the widest remaining chunk this step actually needs
+        # (bounded by prefill_chunk, so at most prefill_chunk distinct
+        # compiled widths) — decode rows in a mixed step pay for the width,
+        # so never pad the step beyond the largest live chunk
+        t = max((min(self.prefill_chunk,
+                     self._start_len(self.slot_req[s])
+                     - self.slot_prefill_off[s]) for s in prefilling),
+                default=1)
+        b = self.n_slots
+        q_len = np.zeros(b, np.int32)
+        emit = np.zeros(b, bool)
+        tokens = np.zeros((b, t), np.int32)
+        # VLM embeds ride the step only while some chunk actually covers
+        # patch positions — pure-decode steps skip the patch_proj GEMM the
+        # embed-select path would otherwise pay every token
+        vlm = self.cfg.family == "vlm" and any(
+            self.slot_prefill_off[s] is not None
+            and self.slot_req[s].input_embeds is not None
+            and self.slot_prefill_off[s] < self.slot_req[s].input_embeds.shape[0]
+            for s in live)
+        embeds = np.zeros((b, t, self.cfg.d_model), np.float32) if vlm else None
+        emask = np.zeros((b, t), bool) if vlm else None
+        clens = {}
+        tables_dirty = self._tables_dev is None
+        for s in live:
+            req = self.slot_req[s]
+            off = self.slot_prefill_off[s]
+            if off is not None:              # prompt chunk
+                start = self._start_len(req)
+                clen = min(t, start - off)
+                clens[s] = clen
+                q_len[s] = clen
+                emit[s] = off + clen == start
+                s_img = (req.input_embeds.shape[0]
+                         if req.input_embeds is not None else 0)
+                for j in range(clen):
+                    pos = off + j
+                    if pos < s_img:
+                        embeds[s, j] = req.input_embeds[pos]
+                        emask[s, j] = True
+                    else:
+                        tokens[s, j] = req.prompt[pos - s_img]
+                tables_dirty |= self.pool.ensure(s, off + clen)
+            else:                            # decode row
+                q_len[s] = 1
+                emit[s] = True
+                tokens[s, 0] = self.slot_out[s][-1]
+                tables_dirty |= self.pool.ensure(s, int(self.slot_pos[s]) + 1)
+        if tables_dirty:
+            self._tables_dev = jnp.asarray(self.pool.tables)
+        self.cache = dict(self.cache, block_tables=self._tables_dev)
+        args = [self.params, jnp.asarray(tokens), self.cache, self.state,
+                jnp.asarray(q_len), jnp.asarray(emit)]
+        if vlm:
+            args += [jnp.asarray(embeds), jnp.asarray(emask)]
+        tok, self.cache, self.state = self._chunk(*args)
+        tok_np = np.asarray(tok)             # the one per-step device sync
+        self.step_count += 1
+        if len(prefilling) < len(live):
+            self.decode_steps += 1
+        self.occ["slot_steps"] += b
+        self.occ["slot_active_steps"] += len(live)
+        self.occ["block_steps"] += self.pool.spec.n_blocks
+        self.occ["block_alloc_steps"] += self.pool.allocated_blocks
+        for s in live:
+            if s in clens:
+                clen = clens[s]
+                self.slot_prefill_off[s] += clen
+                self.slot_pos[s] += clen
+                self.occ["prefill_tokens"] += clen
+                if self.slot_prefill_off[s] == self._start_len(self.slot_req[s]):
+                    self.slot_prefill_off[s] = None
+            else:
+                self.slot_pos[s] += 1
+                self.occ["decode_tokens"] += 1
+            if emit[s]:
+                self.slot_out[s].append(int(tok_np[s]))
+                self._maybe_retire(s)
 
     def step(self) -> None:
-        """Admit what fits, then run one batched ragged decode step."""
+        """Admit what fits, then run one batched ragged step."""
         self._admit_ready()
+        self.peak_active = max(self.peak_active, int(self.active.sum()))
         if not self.active.any():
             self.step_count += 1             # idle tick (waiting on arrivals)
+            return
+        if self.paged:
+            self._paged_step()
             return
         next_tok, self.cache, self.state = self._decode(self.params,
                                                         self.cache,
@@ -286,10 +510,26 @@ class ServeEngine:
         return dict(self.finished)
 
     @property
-    def stats(self) -> Dict[str, int]:
+    def stats(self) -> Dict[str, Any]:
         gen = sum(len(f.tokens) for f in self.finished.values())
-        return {"steps": self.step_count, "decode_steps": self.decode_steps,
-                "generated_tokens": gen, "finished": len(self.finished)}
+        out: Dict[str, Any] = {
+            "steps": self.step_count, "decode_steps": self.decode_steps,
+            "generated_tokens": gen, "finished": len(self.finished),
+            "peak_active_slots": self.peak_active}
+        if self.paged:
+            occ = self.occ
+            out.update({
+                # occupancy: fraction of slot-steps / pool-block-steps that
+                # held live work, plus the prefill-vs-decode token split
+                "slot_utilization": round(occ["slot_active_steps"]
+                                          / max(1, occ["slot_steps"]), 3),
+                "block_utilization": round(occ["block_alloc_steps"]
+                                           / max(1, occ["block_steps"]), 3),
+                "peak_allocated_blocks": self.pool.peak_allocated,
+                "prefill_tokens": occ["prefill_tokens"],
+                "decode_tokens": occ["decode_tokens"],
+            })
+        return out
 
 
 def make_poisson_trace(n_requests: int, *, rate: float, vocab_size: int,

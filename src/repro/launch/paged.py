@@ -1,0 +1,156 @@
+"""Paged KV-cache block pool: free-list allocator + per-slot block tables.
+
+The contiguous engine reserves a full ``max_len`` KV region per slot, so HBM
+— not compute — caps concurrency. The paged cache splits KV storage into
+fixed-size **blocks** shared by all slots: each full-attention cache leaf is a
+device-resident pool ``(L, n_blocks + 1, block_size, KH, hd)`` and each slot
+owns a **block table** row ``(max_blocks,)`` mapping its logical token
+positions to pool blocks (`pos // block_size -> block id`,
+`pos % block_size` -> offset within the block). Attention reads gather
+through the table (`models.layers.chunked_attention`), writes scatter to
+``(block, offset)`` pairs; the table itself is host-authoritative and pushed
+into the jit'd step as a small ``(B, max_blocks)`` int32 input.
+
+Allocation protocol (all host-side, O(1) per event):
+
+* **reserve-on-admit** — admission reserves the request's worst-case block
+  footprint ``ceil((prompt_len + token_budget - 1) / block_size)``; a request
+  is only admitted while ``sum(reserved) <= n_blocks``, so a later
+  alloc-on-write can never fail mid-stream (out-of-blocks pressure lands on
+  the admission queue, never on a live request).
+* **alloc-on-write** — blocks are physically taken from the free list only
+  when a chunk/decode write first touches them, so pool-utilization metrics
+  reflect tokens actually held, not reservations.
+* **free-on-retire** — retirement returns every block the slot owned and
+  clears its table row back to the dump block.
+
+Block index ``n_blocks`` (the last pool row) is the **dump block**: masked
+writes — padded chunk tokens, inactive slots — are redirected there so they
+can never corrupt another slot's blocks. No live table row ever maps to it
+for a valid position, and reads mask anything past ``kv_valid_len``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class PagedSpec:
+    """Pool geometry: ``n_blocks`` usable blocks of ``block_size`` tokens."""
+    n_blocks: int
+    block_size: int
+
+    @property
+    def dump(self) -> int:
+        """Pool index of the scratch block masked writes are redirected to."""
+        return self.n_blocks
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-max(int(n_tokens), 0) // self.block_size)
+
+
+class BlockPool:
+    """Host-side free-list allocator over a paged KV pool (see module docs)."""
+
+    def __init__(self, spec: PagedSpec, n_slots: int, max_len: int):
+        if spec.block_size < 1 or spec.n_blocks < 1:
+            raise ValueError(f"bad paged spec {spec}")
+        self.spec = spec
+        self.n_slots = n_slots
+        self.max_blocks = spec.blocks_for(max_len)
+        # LIFO free list: retired blocks are reused first (cache-friendly)
+        self._free: List[int] = list(range(spec.n_blocks - 1, -1, -1))
+        self.tables = np.full((n_slots, self.max_blocks), spec.dump, np.int32)
+        self._owned: List[List[int]] = [[] for _ in range(n_slots)]
+        self._reserved = np.zeros(n_slots, np.int64)
+        self.peak_allocated = 0
+
+    # --- accounting ---------------------------------------------------------
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    @property
+    def allocated_blocks(self) -> int:
+        return self.spec.n_blocks - len(self._free)
+
+    @property
+    def reserved_blocks(self) -> int:
+        return int(self._reserved.sum())
+
+    def can_reserve(self, n_blocks: int) -> bool:
+        """Would a request needing ``n_blocks`` fit without overcommitting?"""
+        return self.reserved_blocks + n_blocks <= self.spec.n_blocks
+
+    # --- lifecycle ----------------------------------------------------------
+
+    def reserve(self, slot: int, n_blocks: int) -> None:
+        if self._reserved[slot] or self._owned[slot]:
+            raise RuntimeError(f"slot {slot} already holds a reservation")
+        if n_blocks > self.max_blocks:
+            raise ValueError(f"request needs {n_blocks} blocks but a slot "
+                             f"table holds only {self.max_blocks}")
+        if not self.can_reserve(n_blocks):
+            raise RuntimeError(
+                f"out of blocks: need {n_blocks}, "
+                f"{self.spec.n_blocks - self.reserved_blocks} unreserved — "
+                "admission should have backpressured")
+        self._reserved[slot] = n_blocks
+
+    def ensure(self, slot: int, upto_tokens: int) -> bool:
+        """Alloc-on-write: own every block covering positions < upto_tokens.
+
+        Returns True when the slot's table row changed (new blocks mapped).
+        """
+        need = self.spec.blocks_for(upto_tokens)
+        if need <= len(self._owned[slot]):
+            return False
+        if need > self._reserved[slot]:
+            raise RuntimeError(
+                f"slot {slot} writing past its reservation "
+                f"({need} > {self._reserved[slot]} blocks)")
+        while len(self._owned[slot]) < need:
+            blk = self._free.pop()
+            self.tables[slot, len(self._owned[slot])] = blk
+            self._owned[slot].append(blk)
+        self.peak_allocated = max(self.peak_allocated, self.allocated_blocks)
+        return True
+
+    def release(self, slot: int) -> None:
+        """Free-on-retire: return the slot's blocks, clear its table row."""
+        self._free.extend(reversed(self._owned[slot]))
+        self._owned[slot] = []
+        self._reserved[slot] = 0
+        self.tables[slot, :] = self.spec.dump
+
+    # --- invariants (exercised by the property tests) -----------------------
+
+    def check(self) -> None:
+        """No leaks, no aliasing, tables consistent with ownership."""
+        owned_all = [b for lst in self._owned for b in lst]
+        assert len(owned_all) + len(self._free) == self.spec.n_blocks, \
+            "block leak: owned + free != pool"
+        assert len(set(owned_all)) == len(owned_all), \
+            "block aliased across live slots"
+        assert not (set(owned_all) & set(self._free)), \
+            "block simultaneously owned and free"
+        for slot, lst in enumerate(self._owned):
+            assert len(lst) <= self._reserved[slot], \
+                f"slot {slot} owns more than it reserved"
+            row = self.tables[slot]
+            assert list(row[:len(lst)]) == lst, f"slot {slot} table mismatch"
+            assert (row[len(lst):] == self.spec.dump).all(), \
+                f"slot {slot} table maps unowned positions"
+
+
+def default_spec(n_slots: int, max_len: int, block_size: int) -> PagedSpec:
+    """Pool sized to the contiguous engine's budget: every slot can still hold
+    ``max_len`` tokens, so admission never backpressures more than the
+    contiguous engine would — capacity wins come from setting ``n_blocks``
+    below this (or ``n_slots`` above the contiguous count at equal budget)."""
+    return PagedSpec(n_blocks=n_slots * (-(-max_len // block_size)),
+                     block_size=block_size)

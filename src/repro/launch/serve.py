@@ -138,6 +138,19 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=0,
                     help="engine: per-slot cache length (default: "
                          "prompt-len + gen-len)")
+    ap.add_argument("--paged", dest="paged", action="store_true", default=True,
+                    help="engine: paged KV cache + chunked prefill (default)")
+    ap.add_argument("--contiguous", dest="paged", action="store_false",
+                    help="engine: PR-4 contiguous per-slot caches with "
+                         "whole-prompt prefill-on-admit")
+    ap.add_argument("--block-size", type=int, default=8,
+                    help="engine: paged KV block size in tokens")
+    ap.add_argument("--n-blocks", type=int, default=0,
+                    help="engine: KV pool size in blocks (default: the "
+                         "contiguous budget, slots * ceil(max_len / block))")
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="engine: prompt tokens admitted per chunked-prefill "
+                         "step")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
@@ -176,9 +189,15 @@ def main(argv=None):
                 prompt_lens=(args.prompt_len,), gen_lens=(args.gen_len,),
                 seed=args.seed, params=sp)
         max_len = args.max_len or (args.prompt_len + args.gen_len)
+        kw = {}
+        if args.paged:
+            kw = {"block_size": args.block_size,
+                  "n_blocks": args.n_blocks or None,
+                  "prefill_chunk": args.prefill_chunk}
         eng = engine_mod.ServeEngine(cfg, params, policy=policy,
                                      max_slots=args.batch, max_len=max_len,
-                                     eos_id=args.eos_id)
+                                     eos_id=args.eos_id, paged=args.paged,
+                                     **kw)
         t0 = time.time()
         finished = eng.run(requests)
         dt = time.time() - t0
@@ -187,6 +206,16 @@ def main(argv=None):
               f"{st['generated_tokens']} tokens in {dt:.2f}s "
               f"({st['generated_tokens'] / dt:.1f} tok/s) over "
               f"{st['decode_steps']} decode steps")
+        if args.paged:
+            tok_total = max(1, st["prefill_tokens"] + st["decode_tokens"])
+            print(f"occupancy: slots {st['slot_utilization']:.1%} "
+                  f"(peak {st['peak_active_slots']}/{args.batch}), "
+                  f"cache blocks {st['block_utilization']:.1%} "
+                  f"(peak {st['peak_allocated_blocks']}/"
+                  f"{eng.pool.spec.n_blocks}), "
+                  f"token split {st['prefill_tokens']}/{st['decode_tokens']} "
+                  f"prefill/decode "
+                  f"({st['prefill_tokens'] / tok_total:.0%} prefill)")
         for rid in sorted(finished)[:4]:
             f = finished[rid]
             print(f"  rid={rid} [{f.finish_reason}] "

@@ -118,6 +118,28 @@ def make_decode_step(cfg: ModelConfig, policy: GemmPolicy = EXACT,
     return serve_step
 
 
+def make_chunk_step(cfg: ModelConfig, policy: GemmPolicy = EXACT,
+                    batch_axes=()):
+    """The unified serving step behind the paged engine: one jit-able function
+    covering decode (T == 1, q_len == 1) and chunked prefill (T = chunk
+    budget, per-slot q_len <= T, trailing padding masked) — a mixed
+    prefill+decode batch is just rows with different q_len. `cache` may be
+    contiguous or paged (``block_tables`` leaf); `pos` is the per-slot (B,)
+    write position of each row's first token. Returns each slot's
+    last-valid-token logits (B, 1, V) plus the updated cache."""
+    model = model_api.get_model(cfg)
+
+    def chunk_step(params, tokens, cache, pos, q_len, input_embeds=None,
+                   embed_mask=None):
+        kw = {}
+        if input_embeds is not None:
+            kw = {"input_embeds": input_embeds, "embed_mask": embed_mask}
+        return model.chunk_step(params, tokens, cache, pos, q_len,
+                                policy=policy, batch_axes=batch_axes, **kw)
+
+    return chunk_step
+
+
 def bind_serving_params(cfg: ModelConfig, params, policy: GemmPolicy, **kw):
     """Bind a param pytree to the serving policy (see `core.gemm.bind`).
 

@@ -38,6 +38,16 @@ class Model:
     #                              (ragged continuous batching — the scalar
     #                              form is the all-equal degenerate case)
     init_cache: Optional[Callable]
+    chunk_step: Optional[Callable] = None
+    #   (params, tokens (B, T), cache, positions (B,), q_len (B,), policy,
+    #    [input_embeds (B, T, d), embed_mask (B, T)]) -> (logits (B, 1, V),
+    #   cache) — the unified serving step: decode is T == 1 / q_len == 1,
+    #   chunked prefill is T = chunk budget with per-slot q_len <= T, and a
+    #   mixed prefill+decode batch is just rows with different q_len.
+    init_paged_cache: Optional[Callable] = None
+    #   (batch, max_len, n_blocks, block_size) -> cache whose full-attention
+    #   leaves are block pools + a per-slot ``block_tables`` leaf
+    #   (launch.paged); recurrent / ring leaves stay per-slot.
 
     def bind_params(self, params, policy: GemmPolicy,
                     **kw) -> "gemm.BoundParams":
@@ -64,9 +74,19 @@ def get_model(cfg: ModelConfig) -> Model:
             return transformer.decode_step(params, cfg, token, cache, pos,
                                            policy=policy, batch_axes=batch_axes)
 
+        def chunk(params, tokens, cache, pos, q_len, policy=EXACT,
+                  batch_axes=(), input_embeds=None, embed_mask=None):
+            return transformer.chunk_step(
+                params, cfg, tokens, cache, pos, q_len, policy=policy,
+                batch_axes=batch_axes, input_embeds=input_embeds,
+                embed_mask=embed_mask)
+
         return Model(cfg, lambda key: transformer.init_params(cfg, key),
                      loss, prefill, decode,
-                     lambda b, s, **kw: transformer.init_cache(cfg, b, s, **kw))
+                     lambda b, s, **kw: transformer.init_cache(cfg, b, s, **kw),
+                     chunk_step=chunk,
+                     init_paged_cache=lambda b, s, nb, bs, **kw:
+                     transformer.init_cache(cfg, b, s, paged=(nb, bs), **kw))
     if cfg.family == "hybrid":
         def loss(params, batch, policy=EXACT, remat=True, batch_axes=()):
             return hybrid.lm_loss(params, cfg, batch["tokens"], policy=policy,
@@ -80,9 +100,17 @@ def get_model(cfg: ModelConfig) -> Model:
             return hybrid.decode_step(params, cfg, token, cache, pos,
                                       policy=policy, batch_axes=batch_axes)
 
+        def chunk(params, tokens, cache, pos, q_len, policy=EXACT,
+                  batch_axes=(), **_):
+            return hybrid.chunk_step(params, cfg, tokens, cache, pos, q_len,
+                                     policy=policy, batch_axes=batch_axes)
+
         return Model(cfg, lambda key: hybrid.init_params(cfg, key),
                      loss, prefill, decode,
-                     lambda b, s: hybrid.init_cache(cfg, b, s))
+                     lambda b, s: hybrid.init_cache(cfg, b, s),
+                     chunk_step=chunk,
+                     init_paged_cache=lambda b, s, nb, bs:
+                     hybrid.init_cache(cfg, b, s, paged=(nb, bs)))
     if cfg.family == "ssm":
         def loss(params, batch, policy=EXACT, remat=True, batch_axes=()):
             return xlstm_model.lm_loss(params, cfg, batch["tokens"],
@@ -96,9 +124,18 @@ def get_model(cfg: ModelConfig) -> Model:
             return xlstm_model.decode_step(params, cfg, token, cache, pos,
                                            policy=policy, batch_axes=batch_axes)
 
+        def chunk(params, tokens, cache, pos, q_len, policy=EXACT,
+                  batch_axes=(), **_):
+            return xlstm_model.chunk_step(params, cfg, tokens, cache, pos,
+                                          q_len, policy=policy,
+                                          batch_axes=batch_axes)
+
         return Model(cfg, lambda key: xlstm_model.init_params(cfg, key),
                      loss, prefill, decode,
-                     lambda b, s: xlstm_model.init_cache(cfg, b, s))
+                     lambda b, s: xlstm_model.init_cache(cfg, b, s),
+                     chunk_step=chunk,
+                     init_paged_cache=lambda b, s, nb, bs:
+                     xlstm_model.init_cache(cfg, b, s, paged=(nb, bs)))
     raise ValueError(f"unknown family {cfg.family}")
 
 
@@ -158,3 +195,36 @@ def cache_batch_axes(cache) -> Dict[str, int]:
     except KeyError as err:
         raise KeyError(f"cache leaf {err.args[0]!r} has no registered batch "
                        "axis — extend models.api.CACHE_BATCH_AXIS") from None
+
+
+# Leaves that become shared block pools under a paged cache — they carry no
+# batch axis; everything else (ring buffers, SSM/xLSTM recurrent state) stays
+# per-slot and is wiped by `reset_slot` when a slot changes owner.
+PAGED_POOL_LEAVES = frozenset({"k", "v", "k_glob", "v_glob"})
+
+# Per-slot fill values used when wiping a slot (default 0): ring position
+# maps must read "empty", not "position 0".
+CACHE_SLOT_FILL = {"kpos_loc": -(2 ** 30)}
+
+
+def reset_slot(cache, slot):
+    """Wipe one slot's per-slot state leaves (jit-traceable, `slot` dynamic).
+
+    The paged engine calls this at admission instead of the contiguous
+    engine's scatter-a-fresh-prefill: chunked prefill rebuilds the slot's
+    state incrementally, so the only requirement is that no stale ring
+    position or recurrent state from the previous occupant survives. Pool
+    leaves and ``block_tables`` are left alone — the host-side allocator
+    owns the tables, and pool blocks are only ever read through them.
+    """
+    out = {}
+    for key, leaf in cache.items():
+        if key == "block_tables" or key in PAGED_POOL_LEAVES:
+            out[key] = leaf
+            continue
+        ax = CACHE_BATCH_AXIS[key]
+        slab = jnp.full(leaf.shape[:ax] + (1,) + leaf.shape[ax + 1:],
+                        CACHE_SLOT_FILL.get(key, 0), leaf.dtype)
+        out[key] = jax.lax.dynamic_update_slice_in_dim(leaf, slab, slot,
+                                                       axis=ax)
+    return out

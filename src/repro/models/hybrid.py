@@ -58,22 +58,38 @@ def init_params(cfg: ModelConfig, key):
     return params
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               paged=None):
+    """``paged=(n_blocks, block_size)`` turns the shared-attention KV leaves
+    into block pools + a ``block_tables`` leaf (see `transformer.init_cache`);
+    SSM conv/state leaves stay per-slot — recurrent state is O(1) per slot."""
     g, n_full, rem = _group_structure(cfg)
     n_attn = n_full + (1 if rem else 0)
     di = cfg.ssm_expand * cfg.d_model
     heads = di // 64
-    return {
+    cache = {
         "ssm_s": jnp.zeros((n_full, g, batch, heads, 64, cfg.ssm_state), jnp.float32),
         "ssm_conv": jnp.zeros((n_full, g, batch, cfg.ssm_conv - 1, di), dtype),
         "tail_s": jnp.zeros((max(rem, 1), batch, heads, 64, cfg.ssm_state), jnp.float32),
         "tail_conv": jnp.zeros((max(rem, 1), batch, cfg.ssm_conv - 1, di), dtype),
-        "k": jnp.zeros((n_attn, batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
-        "v": jnp.zeros((n_attn, batch, max_len, cfg.n_kv_heads, cfg.hd), dtype),
     }
+    if paged is not None:
+        n_blocks, blk = paged
+        cache["k"] = jnp.zeros((n_attn, n_blocks + 1, blk, cfg.n_kv_heads,
+                                cfg.hd), dtype)
+        cache["v"] = jnp.zeros((n_attn, n_blocks + 1, blk, cfg.n_kv_heads,
+                                cfg.hd), dtype)
+        cache["block_tables"] = L.init_block_tables(batch, max_len, n_blocks,
+                                                    blk)
+    else:
+        cache["k"] = jnp.zeros((n_attn, batch, max_len, cfg.n_kv_heads,
+                                cfg.hd), dtype)
+        cache["v"] = jnp.zeros((n_attn, batch, max_len, cfg.n_kv_heads,
+                                cfg.hd), dtype)
+    return cache
 
 
-def _mamba_group_scan(group_params, x, cfg, policy, states):
+def _mamba_group_scan(group_params, x, cfg, policy, states, token_valid=None):
     """Scan over the `g` stacked mamba layers of one group. Training (no
     incoming state) checkpoints each layer: the SSD chunk quadratics are the
     memory hot-spot (unrematted zamba2 train measured >100 GiB/device)."""
@@ -87,7 +103,7 @@ def _mamba_group_scan(group_params, x, cfg, policy, states):
             out, new_state = ssm.mamba_block(
                 lp_["mamba"], h, cfg,
                 state=ssm.SSMState(st[0], st[1]) if use_state else None,
-                policy=policy, layer="mamba")
+                policy=policy, layer="mamba", token_valid=token_valid)
             return x_ + out, (new_state.s, new_state.conv)
 
         if not use_state:
@@ -111,7 +127,11 @@ def _mamba_group_scan(group_params, x, cfg, policy, states):
 
 def forward(params, cfg: ModelConfig, *, tokens, cache: Optional[Dict] = None,
             cache_pos=0, positions=None, policy: GemmPolicy = EXACT,
-            attn_chunk: int = 1024, batch_axes=()):
+            attn_chunk: int = 1024, batch_axes=(), q_len=None):
+    """`q_len` (B,) marks valid-token counts for chunked serving (trailing
+    padding never advances SSM state or writes KV); a cache with a
+    ``block_tables`` leaf pages the shared-attention KV through block pools
+    (see `transformer.forward`)."""
     g, n_full, rem = _group_structure(cfg)
     x = params["embed"][tokens] * jnp.asarray(cfg.d_model ** 0.5,
                                               params["embed"].dtype)
@@ -122,7 +142,13 @@ def forward(params, cfg: ModelConfig, *, tokens, cache: Optional[Dict] = None,
         base = cache_pos if cache is not None else jnp.int32(0)
         offs = jnp.arange(s, dtype=jnp.int32)
         positions = base[:, None] + offs[None, :] if base.ndim else offs + base
-    kv_valid = (cache_pos + s) if cache is not None else s
+    token_valid = None
+    if q_len is not None:
+        q_len = jnp.asarray(q_len, jnp.int32)
+        token_valid = jnp.arange(s, dtype=jnp.int32)[None, :] < q_len[:, None]
+    valid_s = s if q_len is None else q_len
+    kv_valid = (cache_pos + valid_s) if cache is not None else s
+    block_tables = cache.get("block_tables") if cache is not None else None
     new_cache = {k: v for k, v in cache.items()} if cache is not None else None
 
     def shared_attn(x, attn_idx):
@@ -136,7 +162,7 @@ def forward(params, cfg: ModelConfig, *, tokens, cache: Optional[Dict] = None,
             head_dim=cfg.hd, rope_theta=cfg.rope_theta, q_positions=positions,
             kv_cache=kv, cache_pos=cache_pos, kv_valid_len=kv_valid,
             causal=True, window=0, softcap=0.0, chunk=attn_chunk, policy=policy,
-            layer="attn")
+            layer="attn", block_tables=block_tables, token_valid=token_valid)
         x = x + out
         h = L.rms_norm(x, sp["ln2"], cfg.norm_eps)
         x = x + L.mlp_block(sp["mlp"], h, act=cfg.act, policy=policy,
@@ -151,7 +177,8 @@ def forward(params, cfg: ModelConfig, *, tokens, cache: Optional[Dict] = None,
         states = None
         if cache is not None:
             states = (new_cache["ssm_s"][gi], new_cache["ssm_conv"][gi])
-        x, ns = _mamba_group_scan(gp, x, cfg, policy, states)
+        x, ns = _mamba_group_scan(gp, x, cfg, policy, states,
+                                  token_valid=token_valid)
         if cache is not None:
             new_cache["ssm_s"] = new_cache["ssm_s"].at[gi].set(ns[0])
             new_cache["ssm_conv"] = new_cache["ssm_conv"].at[gi].set(ns[1])
@@ -160,7 +187,8 @@ def forward(params, cfg: ModelConfig, *, tokens, cache: Optional[Dict] = None,
         states = None
         if cache is not None:
             states = (new_cache["tail_s"], new_cache["tail_conv"])
-        x, ns = _mamba_group_scan(params["tail"], x, cfg, policy, states)
+        x, ns = _mamba_group_scan(params["tail"], x, cfg, policy, states,
+                                  token_valid=token_valid)
         if cache is not None:
             new_cache["tail_s"], new_cache["tail_conv"] = ns
         x = shared_attn(x, n_full)
@@ -187,6 +215,24 @@ def prefill(params, cfg, tokens, cache, *, policy=EXACT, attn_chunk=1024,
                             policy=policy, attn_chunk=attn_chunk,
                             batch_axes=batch_axes)
     logits = dot(hidden[:, -1:], L.head_weight(params, hidden.dtype), policy,
+                 layer="lm_head")
+    return logits.astype(jnp.float32), cache
+
+
+def chunk_step(params, cfg, tokens, cache, pos, q_len, *, policy=EXACT,
+               attn_chunk=1024, batch_axes=(), **_):
+    """Unified serving step over a (B, T) token block — see
+    `transformer.chunk_step`. Returns each slot's last-valid-token logits."""
+    pos = jnp.asarray(pos, jnp.int32)
+    t = tokens.shape[1]
+    positions = pos[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
+    hidden, cache = forward(params, cfg, tokens=tokens, cache=cache,
+                            cache_pos=pos, positions=positions, policy=policy,
+                            attn_chunk=attn_chunk, batch_axes=batch_axes,
+                            q_len=q_len)
+    sel = jnp.maximum(jnp.asarray(q_len, jnp.int32) - 1, 0)
+    hidden = jnp.take_along_axis(hidden, sel[:, None, None], axis=1)
+    logits = dot(hidden, L.head_weight(params, hidden.dtype), policy,
                  layer="lm_head")
     return logits.astype(jnp.float32), cache
 

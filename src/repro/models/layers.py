@@ -84,7 +84,7 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                       q_positions: jnp.ndarray, kv_valid_len,
                       *, causal: bool = True, window=0, softcap=0.0,
                       chunk: int = 1024, q_chunk: int = 1024,
-                      kv_positions=None) -> jnp.ndarray:
+                      kv_positions=None, block_tables=None) -> jnp.ndarray:
     """Flash-style attention: outer scan over Q chunks, inner online-softmax scan
     over KV chunks — score/probability tensors never exceed
     (B, H, q_chunk, chunk), so 32k prefill fits HBM.
@@ -97,9 +97,17 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     kv_positions (ring caches): (Skv,) or per-slot (B, Skv). The unbatched
     forms are the lockstep degenerate case and broadcast to all rows.
     `window` may be a traced per-layer scalar; 0/negative means full attention.
+
+    **Paged KV** (`block_tables` given): k/v are *block pools*
+    ``(n_blocks + 1, block_size, KH, D)`` and ``block_tables`` is the per-slot
+    ``(B, max_blocks)`` map from logical block index to pool block. Each KV
+    chunk gathers only its own blocks inside the scan (storage layout is
+    decoupled from the compute schedule), reconstructing exactly the
+    positional layout of a contiguous cache — chunk grids, masking, and
+    therefore output bits are identical to the contiguous path.
     """
     b, sq, h, d = q.shape
-    _, skv, kh, _ = k.shape
+    kh = k.shape[-2]
     g = h // kh
     scale = d ** -0.5
     qc = min(q_chunk, sq)
@@ -113,20 +121,51 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     qh = qh.reshape(b, kh, g, nq, qc, d).transpose(3, 0, 1, 2, 4, 5)  # NQ,B,KH,G,qc,D
     qpos_c = qpos.reshape(qpos.shape[0], nq, qc).swapaxes(0, 1)  # NQ,Bq,qc
 
-    nk = -(-skv // chunk)
-    kpad = nk * chunk - skv
-    if kv_positions is not None:
-        kv_positions = _as_batched(kv_positions)            # (Bk, Skv)
-    if kpad:
-        k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
-        v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    kvp_c = None
+    if block_tables is not None:
+        # paged pool: logical length = table width * block size; the chunk
+        # grid must match the contiguous grid bit-for-bit, so blocks are
+        # required to tile the chunk exactly
+        blk_sz = k.shape[1]
+        if chunk % blk_sz:
+            raise ValueError(f"attention chunk {chunk} must be a multiple of "
+                             f"the KV block size {blk_sz}")
+        skv = block_tables.shape[1] * blk_sz
+        if skv <= chunk:
+            # the whole logical cache fits one KV chunk (the common serving
+            # regime): one gather of the *real* blocks reconstructs the
+            # contiguous layout, and the shared code path below zero-pads to
+            # the chunk grid — bit-identical to a contiguous cache (padding
+            # is masked either way) at a fraction of the dump-padded
+            # per-chunk gather cost
+            k = jnp.take(k, block_tables, axis=0).reshape(b, skv, kh, d)
+            v = jnp.take(v, block_tables, axis=0).reshape(b, skv, kh, d)
+            block_tables = None
+        else:
+            nk = -(-skv // chunk)
+            nbpc = chunk // blk_sz
+            pad_b = nk * nbpc - block_tables.shape[1]
+            bt = block_tables
+            if pad_b:   # pad with the dump block — masked like zero-pad
+                bt = jnp.pad(bt, ((0, 0), (0, pad_b)),
+                             constant_values=k.shape[0] - 1)
+            bt_c = bt.reshape(b, nk, nbpc).swapaxes(0, 1)    # NK,B,nbpc
+    if block_tables is None:
+        skv = k.shape[1]
+        nk = -(-skv // chunk)
+        kpad = nk * chunk - skv
         if kv_positions is not None:
-            kv_positions = jnp.pad(kv_positions, ((0, 0), (0, kpad)),
-                                   constant_values=-(10 ** 9))
-    kc = k.reshape(b, nk, chunk, kh, d).transpose(1, 0, 3, 2, 4)      # NK,B,KH,C,D
-    vc = v.reshape(b, nk, chunk, kh, d).transpose(1, 0, 3, 2, 4)
-    kvp_c = (kv_positions.reshape(kv_positions.shape[0], nk, chunk)
-             .swapaxes(0, 1) if kv_positions is not None else None)  # NK,Bk,C
+            kv_positions = _as_batched(kv_positions)        # (Bk, Skv)
+        if kpad:
+            k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+            v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+            if kv_positions is not None:
+                kv_positions = jnp.pad(kv_positions, ((0, 0), (0, kpad)),
+                                       constant_values=-(10 ** 9))
+        kc = k.reshape(b, nk, chunk, kh, d).transpose(1, 0, 3, 2, 4)  # NK,B,KH,C,D
+        vc = v.reshape(b, nk, chunk, kh, d).transpose(1, 0, 3, 2, 4)
+        kvp_c = (kv_positions.reshape(kv_positions.shape[0], nk, chunk)
+                 .swapaxes(0, 1) if kv_positions is not None else None)  # NK,Bk,C
     kv_len = jnp.asarray(kv_valid_len, jnp.int32).reshape(-1)   # (1,) or (B,)
     window_eff = jnp.where(jnp.asarray(window) > 0, jnp.asarray(window),
                            jnp.iinfo(jnp.int32).max).astype(jnp.int32)
@@ -135,7 +174,15 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
         q_blk, qp = q_in                               # (B,KH,G,qc,D), (Bq,qc)
 
         def kv_body(state: AttnState, kv_in):
-            idx, k_blk, v_blk, kp = kv_in
+            if block_tables is not None:
+                idx, bt_blk = kv_in
+                kg = jnp.take(k, bt_blk, axis=0)       # (B,nbpc,blk,KH,D)
+                k_blk = kg.reshape(b, chunk, kh, d).transpose(0, 2, 1, 3)
+                vg = jnp.take(v, bt_blk, axis=0)
+                v_blk = vg.reshape(b, chunk, kh, d).transpose(0, 2, 1, 3)
+                kp = None
+            else:
+                idx, k_blk, v_blk, kp = kv_in
             kpos = (kp if kvp_c is not None            # (Bk, C)
                     else (idx * chunk
                           + jnp.arange(chunk, dtype=jnp.int32))[None, :])
@@ -167,12 +214,15 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
             jnp.zeros((b, kh, g, qc), jnp.float32),
         )
         idxs = jnp.arange(nk, dtype=jnp.int32)
-        kvp_xs = kvp_c if kvp_c is not None else jnp.zeros((nk, 1, chunk),
-                                                           jnp.int32)
+        if block_tables is not None:
+            xs = (idxs, bt_c)
+        else:
+            kvp_xs = kvp_c if kvp_c is not None else jnp.zeros((nk, 1, chunk),
+                                                               jnp.int32)
+            xs = (idxs, kc, vc, kvp_xs)
         # checkpoint the chunk body: backward recomputes each chunk's scores
         # instead of saving O(S^2/chunk) probability residuals (flash backward)
-        st, _ = jax.lax.scan(jax.checkpoint(kv_body), init,
-                             (idxs, kc, vc, kvp_xs))
+        st, _ = jax.lax.scan(jax.checkpoint(kv_body), init, xs)
         out = st.acc / jnp.maximum(st.l, 1e-30)[..., None]  # (B,KH,G,qc,D)
         return None, out
 
@@ -189,6 +239,16 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
 CACHE_INT8_SCALE = 32.0
 
 
+def init_block_tables(batch: int, max_len: int, n_blocks: int,
+                      block_size: int) -> jnp.ndarray:
+    """The per-slot block-table leaf of a paged cache: ``(batch,
+    ceil(max_len / block_size))`` int32, every entry initialized to the dump
+    index ``n_blocks`` (the pool's scratch row). One definition so every
+    family's ``init_cache`` and `launch.paged.BlockPool` share the same
+    width and sentinel convention."""
+    return jnp.full((batch, -(-max_len // block_size)), n_blocks, jnp.int32)
+
+
 def cache_store(x: jnp.ndarray, dtype) -> jnp.ndarray:
     if dtype == jnp.int8:
         return jnp.clip(jnp.round(x.astype(jnp.float32) * CACHE_INT8_SCALE),
@@ -202,13 +262,16 @@ def cache_load(x: jnp.ndarray) -> jnp.ndarray:
     return x
 
 
-def ring_write(ck, cv, kpos, k_new, v_new, cache_pos, window: int):
+def ring_write(ck, cv, kpos, k_new, v_new, cache_pos, window: int,
+               valid=None):
     """Write new K/V into a ring buffer of size `window`.
 
     ck/cv: (B, W, KH, D); kpos: (B, W) positions held by each row's slots
     (-2^30 if empty — per-slot rows so ragged batches track their own rings).
     Decode (sq=1): slot = pos % W per batch row; `cache_pos` may be a scalar
-    (lockstep) or a (B,) per-slot vector. Prefill (sq=S): scalar `cache_pos`;
+    (lockstep) or a (B,) per-slot vector, and `valid` an optional (B,) bool
+    mask — rows with `valid=False` (padded chunk tokens, inactive slots)
+    leave their ring untouched. Prefill (sq=S): scalar `cache_pos`;
     requires S % W == 0 or S <= W — the last W entries land contiguously
     because S % W == 0.
     """
@@ -218,9 +281,16 @@ def ring_write(ck, cv, kpos, k_new, v_new, cache_pos, window: int):
         posv = cp if cp.ndim else jnp.full((b,), cp)        # (B,)
         slot = jnp.mod(posv, window)
         bidx = jnp.arange(b)
-        ck = ck.at[bidx, slot].set(cache_store(k_new[:, 0], ck.dtype))
-        cv = cv.at[bidx, slot].set(cache_store(v_new[:, 0], cv.dtype))
-        kpos = kpos.at[bidx, slot].set(posv)
+        new_k = cache_store(k_new[:, 0], ck.dtype)
+        new_v = cache_store(v_new[:, 0], cv.dtype)
+        new_p = posv
+        if valid is not None:
+            new_k = jnp.where(valid[:, None, None], new_k, ck[bidx, slot])
+            new_v = jnp.where(valid[:, None, None], new_v, cv[bidx, slot])
+            new_p = jnp.where(valid, posv, kpos[bidx, slot])
+        ck = ck.at[bidx, slot].set(new_k)
+        cv = cv.at[bidx, slot].set(new_v)
+        kpos = kpos.at[bidx, slot].set(new_p)
         return ck, cv, kpos
     w = ck.shape[1]
     if sq < w:
@@ -267,20 +337,27 @@ def init_attention(key, d_model: int, n_heads: int, n_kv_heads: int, head_dim: i
 def attention_block(p, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
                     q_positions, kv_cache=None, ring_cache=None, cache_pos=None,
                     kv_valid_len=None, causal=True, window=0, softcap=0.0,
-                    chunk=1024, policy: GemmPolicy = EXACT, layer: str = ""):
+                    chunk=1024, policy: GemmPolicy = EXACT, layer: str = "",
+                    block_tables=None, token_valid=None):
     """GQA attention.
 
     kv_cache=(k, v): uniform cache — new K/V written at cache_pos, attention
-    over the (possibly int8) cache. ring_cache=(k, v, kpos): windowed ring
-    buffer of size `window` — decode attends over the ring via per-slot
-    positions; prefill attends in-sequence and then fills the ring with the
-    last `window` K/V. Returns (out, new_cache_or_ring).
+    over the (possibly int8) cache. With `block_tables` the uniform cache is
+    a *paged block pool* ``(n_blocks + 1, block_size, KH, D)``: writes
+    scatter to per-slot ``(block, offset)`` pairs (masked tokens land in the
+    dump block, pool index ``n_blocks``), reads gather through the table in
+    `chunked_attention`. ring_cache=(k, v, kpos): windowed ring buffer of
+    size `window` — decode attends over the ring via per-slot positions;
+    serving prefill (sq > 1 with a ring) advances the ring token by token so
+    any chunking of the prompt writes and reads the same ring states.
+    Returns (out, new_cache_or_ring).
 
     `q_positions` may be (Sq,) or per-slot (B, Sq); `cache_pos` and
     `kv_valid_len` may be scalars (lockstep decode — the whole batch at one
     position) or (B,) vectors (ragged continuous batching — each batch row
     writes and masks its own cache length). Scalar and all-equal-vector
-    forms are bit-identical.
+    forms are bit-identical. `token_valid` is an optional (B, Sq) bool mask
+    for chunked-prefill padding: invalid tokens never write cache state.
     """
     b, sq, _ = x.shape
     q = dot(x, p["wq"], policy, layer=layer + "/wq")
@@ -297,26 +374,81 @@ def attention_block(p, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
     if ring_cache is not None:
         ck, cv, kpos = ring_cache
         w = ck.shape[1]
-        ck, cv, kpos = ring_write(ck, cv, kpos, k, v, cache_pos, w)
         if sq == 1:   # decode: attend over the ring (positions per slot)
+            val = token_valid[:, 0] if token_valid is not None else None
+            ck, cv, kpos = ring_write(ck, cv, kpos, k, v, cache_pos, w,
+                                      valid=val)
             out = chunked_attention(q, cache_load(ck), cache_load(cv),
                                     q_positions, w, causal=causal, window=window,
                                     softcap=softcap, chunk=min(chunk, w),
                                     kv_positions=kpos)
-        else:         # prefill: attend in-sequence under the window mask
-            out = chunked_attention(q, k, v, q_positions, sq, causal=causal,
-                                    window=window, softcap=softcap, chunk=chunk)
+        else:
+            # serving prefill: advance the ring one token at a time — each
+            # step is exactly the decode step's write + ring attention, so a
+            # prompt fed in chunks of any size (the chunked-prefill admission
+            # path) reaches bit-identical ring states and outputs
+            qpos = _as_batched(q_positions)
+            qpos = jnp.broadcast_to(qpos, (b, sq))
+            val = (token_valid if token_valid is not None
+                   else jnp.ones((b, sq), bool))
+
+            def tok_body(carry, xs_t):
+                ck, cv, kpos = carry
+                k_t, v_t, q_t, qp_t, val_t = xs_t
+                ck, cv, kpos = ring_write(ck, cv, kpos, k_t[:, None],
+                                          v_t[:, None], qp_t, w, valid=val_t)
+                out_t = chunked_attention(
+                    q_t[:, None], cache_load(ck), cache_load(cv), qp_t[:, None],
+                    w, causal=causal, window=window, softcap=softcap,
+                    chunk=min(chunk, w), kv_positions=kpos)
+                return (ck, cv, kpos), out_t[:, 0]
+
+            (ck, cv, kpos), outs = jax.lax.scan(
+                tok_body, (ck, cv, kpos),
+                (k.swapaxes(0, 1), v.swapaxes(0, 1), q.swapaxes(0, 1),
+                 qpos.T, val.T))
+            out = outs.swapaxes(0, 1)                       # (B, Sq, H, D)
         out = out.reshape(b, sq, n_heads * head_dim)
         return dot(out, p["wo"], policy, layer=layer + "/wo"), (ck, cv, kpos)
 
     if kv_cache is not None:
         ck, cv = kv_cache
         cp = jnp.asarray(cache_pos, jnp.int32)
+        if block_tables is not None:
+            # paged write: token at logical position p lands in pool block
+            # block_tables[b, p // bs] at offset p % bs; masked tokens are
+            # redirected to the dump block (pool row n_blocks) so they can
+            # never touch another slot's storage
+            blk_sz = ck.shape[1]
+            cpv = cp if cp.ndim else jnp.full((b,), cp)
+            idx = cpv[:, None] + jnp.arange(sq, dtype=jnp.int32)[None, :]
+            lblk = jnp.minimum(idx // blk_sz, block_tables.shape[1] - 1)
+            blk = jnp.take_along_axis(block_tables, lblk, axis=1)
+            off = jnp.mod(idx, blk_sz)
+            if token_valid is not None:
+                blk = jnp.where(token_valid, blk, ck.shape[0] - 1)
+            ck = ck.at[blk, off].set(cache_store(k, ck.dtype))
+            cv = cv.at[blk, off].set(cache_store(v, cv.dtype))
+            new_cache = (ck, cv)
+            valid = kv_valid_len if kv_valid_len is not None else cp + sq
+            out = chunked_attention(q, cache_load(ck), cache_load(cv),
+                                    q_positions, valid, causal=causal,
+                                    window=window, softcap=softcap, chunk=chunk,
+                                    block_tables=block_tables)
+            out = out.reshape(b, sq, n_heads * head_dim)
+            return dot(out, p["wo"], policy, layer=layer + "/wo"), new_cache
         if cp.ndim:         # per-slot scatter: row i writes at its own cp[i]
             bidx = jnp.arange(b)[:, None]
             sidx = cp[:, None] + jnp.arange(sq, dtype=jnp.int32)[None, :]
-            ck = ck.at[bidx, sidx].set(cache_store(k, ck.dtype))
-            cv = cv.at[bidx, sidx].set(cache_store(v, cv.dtype))
+            new_k = cache_store(k, ck.dtype)
+            new_v = cache_store(v, cv.dtype)
+            if token_valid is not None:
+                new_k = jnp.where(token_valid[..., None, None], new_k,
+                                  ck[bidx, sidx])
+                new_v = jnp.where(token_valid[..., None, None], new_v,
+                                  cv[bidx, sidx])
+            ck = ck.at[bidx, sidx].set(new_k)
+            cv = cv.at[bidx, sidx].set(new_v)
         else:
             ck = jax.lax.dynamic_update_slice(ck, cache_store(k, ck.dtype),
                                               (0, cp, 0, 0))

@@ -41,18 +41,23 @@ def init_moe(key, cfg: ModelConfig, dtype):
 
 
 def moe_block(p, x, cfg: ModelConfig, *, policy: GemmPolicy = EXACT,
-              layer: str = ""):
+              layer: str = "", full_capacity: bool = False):
     """x: (B, S, d) -> (B, S, d). Returns (out, aux_loss).
 
-    Decode (S == 1) runs at full capacity: the buffer is only (E, B, d) and a
-    capacity drop there would make one request's output depend on which other
-    requests happen to share its batch — continuous batching needs each
-    slot's decode to be batch-composition-independent.
+    Decode (S == 1) — and any serving call (`full_capacity=True`, set by the
+    model forwards whenever a KV/recurrent cache is live) — runs at full
+    capacity: a capacity drop depends on the flattened (token, expert)
+    cumsum over the *whole* batch, so it would make one request's output
+    depend on which other requests (or which prompt-chunk boundaries) happen
+    to share its dispatch — continuous batching and chunked prefill need
+    each token's output to be batch- and chunking-independent. Training
+    keeps the capacity-factor drop semantics.
     """
     b, s, d = x.shape
     t = b * s
     e, topk = cfg.n_experts, cfg.n_active_experts
-    cap = t if s == 1 else int(t * topk / e * cfg.capacity_factor) + 1
+    cap = t if (s == 1 or full_capacity) \
+        else int(t * topk / e * cfg.capacity_factor) + 1
 
     xf = x.reshape(t, d)
     logits = xf.astype(jnp.float32) @ p["router"]                  # (T, E)

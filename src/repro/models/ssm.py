@@ -84,9 +84,17 @@ def _ssd_chunked(x, dt, a_log, b_mat, c_mat, s0, chunk: int):
 
 
 def mamba_block(p, x, cfg: ModelConfig, *, state: Optional[SSMState] = None,
-                chunk: int = 256, policy: GemmPolicy = EXACT, layer: str = ""):
-    """x: (B, T, d). If `state` is given (decode), T must be 1 and the recurrence
-    is advanced directly. Returns (out, new_state)."""
+                chunk: int = 256, policy: GemmPolicy = EXACT, layer: str = "",
+                token_valid=None):
+    """x: (B, T, d). With `state` (serving: decode or chunked prefill) the
+    recurrence is advanced **one token at a time** with exactly the decode
+    step's update — the resulting state is therefore invariant to how a
+    prompt is partitioned into chunks (the chunked-prefill determinism
+    contract), unlike the chunked SSD quadratic form whose float grouping
+    depends on the chunk grid. `token_valid` (B, T) masks padded chunk
+    tokens: invalid steps freeze the SSM state and conv tail. Training
+    (state=None) keeps the fast chunked SSD path. Returns (out, new_state).
+    """
     bsz, t, d = x.shape
     di = cfg.ssm_expand * d
     n = cfg.ssm_state
@@ -104,9 +112,17 @@ def mamba_block(p, x, cfg: ModelConfig, *, state: Optional[SSMState] = None,
         conv_tail = xpad[:, -(w_len - 1):, :] if w_len > 1 else jnp.zeros((bsz, 0, di), xr.dtype)
         xconv = sum(xpad[:, i:i + t, :] * conv_w[i] for i in range(w_len))
     else:
-        hist = jnp.concatenate([state.conv, xr], axis=1)  # (B, W, di) for t=1
+        hist = jnp.concatenate([state.conv, xr], axis=1)  # (B, W-1+T, di)
         xconv = sum(hist[:, i:i + t, :] * conv_w[i] for i in range(w_len))
-        conv_tail = hist[:, -(w_len - 1):, :]
+        if token_valid is None:
+            conv_tail = hist[:, -(w_len - 1):, :]
+        else:
+            # the tail after consuming q_len valid tokens (padding is always
+            # trailing) is hist[q_len : q_len + W-1] per row
+            q_len = token_valid.astype(jnp.int32).sum(axis=1)       # (B,)
+            tail_idx = q_len[:, None] + jnp.arange(w_len - 1,
+                                                   dtype=jnp.int32)[None, :]
+            conv_tail = jnp.take_along_axis(hist, tail_idx[..., None], axis=1)
     xconv = jax.nn.silu(xconv)
 
     xh = xconv.reshape(bsz, t, heads, pdim)
@@ -114,7 +130,7 @@ def mamba_block(p, x, cfg: ModelConfig, *, state: Optional[SSMState] = None,
     ch = cflat.reshape(bsz, t, heads, n).astype(jnp.float32)
     s0 = state.s if state is not None else jnp.zeros((bsz, heads, pdim, n), jnp.float32)
 
-    if state is not None and t == 1:
+    if state is not None and t == 1 and token_valid is None:
         a = -jnp.exp(p["a_log"])
         da = jnp.exp(dt[:, 0] * a[None, :])               # (B,H)
         s_new = (da[:, :, None, None] * s0
@@ -122,6 +138,26 @@ def mamba_block(p, x, cfg: ModelConfig, *, state: Optional[SSMState] = None,
                               bh[:, 0]))
         y = jnp.einsum("bhn,bhpn->bhp", ch[:, 0], s_new)[:, None]    # (B,1,H,P)
         s_fin = s_new
+    elif state is not None:
+        # serving scan: each step is bit-identical to the t == 1 decode branch
+        a = -jnp.exp(p["a_log"])
+        valid = (token_valid if token_valid is not None
+                 else jnp.ones((bsz, t), bool))
+
+        def step(s, inp):
+            dt_t, x_t, b_t, c_t, val_t = inp
+            da = jnp.exp(dt_t * a[None, :])               # (B,H)
+            s_new = (da[:, :, None, None] * s
+                     + jnp.einsum("bh,bhp,bhn->bhpn", dt_t,
+                                  x_t.astype(jnp.float32), b_t))
+            y_t = jnp.einsum("bhn,bhpn->bhp", c_t, s_new)
+            s = jnp.where(val_t[:, None, None, None], s_new, s)
+            return s, y_t
+
+        s_fin, ys = jax.lax.scan(
+            step, s0, (dt.swapaxes(0, 1), xh.swapaxes(0, 1),
+                       bh.swapaxes(0, 1), ch.swapaxes(0, 1), valid.T))
+        y = ys.swapaxes(0, 1)                             # (B,T,H,P)
     else:
         y, s_fin = _ssd_chunked(xh.astype(jnp.float32), dt, p["a_log"], bh, ch,
                                 s0, min(chunk, t))

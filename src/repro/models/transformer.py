@@ -75,7 +75,8 @@ def init_params(cfg: ModelConfig, key) -> PyTree:
 
 def _layer_body(lp, x, window, kv_cache, *, cfg: ModelConfig, positions,
                 cache_pos, kv_valid_len, policy: GemmPolicy, chunk: int,
-                ring_cache=None, remat_attn: bool = False):
+                ring_cache=None, remat_attn: bool = False,
+                block_tables=None, token_valid=None):
     h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
 
     def attn_fn(ap, hh, w):
@@ -85,7 +86,8 @@ def _layer_body(lp, x, window, kv_cache, *, cfg: ModelConfig, positions,
             kv_cache=kv_cache, ring_cache=ring_cache, cache_pos=cache_pos,
             kv_valid_len=kv_valid_len,
             causal=cfg.causal, window=w, softcap=cfg.attn_softcap,
-            chunk=chunk, policy=policy, layer="attn")
+            chunk=chunk, policy=policy, layer="attn",
+            block_tables=block_tables, token_valid=token_valid)
 
     if remat_attn:
         # "attn-only" remat (§Perf cell-B iter 3): the attention scan's
@@ -95,9 +97,10 @@ def _layer_body(lp, x, window, kv_cache, *, cfg: ModelConfig, positions,
     attn_out, new_cache = attn_fn(lp["attn"], h, window)
     x = x + checkpoint_name(attn_out, "attn_out")
     h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    serving = kv_cache is not None or ring_cache is not None
     if cfg.is_moe:
         ffn_out, aux = moe_mod.moe_block(lp["moe"], h, cfg, policy=policy,
-                                         layer="moe")
+                                         layer="moe", full_capacity=serving)
     else:
         ffn_out = L.mlp_block(lp["mlp"], h, act=cfg.act, policy=policy,
                               layer="mlp")
@@ -109,12 +112,27 @@ def forward(params: PyTree, cfg: ModelConfig, *, tokens=None, input_embeds=None,
             cache: Optional[Dict] = None, cache_pos=0, positions=None,
             policy: GemmPolicy = EXACT, attn_chunk: int = 1024,
             remat: bool = False, remat_save_attn: bool = False,
-            batch_axes=()):
+            batch_axes=(), q_len=None, embed_mask=None):
     """Returns (hidden, new_cache, aux_loss). Input is tokens (B, S) or
     precomputed embeddings (audio/vlm stubs). `cache_pos` may be a scalar
     (lockstep) or a (B,) per-slot vector (ragged continuous batching);
-    `positions` then defaults to per-row `cache_pos[:, None] + arange(S)`."""
-    if input_embeds is None:
+    `positions` then defaults to per-row `cache_pos[:, None] + arange(S)`.
+
+    Serving extensions (the chunked-prefill path): `q_len` is a per-slot
+    (B,) count of *valid* tokens — positions past it are chunk padding and
+    never write cache state; `embed_mask` (B, S) selects, per token, the
+    `input_embeds` row (VLM patch positions) over the token embedding, so a
+    prompt chunk may straddle the patch/text boundary. A cache carrying a
+    ``"block_tables"`` leaf is *paged*: its full-attention leaves are block
+    pools written via per-slot (block, offset) scatters and read through
+    block-table gathers (see `launch.paged`)."""
+    if embed_mask is not None:
+        tok_emb = params["embed"][tokens] * jnp.asarray(cfg.d_model ** 0.5,
+                                                        _dtype(cfg))
+        patch = dot(input_embeds.astype(_dtype(cfg)), params["patch_proj"],
+                    policy, layer="patch_proj")
+        x = jnp.where(embed_mask[..., None], patch, tok_emb)
+    elif input_embeds is None:
         x = params["embed"][tokens]                          # (B, S, d)
         if cfg.family != "audio":
             x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
@@ -134,11 +152,19 @@ def forward(params: PyTree, cfg: ModelConfig, *, tokens=None, input_embeds=None,
         offs = jnp.arange(s, dtype=jnp.int32)
         positions = base[:, None] + offs[None, :] if base.ndim else offs + base
     windows = layer_windows(cfg)
-    kv_valid = (cache_pos + s) if cache is not None else s
+    token_valid = None
+    if q_len is not None:
+        q_len = jnp.asarray(q_len, jnp.int32)
+        token_valid = jnp.arange(s, dtype=jnp.int32)[None, :] < q_len[:, None]
+    valid_s = s if q_len is None else q_len
+    kv_valid = (cache_pos + valid_s) if cache is not None else s
+    block_tables = cache.get("block_tables") if cache is not None else None
 
     if cache is not None and "k_loc" in cache:
         return _grouped_forward(params, cfg, x, cache, cache_pos, positions,
-                                kv_valid, policy, attn_chunk, batch_axes)
+                                kv_valid, policy, attn_chunk, batch_axes,
+                                block_tables=block_tables,
+                                token_valid=token_valid)
 
     def body(x, xs):
         lp, window, ck, cv = xs
@@ -146,7 +172,9 @@ def forward(params: PyTree, cfg: ModelConfig, *, tokens=None, input_embeds=None,
         fn = functools.partial(_layer_body, cfg=cfg, positions=positions,
                                cache_pos=cache_pos, kv_valid_len=kv_valid,
                                policy=policy, chunk=attn_chunk,
-                               remat_attn=(not remat) and remat_save_attn)
+                               remat_attn=(not remat) and remat_save_attn,
+                               block_tables=block_tables,
+                               token_valid=token_valid)
         if remat:
             # selective remat (§Perf cell-A iter 2): keep each layer's attention
             # output resident so the backward pass recomputes only norms + MLP,
@@ -169,12 +197,15 @@ def forward(params: PyTree, cfg: ModelConfig, *, tokens=None, input_embeds=None,
     new_cache = None
     if cache is not None:
         new_cache = {"k": cache_out[0], "v": cache_out[1]}
+        if block_tables is not None:
+            new_cache["block_tables"] = block_tables
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     return x, new_cache, auxs.sum()
 
 
 def _grouped_forward(params, cfg: ModelConfig, x, cache, cache_pos, positions,
-                     kv_valid, policy, attn_chunk, batch_axes):
+                     kv_valid, policy, attn_chunk, batch_axes,
+                     block_tables=None, token_valid=None):
     """Two-tier windowed-cache path (gemma-style local:global patterns).
 
     Layers are processed in groups of `global_every` — (global_every - 1) local
@@ -182,6 +213,9 @@ def _grouped_forward(params, cfg: ModelConfig, x, cache, cache_pos, positions,
     lax.scan runs over groups; within a group the layers are unrolled. This is
     the §Perf cell-C optimization: decode KV traffic and cache memory drop to
     ~(L_loc*W + L_glob*S) / (L*S) of the uniform cache.
+
+    Under a paged cache only the global layers are paged (`block_tables`);
+    the O(W) rings stay per-slot — their footprint is already position-free.
     """
     per = cfg.global_every
     g = cfg.n_layers // per
@@ -197,7 +231,8 @@ def _grouped_forward(params, cfg: ModelConfig, x, cache, cache_pos, positions,
             x, ring, aux = _layer_body(
                 lp, x, cfg.window_size, None, cfg=cfg, positions=positions,
                 cache_pos=cache_pos, kv_valid_len=kv_valid, policy=policy,
-                chunk=attn_chunk, ring_cache=(kl[i], vl[i], kpl[i]))
+                chunk=attn_chunk, ring_cache=(kl[i], vl[i], kpl[i]),
+                token_valid=token_valid)
             for lst, val in zip(new_loc, ring):
                 lst.append(val)
             aux_sum = aux_sum + aux
@@ -205,7 +240,8 @@ def _grouped_forward(params, cfg: ModelConfig, x, cache, cache_pos, positions,
         x, kv_glob, aux = _layer_body(
             lp, x, 0, (kg, vg), cfg=cfg, positions=positions,
             cache_pos=cache_pos, kv_valid_len=kv_valid, policy=policy,
-            chunk=attn_chunk)
+            chunk=attn_chunk, block_tables=block_tables,
+            token_valid=token_valid)
         aux_sum = aux_sum + aux
         x = L.constrain_batch(x, batch_axes)
         ys = (jnp.stack(new_loc[0]), jnp.stack(new_loc[1]),
@@ -217,6 +253,8 @@ def _grouped_forward(params, cfg: ModelConfig, x, cache, cache_pos, positions,
     x, ys = jax.lax.scan(body, x, xs)
     new_cache = {"k_loc": ys[0], "v_loc": ys[1], "kpos_loc": ys[2],
                  "k_glob": ys[3], "v_glob": ys[4]}
+    if block_tables is not None:
+        new_cache["block_tables"] = block_tables
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     return x, new_cache, ys[5].sum()
 
@@ -278,29 +316,49 @@ def lm_loss(params: PyTree, cfg: ModelConfig, tokens, *, input_embeds=None,
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
-               *, windowed: Optional[bool] = None):
+               *, windowed: Optional[bool] = None, paged=None):
     """Uniform (L, B, S, KH, hd) cache, or — for local:global window patterns —
     a two-tier cache: per-group ring buffers of size W for local layers + full
     caches for the 1-in-`global_every` global layers. dtype=jnp.int8 stores the
-    payload quantized (layers.CACHE_INT8_SCALE), halving cache bytes again."""
+    payload quantized (layers.CACHE_INT8_SCALE), halving cache bytes again.
+
+    ``paged=(n_blocks, block_size)`` replaces every full-attention leaf with a
+    shared block pool ``(L, n_blocks + 1, block_size, KH, hd)`` (the ``+ 1``
+    is the dump block masked writes are redirected to) plus a per-slot
+    ``block_tables`` leaf ``(batch, ceil(max_len / block_size))`` initialized
+    to the dump index; the engine's allocator (`launch.paged.BlockPool`)
+    owns the table contents. O(W) ring leaves stay per-slot."""
     if windowed is None:
         windowed = bool(cfg.window_size and cfg.global_every
                         and max_len > cfg.window_size
                         and cfg.n_layers % cfg.global_every == 0)
+    kh, hd = cfg.n_kv_heads, cfg.hd
+    if paged is not None:
+        n_blocks, blk = paged
+        tables = L.init_block_tables(batch, max_len, n_blocks, blk)
     if windowed:
         per = cfg.global_every
         g = cfg.n_layers // per
         w = cfg.window_size
-        kh, hd = cfg.n_kv_heads, cfg.hd
-        return {
+        cache = {
             "k_loc": jnp.zeros((g, per - 1, batch, w, kh, hd), dtype),
             "v_loc": jnp.zeros((g, per - 1, batch, w, kh, hd), dtype),
             "kpos_loc": jnp.full((g, per - 1, batch, w), -(2 ** 30),
                                  jnp.int32),
-            "k_glob": jnp.zeros((g, batch, max_len, kh, hd), dtype),
-            "v_glob": jnp.zeros((g, batch, max_len, kh, hd), dtype),
         }
-    shape = (cfg.n_layers, batch, max_len, cfg.n_kv_heads, cfg.hd)
+        if paged is not None:
+            cache["k_glob"] = jnp.zeros((g, n_blocks + 1, blk, kh, hd), dtype)
+            cache["v_glob"] = jnp.zeros((g, n_blocks + 1, blk, kh, hd), dtype)
+            cache["block_tables"] = tables
+        else:
+            cache["k_glob"] = jnp.zeros((g, batch, max_len, kh, hd), dtype)
+            cache["v_glob"] = jnp.zeros((g, batch, max_len, kh, hd), dtype)
+        return cache
+    if paged is not None:
+        shape = (cfg.n_layers, n_blocks + 1, blk, kh, hd)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+                "block_tables": tables}
+    shape = (cfg.n_layers, batch, max_len, kh, hd)
     return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
 
 
@@ -312,6 +370,31 @@ def prefill(params, cfg: ModelConfig, tokens, cache, *, input_embeds=None,
                                batch_axes=batch_axes)
     logits = logits_from_hidden(params, cfg, hidden[:, -1:], policy)
     return logits, cache
+
+
+def chunk_step(params, cfg: ModelConfig, tokens, cache, pos, q_len, *,
+               policy: GemmPolicy = EXACT, attn_chunk: int = 1024,
+               batch_axes=(), input_embeds=None, embed_mask=None):
+    """One serving step over a (B, T) token block: the unified form behind
+    both decode (T == 1, q_len == 1) and chunked prefill (T = chunk budget,
+    per-slot q_len <= T with trailing padding). Mixed prefill+decode batches
+    are just rows with different q_len. Writes land at per-slot positions
+    `pos[b] + j` for j < q_len[b] (padding is masked — paged caches redirect
+    it to the dump block); returns the logits of each slot's **last valid**
+    token, (B, 1, V) — bit-identical to the T == 1 decode step for decode
+    rows and to whole-prompt prefill's final logits for prompt rows."""
+    pos = jnp.asarray(pos, jnp.int32)
+    t = tokens.shape[1]
+    positions = pos[:, None] + jnp.arange(t, dtype=jnp.int32)[None, :]
+    hidden, cache, _ = forward(params, cfg, tokens=tokens, cache=cache,
+                               cache_pos=pos, positions=positions,
+                               policy=policy, attn_chunk=attn_chunk,
+                               batch_axes=batch_axes, q_len=q_len,
+                               input_embeds=input_embeds,
+                               embed_mask=embed_mask)
+    sel = jnp.maximum(jnp.asarray(q_len, jnp.int32) - 1, 0)
+    hidden = jnp.take_along_axis(hidden, sel[:, None, None], axis=1)  # (B,1,d)
+    return logits_from_hidden(params, cfg, hidden, policy), cache
 
 
 def decode_step(params, cfg: ModelConfig, token, cache, pos, *,

@@ -46,20 +46,31 @@ def init_mlstm(key, cfg: ModelConfig, dtype):
     }
 
 
-def _mlstm_chunked(q, k, v, log_i, log_f, state: Optional[MLSTMState], chunk: int):
-    """q/k/v: (B,T,H,D); log_i/log_f: (B,T,H). Stabilized chunked computation."""
+def _mlstm_chunked(q, k, v, log_i, log_f, state: Optional[MLSTMState], chunk: int,
+                   valid=None):
+    """q/k/v: (B,T,H,D); log_i/log_f: (B,T,H). Stabilized chunked computation.
+
+    `valid` (B, T) masks padded serving tokens at chunk granularity — it
+    requires chunk == 1 (the per-token serving form), where a masked step
+    leaves the (C, n, m) carry untouched."""
     bsz, t, h, d = q.shape
+    if valid is not None and chunk != 1:
+        raise ValueError("token masking requires the per-token form (chunk=1)")
     nc = -(-t // chunk)
     pad = nc * chunk - t
     if pad:
         q, k, v = (jnp.pad(z, ((0, 0), (0, pad), (0, 0), (0, 0))) for z in (q, k, v))
         log_i = jnp.pad(log_i, ((0, 0), (0, pad), (0, 0)), constant_values=-1e9)
         log_f = jnp.pad(log_f, ((0, 0), (0, pad), (0, 0)))
+        if valid is not None:
+            valid = jnp.pad(valid, ((0, 0), (0, pad)))
 
     def rc(z):
         return z.reshape(bsz, nc, chunk, *z.shape[2:]).swapaxes(0, 1)
 
     qc, kc, vc, lic, lfc = map(rc, (q, k, v, log_i, log_f))
+    vac = (rc(valid)[:, :, 0] if valid is not None
+           else jnp.ones((nc, bsz), bool))                  # (NC, B)
     if state is None:
         c0 = jnp.zeros((bsz, h, d, d), jnp.float32)
         n0 = jnp.zeros((bsz, h, d), jnp.float32)
@@ -69,7 +80,7 @@ def _mlstm_chunked(q, k, v, log_i, log_f, state: Optional[MLSTMState], chunk: in
 
     def body(carry, inp):
         c, n, m = carry
-        qk_, kk_, vk_, li, lf = inp
+        qk_, kk_, vk_, li, lf, val = inp
         cumf = jnp.cumsum(lf, axis=1)                        # (B,C,H) inclusive
         # log weight of source j for target i (i >= j): cumf_i - cumf_j + li_j
         lw = cumf[:, :, None, :] - cumf[:, None, :, :] + li[:, None, :, :]
@@ -95,15 +106,24 @@ def _mlstm_chunked(q, k, v, log_i, log_f, state: Optional[MLSTMState], chunk: in
                  + jnp.einsum("bjh,bjhd,bjhe->bhde", decay_tail, vk_, kk_))
         n_new = (jnp.exp(cumf[:, -1] + m - m_fin)[:, :, None] * n
                  + jnp.einsum("bjh,bjhd->bhd", decay_tail, kk_))
+        c_new = jnp.where(val[:, None, None, None], c_new, c)
+        n_new = jnp.where(val[:, None, None], n_new, n)
+        m_fin = jnp.where(val[:, None], m_fin, m)
         return (c_new, n_new, m_fin), y
 
-    (c_f, n_f, m_f), yc = jax.lax.scan(body, (c0, n0, m0), (qc, kc, vc, lic, lfc))
+    (c_f, n_f, m_f), yc = jax.lax.scan(body, (c0, n0, m0),
+                                       (qc, kc, vc, lic, lfc, vac))
     y = yc.swapaxes(0, 1).reshape(bsz, nc * chunk, h, d)[:, :t]
     return y, MLSTMState(c_f, n_f, m_f)
 
 
 def mlstm_block(p, x, cfg: ModelConfig, *, state: Optional[MLSTMState] = None,
-                chunk: int = 256, policy: GemmPolicy = EXACT, layer: str = ""):
+                chunk: int = 256, policy: GemmPolicy = EXACT, layer: str = "",
+                token_valid=None):
+    """With `state` (serving) the recurrence runs in the per-token form
+    (chunk=1) — every step is the decode step's update, so chunked prefill
+    reaches bit-identical memories whatever the chunk grid; `token_valid`
+    (B, T) freezes the carry on padded tokens. Training stays chunked."""
     bsz, t, d = x.shape
     di = cfg.ssm_expand * d
     h = cfg.n_heads
@@ -116,9 +136,10 @@ def mlstm_block(p, x, cfg: ModelConfig, *, state: Optional[MLSTMState] = None,
     gates = xi.astype(jnp.float32) @ p["w_if"]                       # (B,T,2H)
     log_i, f_raw = jnp.split(gates, 2, axis=-1)
     log_f = -jax.nn.softplus(-f_raw)                                 # log sigmoid
+    chunk_eff = 1 if state is not None else min(chunk, t)
     y, new_state = _mlstm_chunked(q.astype(jnp.float32), k.astype(jnp.float32),
                                   v.astype(jnp.float32), log_i, log_f, state,
-                                  min(chunk, t))
+                                  chunk_eff, valid=token_valid)
     y = y.reshape(bsz, t, di).astype(x.dtype)
     from .layers import rms_norm
     y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
@@ -137,16 +158,23 @@ def init_slstm(key, cfg: ModelConfig, dtype):
 
 
 def slstm_block(p, x, cfg: ModelConfig, *, state: Optional[SLSTMState] = None,
-                policy: GemmPolicy = EXACT, layer: str = ""):
-    """Sequential sLSTM (exponential gating, recurrent weights R)."""
+                policy: GemmPolicy = EXACT, layer: str = "",
+                token_valid=None):
+    """Sequential sLSTM (exponential gating, recurrent weights R).
+
+    Already per-token, so chunked prefill is chunk-invariant by construction;
+    `token_valid` (B, T) freezes the carry on padded serving tokens."""
     bsz, t, d = x.shape
     wx = dot(x, p["w_in"], policy, layer=layer + "/w_in")   # (B,T,4d)
     if state is None:
         state = SLSTMState(*(jnp.zeros((bsz, d), jnp.float32) for _ in range(4)))
 
     r_in = p["r_in"]
+    valid = (token_valid if token_valid is not None
+             else jnp.ones((bsz, t), bool))
 
-    def step(carry, wx_t):
+    def step(carry, inp):
+        wx_t, val_t = inp
         c, n, h, m = carry
         pre = wx_t.astype(jnp.float32) + h @ r_in.astype(jnp.float32)
         zi, ii, fi, oi = jnp.split(pre, 4, axis=-1)
@@ -159,8 +187,11 @@ def slstm_block(p, x, cfg: ModelConfig, *, state: Optional[SLSTMState] = None,
         c_new = f_g * c + i_g * zt
         n_new = f_g * n + i_g
         h_new = ot * c_new / jnp.maximum(n_new, 1.0)
-        return SLSTMState(c_new, n_new, h_new, m_new), h_new
+        keep = val_t[:, None]
+        new = SLSTMState(jnp.where(keep, c_new, c), jnp.where(keep, n_new, n),
+                         jnp.where(keep, h_new, h), jnp.where(keep, m_new, m))
+        return new, h_new
 
-    new_state, hs = jax.lax.scan(step, state, wx.swapaxes(0, 1))
+    new_state, hs = jax.lax.scan(step, state, (wx.swapaxes(0, 1), valid.T))
     y = hs.swapaxes(0, 1).astype(x.dtype)                      # (B,T,d)
     return dot(y, p["out"], policy, layer=layer + "/out"), new_state

@@ -49,13 +49,17 @@ def init_params(cfg: ModelConfig, key):
     }
 
 
-def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
+               paged=None):
+    """All state is recurrent (O(1) per slot) — nothing pages. ``paged``
+    still adds the ``block_tables`` leaf so the serve engine drives every
+    family through one cache shape convention; the model ignores it."""
     n_rep, n_m = _structure(cfg)
     di = cfg.ssm_expand * cfg.d_model
     h = cfg.n_heads
     hd = di // h
     d = cfg.d_model
-    return {
+    cache = {
         "m_c": jnp.zeros((n_rep, n_m, batch, h, hd, hd), jnp.float32),
         "m_n": jnp.zeros((n_rep, n_m, batch, h, hd), jnp.float32),
         "m_m": jnp.zeros((n_rep, n_m, batch, h), jnp.float32),
@@ -64,16 +68,29 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
         "s_h": jnp.zeros((n_rep, batch, d), jnp.float32),
         "s_m": jnp.zeros((n_rep, batch, d), jnp.float32),
     }
+    if paged is not None:
+        n_blocks, blk = paged
+        cache["block_tables"] = L.init_block_tables(batch, max_len, n_blocks,
+                                                    blk)
+    return cache
 
 
 def forward(params, cfg: ModelConfig, *, tokens, cache: Optional[Dict] = None,
-            policy: GemmPolicy = EXACT, chunk: int = 256, batch_axes=()):
+            policy: GemmPolicy = EXACT, chunk: int = 256, batch_axes=(),
+            q_len=None):
+    """`q_len` (B,) marks valid-token counts for chunked serving — trailing
+    padded tokens freeze every mLSTM/sLSTM carry (see models.xlstm)."""
     n_rep, n_m = _structure(cfg)
     x = params["embed"][tokens] * jnp.asarray(cfg.d_model ** 0.5,
                                               params["embed"].dtype)
     x = L.constrain_batch(x, batch_axes)
     use_cache = cache is not None
     new_cache = dict(cache) if use_cache else None
+    token_valid = None
+    if q_len is not None:
+        s = x.shape[1]
+        q_len = jnp.asarray(q_len, jnp.int32)
+        token_valid = jnp.arange(s, dtype=jnp.int32)[None, :] < q_len[:, None]
 
     def m_scan(rep_params, x, states):
         def body(x, xs):
@@ -84,7 +101,8 @@ def forward(params, cfg: ModelConfig, *, tokens, cache: Optional[Dict] = None,
                 out, ns = X.mlstm_block(
                     lp_["mlstm"], h, cfg,
                     state=X.MLSTMState(*st) if use_cache else None,
-                    chunk=chunk, policy=policy, layer="mlstm")
+                    chunk=chunk, policy=policy, layer="mlstm",
+                    token_valid=token_valid)
                 return x_ + out, (ns.c, ns.n, ns.m)
 
             if not use_cache:   # training: checkpoint (chunk quadratics)
@@ -104,7 +122,8 @@ def forward(params, cfg: ModelConfig, *, tokens, cache: Optional[Dict] = None,
     def s_apply(sp, x, state):
         h = L.rms_norm(x, sp["ln"], cfg.norm_eps)
         out, ns = X.slstm_block(sp["slstm"], h, cfg, state=state,
-                                policy=policy, layer="slstm")
+                                policy=policy, layer="slstm",
+                                token_valid=token_valid)
         return x + out, ns
 
     def rep_body(x, xs):
@@ -134,6 +153,8 @@ def forward(params, cfg: ModelConfig, *, tokens, cache: Optional[Dict] = None,
         new_cache = {"m_c": m_out[0], "m_n": m_out[1], "m_m": m_out[2],
                      "s_c": s_out[0], "s_n": s_out[1], "s_h": s_out[2],
                      "s_m": s_out[3]}
+        if "block_tables" in cache:
+            new_cache["block_tables"] = cache["block_tables"]
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     return x, new_cache
 
@@ -154,6 +175,20 @@ def prefill(params, cfg, tokens, cache, *, policy=EXACT, batch_axes=(), **_):
     hidden, cache = forward(params, cfg, tokens=tokens, cache=cache,
                             policy=policy, batch_axes=batch_axes)
     logits = dot(hidden[:, -1:], L.head_weight(params, hidden.dtype), policy,
+                 layer="lm_head")
+    return logits.astype(jnp.float32), cache
+
+
+def chunk_step(params, cfg, tokens, cache, pos, q_len, *, policy=EXACT,
+               batch_axes=(), **_):
+    """Unified serving step over a (B, T) token block — `pos` is accepted
+    for API uniformity but unused (the recurrence is position-free).
+    Returns each slot's last-valid-token logits, (B, 1, V)."""
+    hidden, cache = forward(params, cfg, tokens=tokens, cache=cache,
+                            policy=policy, batch_axes=batch_axes, q_len=q_len)
+    sel = jnp.maximum(jnp.asarray(q_len, jnp.int32) - 1, 0)
+    hidden = jnp.take_along_axis(hidden, sel[:, None, None], axis=1)
+    logits = dot(hidden, L.head_weight(params, hidden.dtype), policy,
                  layer="lm_head")
     return logits.astype(jnp.float32), cache
 

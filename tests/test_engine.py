@@ -1,6 +1,7 @@
 """Continuous-batching serve engine: scheduler semantics + bit-parity.
 
-Pins the PR-4 invariants:
+Pins the PR-4 invariants (now on the paged engine — the default — with the
+PR-5 paged/chunked-prefill additions):
 
 * **Scheduler**: FIFO admission order, arrival-step gating (trace replay),
   EOS / max-token retirement, slot reuse, full-queue backpressure.
@@ -13,6 +14,11 @@ Pins the PR-4 invariants:
   (batch 1) — for every GEMM backend on the dense family, for
   MoE/VLM/hybrid/xLSTM/windowed-dense under exact and weight-stationary
   (`gemm.bind`-bound) approximate policies.
+* **Paged == contiguous**: the paged engine (block-table caches + chunked
+  prefill) and the PR-4 contiguous engine (per-slot regions + fused
+  whole-prompt admit) produce identical streams for all six backends,
+  bound and unbound, across every family (`tests/test_paged.py` pins the
+  allocator itself and chunk-size invariance).
 * **Deterministic per-slot sampling**: a sampled request's tokens depend on
   (seed, rid, token index) only, not on batch composition.
 """
@@ -52,15 +58,26 @@ def _requests(cfg, lens, *, arrivals=None, seed=0, params=sampling.GREEDY,
 
 
 def _check_parity(cfg, params, policy, *, slots=2, max_len=16,
-                  lens=((5, 4), (8, 6), (3, 5), (6, 3)), vlm_embed_dim=0):
-    """Engine ragged greedy streams == per-request lockstep reference."""
+                  lens=((5, 4), (8, 6), (3, 5), (6, 3)), vlm_embed_dim=0,
+                  compare_contiguous=False, **engine_kw):
+    """Engine ragged greedy streams == per-request lockstep reference.
+
+    The engine under test is the paged one (chunked prefill over block-table
+    caches); `compare_contiguous` additionally runs the PR-4 contiguous
+    engine on the same trace and requires identical streams."""
     model = get_model(cfg)
-    reqs = _requests(cfg, lens, arrivals=[i // 2 for i in range(len(lens))],
-                     vlm_embed_dim=vlm_embed_dim)
+
+    def mkreqs():
+        return _requests(cfg, lens, arrivals=[i // 2 for i in range(len(lens))],
+                         vlm_embed_dim=vlm_embed_dim)
+
+    reqs = mkreqs()
     eng = E.ServeEngine(cfg, params, policy=policy, max_slots=slots,
-                        max_len=max_len)
+                        max_len=max_len, **engine_kw)
     finished = eng.run(reqs)
     assert len(finished) == len(reqs)
+    if getattr(eng, "pool", None) is not None:
+        eng.pool.check()
     for r in reqs:
         embeds = (jnp.asarray(r.input_embeds[None])
                   if r.input_embeds is not None else None)
@@ -70,6 +87,14 @@ def _check_parity(cfg, params, policy, *, slots=2, max_len=16,
         np.testing.assert_array_equal(
             finished[r.rid].tokens, ref[0],
             err_msg=f"rid={r.rid} diverged from lockstep reference")
+    if compare_contiguous:
+        cont = E.ServeEngine(cfg, params, policy=policy, max_slots=slots,
+                             max_len=max_len, paged=False)
+        fin_c = cont.run(mkreqs())
+        for rid in finished:
+            np.testing.assert_array_equal(
+                finished[rid].tokens, fin_c[rid].tokens,
+                err_msg=f"rid={rid}: paged engine diverged from contiguous")
 
 
 # --- ragged == lockstep at the decode-step level -----------------------------
@@ -136,37 +161,46 @@ BACKENDS = ("exact", "mxu_int8", "approx_lut", "approx_onehot", "approx_delta")
 
 
 @pytest.mark.parametrize("backend", BACKENDS)
-def test_engine_parity_dense_all_backends(backend):
+@pytest.mark.parametrize("bound", (False, True))
+def test_engine_parity_dense_all_backends(backend, bound):
+    """Acceptance grid: paged streams == solo lockstep for every backend,
+    bound and unbound, on the dense family — plus paged == the PR-4
+    contiguous engine on the MXU-resident backends (the gather backends are
+    interpret-mode slow; their contiguous equality follows transitively
+    through the lockstep reference both engines are pinned to)."""
+    if bound and backend == "exact":
+        pytest.skip("binding is a no-op for exact — identical to unbound")
     cfg = _dense()
     model = get_model(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
     pol = gemm.GemmPolicy(backend=backend, k=4)
-    _check_parity(cfg, params, pol)
+    p = model.bind_params(params, pol) if bound else params
+    slow = backend in ("approx_lut", "approx_onehot")
+    kw = {"lens": ((4, 3), (6, 4), (3, 3))} if slow else {}
+    _check_parity(cfg, p, pol, compare_contiguous=not slow, block_size=4,
+                  prefill_chunk=3, **kw)
 
 
-@pytest.mark.parametrize("backend", ("mxu_int8", "approx_delta"))
-def test_engine_parity_dense_bound(backend):
-    cfg = _dense()
-    model = get_model(cfg)
-    params = model.init_params(jax.random.PRNGKey(0))
-    pol = gemm.GemmPolicy(backend=backend, k=4)
-    _check_parity(cfg, model.bind_params(params, pol), pol)
-
-
-def test_engine_parity_dense_oracle():
+@pytest.mark.parametrize("bound", (False, True))
+def test_engine_parity_dense_oracle(bound):
     # the bit-level oracle is slow: 1 layer, tiny vocab, short streams
     cfg = dataclasses.replace(_dense(), n_layers=1, vocab_size=64)
     model = get_model(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
     pol = gemm.GemmPolicy(backend="approx_oracle", k=4)
-    _check_parity(cfg, params, pol, lens=((3, 2), (4, 3), (2, 2)),
-                  max_len=8)
+    p = model.bind_params(params, pol) if bound else params
+    _check_parity(cfg, p, pol, lens=((3, 2), (4, 3), (2, 2)),
+                  max_len=8, compare_contiguous=True, block_size=2,
+                  prefill_chunk=2)
 
 
 @pytest.mark.parametrize("arch", ("qwen3-moe-30b-a3b", "zamba2-1.2b",
                                   "xlstm-350m", "gemma3-12b", "pixtral-12b"))
 @pytest.mark.parametrize("mode", ("exact", "delta_bound"))
 def test_engine_parity_families(arch, mode):
+    """All families through the paged engine (mixed-chunk prefill straddling
+    ring windows, SSM states, xLSTM carries, VLM patch boundaries), pinned
+    against both the contiguous engine and the lockstep reference."""
     cfg = reduced(ARCHS[arch])
     model = get_model(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
@@ -175,12 +209,13 @@ def test_engine_parity_families(arch, mode):
     else:
         pol = gemm.GemmPolicy(backend="approx_delta", k=4)
         p = model.bind_params(params, pol)
-    # gemma3 reduced: window 8 — prompts <= 8 keep ring prefill legal, and
-    # max_len 24 > window exercises the two-tier windowed cache in the engine
+    # gemma3 reduced: window 8; max_len 24 > window exercises the two-tier
+    # windowed cache (paged global layers + per-slot rings) in the engine
     kw = {"max_len": 24} if arch == "gemma3-12b" else {}
     if arch == "pixtral-12b":
         kw["vlm_embed_dim"] = cfg.d_model
-    _check_parity(cfg, p, pol, **kw)
+    _check_parity(cfg, p, pol, compare_contiguous=(mode == "exact"),
+                  block_size=4, prefill_chunk=3, **kw)
 
 
 # --- scheduler semantics -----------------------------------------------------

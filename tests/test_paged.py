@@ -1,0 +1,255 @@
+"""Paged KV cache: block-pool allocator properties + engine-level invariants.
+
+Property tests (hypothesis, PR-1 deterministic fallback) drive random
+admit/write/retire workloads through `launch.paged.BlockPool` and check the
+allocator's safety invariants after every event:
+
+* alloc/free round-trips leak no blocks (owned + free == pool, always);
+* block tables never alias across live slots;
+* a slot can never write past its reservation, and admission on an
+  exhausted pool backpressures (raises) instead of corrupting.
+
+Engine-level tests pin the behaviors the allocator enables: out-of-blocks
+admission queues requests (and still finishes them, streams unmoved), and
+prompt chunking at any chunk size cannot move a bit of any stream.
+"""
+import sys
+from pathlib import Path
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fallback, see _hypothesis_fallback.py
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.configs import ARCHS, reduced
+from repro.launch import engine as E
+from repro.launch.paged import BlockPool, PagedSpec, default_spec
+from repro.models import get_model
+
+
+# --- allocator properties ----------------------------------------------------
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 24), st.integers(1, 8), st.integers(1, 6),
+       st.integers(0, 10 ** 6))
+def test_pool_random_workload_invariants(n_blocks, block_size, n_slots, seed):
+    """Random admit/extend/retire sequences: no leaks, no aliasing, writes
+    bounded by reservations, full release restores the whole pool."""
+    rng = np.random.default_rng(seed)
+    max_len = n_blocks * block_size          # a slot may use the whole pool
+    pool = BlockPool(PagedSpec(n_blocks, block_size), n_slots, max_len)
+    live = {}                                # slot -> (reserved_blocks, written)
+    for _ in range(200):
+        op = rng.integers(0, 3)
+        if op == 0 and len(live) < n_slots:          # admit
+            slot = next(s for s in range(n_slots) if s not in live)
+            need = int(rng.integers(1, n_blocks + 1))
+            if pool.can_reserve(need):
+                pool.reserve(slot, need)
+                live[slot] = (need, 0)
+        elif op == 1 and live:                       # alloc-on-write
+            slot = int(rng.choice(list(live)))
+            need, written = live[slot]
+            upto = int(rng.integers(0, need * block_size + 1))
+            pool.ensure(slot, upto)
+            live[slot] = (need, max(written, upto))
+        elif op == 2 and live:                       # retire
+            slot = int(rng.choice(list(live)))
+            pool.release(slot)
+            del live[slot]
+        pool.check()
+    for slot in list(live):
+        pool.release(slot)
+    pool.check()
+    assert pool.free_blocks == n_blocks, "full release must restore the pool"
+
+
+def test_pool_overcommit_raises_instead_of_corrupting():
+    pool = BlockPool(PagedSpec(4, 2), 4, 8)
+    pool.reserve(0, 3)
+    assert not pool.can_reserve(2)
+    with pytest.raises(RuntimeError, match="out of blocks"):
+        pool.reserve(1, 2)
+    pool.reserve(1, 1)                       # what still fits, fits
+    with pytest.raises(RuntimeError, match="past its reservation"):
+        pool.ensure(1, 2 * 2 + 1)            # 3 blocks > reserved 1
+    pool.check()
+
+
+def test_pool_tables_point_only_at_owned_blocks():
+    pool = BlockPool(PagedSpec(6, 4), 3, 24)
+    pool.reserve(0, 3)
+    pool.reserve(1, 3)
+    pool.ensure(0, 9)                        # 3 blocks
+    pool.ensure(1, 5)                        # 2 blocks
+    t0 = set(pool.tables[0][pool.tables[0] != pool.spec.dump])
+    t1 = set(pool.tables[1][pool.tables[1] != pool.spec.dump])
+    assert not (t0 & t1), "live tables alias a block"
+    pool.release(0)
+    pool.reserve(2, 3)
+    pool.ensure(2, 12)
+    t2 = set(pool.tables[2][pool.tables[2] != pool.spec.dump])
+    assert not (t1 & t2)
+    pool.check()
+
+
+def test_default_spec_matches_contiguous_budget():
+    spec = default_spec(n_slots=4, max_len=30, block_size=8)
+    assert spec.n_blocks == 4 * 4 and spec.block_size == 8
+    assert spec.blocks_for(0) == 0 and spec.blocks_for(1) == 1
+    assert spec.blocks_for(8) == 1 and spec.blocks_for(9) == 2
+
+
+# --- engine-level invariants -------------------------------------------------
+
+def _dense():
+    return reduced(ARCHS["smollm-360m"])
+
+
+def _requests(cfg, lens, *, arrivals=None, seed=0):
+    rng = np.random.default_rng(seed)
+    return [E.Request(rid=rid,
+                      prompt=rng.integers(0, cfg.vocab_size, pl).astype(np.int32),
+                      max_new_tokens=gl,
+                      arrival=0 if arrivals is None else arrivals[rid])
+            for rid, (pl, gl) in enumerate(lens)]
+
+
+def test_out_of_blocks_backpressure_streams_unmoved():
+    """A pool too small for all requests at once queues admissions — every
+    request still finishes, with exactly the roomy-pool streams."""
+    cfg = _dense()
+    params = get_model(cfg).init_params(jax.random.PRNGKey(0))
+    lens = [(5, 4), (6, 5), (4, 6), (7, 3)]
+    # each request needs ceil((P+G-1)/4) = 2-3 blocks; 4 blocks can hold at
+    # most two requests at a time even though 4 slots are configured
+    tight = E.ServeEngine(cfg, params, max_slots=4, max_len=16,
+                          block_size=4, n_blocks=4, prefill_chunk=4)
+    fin_tight = tight.run(_requests(cfg, lens))
+    assert tight.stats["peak_active_slots"] <= 2
+    tight.pool.check()
+    assert tight.pool.free_blocks == 4, "retired requests must free blocks"
+    roomy = E.ServeEngine(cfg, params, max_slots=4, max_len=16,
+                          block_size=4, prefill_chunk=4)
+    fin_roomy = roomy.run(_requests(cfg, lens))
+    assert sorted(fin_tight) == sorted(fin_roomy) == [0, 1, 2, 3]
+    for rid in fin_roomy:
+        np.testing.assert_array_equal(fin_tight[rid].tokens,
+                                      fin_roomy[rid].tokens)
+
+
+def test_single_request_larger_than_pool_rejected():
+    cfg = _dense()
+    params = get_model(cfg).init_params(jax.random.PRNGKey(0))
+    eng = E.ServeEngine(cfg, params, max_slots=1, max_len=16,
+                        block_size=4, n_blocks=2)
+    with pytest.raises(ValueError, match="blocks"):
+        eng.run(_requests(cfg, [(8, 8)]))
+
+
+@pytest.mark.parametrize("chunk", [1, 3, 8, 64])
+def test_prefill_chunk_size_cannot_move_a_bit(chunk):
+    """The chunked-prefill determinism contract: any chunk budget (including
+    whole-prompt and token-at-a-time) yields identical streams."""
+    cfg = _dense()
+    params = get_model(cfg).init_params(jax.random.PRNGKey(0))
+    lens = [(5, 4), (8, 6), (3, 5)]
+    eng = E.ServeEngine(cfg, params, max_slots=2, max_len=16,
+                        block_size=4, prefill_chunk=chunk)
+    fin = eng.run(_requests(cfg, lens))
+    ref_eng = E.ServeEngine(cfg, params, max_slots=2, max_len=16, paged=False)
+    ref = ref_eng.run(_requests(cfg, lens))
+    for rid in ref:
+        np.testing.assert_array_equal(fin[rid].tokens, ref[rid].tokens,
+                                      err_msg=f"chunk={chunk} rid={rid}")
+
+
+def test_engine_block_accounting_during_run():
+    """Mid-run the pool's tables never alias and blocks track live slots."""
+    cfg = _dense()
+    params = get_model(cfg).init_params(jax.random.PRNGKey(0))
+    eng = E.ServeEngine(cfg, params, max_slots=2, max_len=16,
+                        block_size=4, prefill_chunk=4)
+    for r in _requests(cfg, [(5, 6)] * 5):
+        eng.submit(r)
+    while eng.queue or eng.active.any():
+        eng.step()
+        eng.pool.check()
+    assert len(eng.finished) == 5
+    assert eng.pool.free_blocks == eng.pool.spec.n_blocks
+
+
+def test_occupancy_metrics_populated():
+    cfg = _dense()
+    params = get_model(cfg).init_params(jax.random.PRNGKey(0))
+    eng = E.ServeEngine(cfg, params, max_slots=2, max_len=16,
+                        block_size=4, prefill_chunk=4)
+    eng.run(_requests(cfg, [(5, 4), (6, 5)]))
+    st = eng.stats
+    assert 0 < st["slot_utilization"] <= 1
+    assert 0 < st["block_utilization"] <= 1
+    assert st["prefill_tokens"] == 5 + 6
+    assert st["decode_tokens"] == (4 - 1) + (5 - 1)
+    assert st["peak_active_slots"] == 2
+    assert st["peak_allocated_blocks"] <= eng.pool.spec.n_blocks
+
+
+def test_paged_capacity_exceeds_contiguous_at_fixed_budget():
+    """The headline property: at one fixed KV budget, the paged engine holds
+    more live requests than the contiguous engine's slot count allows."""
+    cfg = _dense()
+    params = get_model(cfg).init_params(jax.random.PRNGKey(0))
+    max_len, bs = 32, 4
+    budget_blocks = 2 * (max_len // bs)      # contiguous budget: 2 slots
+    lens = [(4, 4)] * 6                      # footprint 2 blocks each
+    paged = E.ServeEngine(cfg, params, max_slots=6, max_len=max_len,
+                          block_size=bs, n_blocks=budget_blocks,
+                          prefill_chunk=4)
+    fin_p = paged.run(_requests(cfg, lens))
+    assert paged.stats["peak_active_slots"] >= 4     # >= 2x the 2 slots
+    cont = E.ServeEngine(cfg, params, max_slots=2, max_len=max_len,
+                         paged=False)
+    fin_c = cont.run(_requests(cfg, lens))
+    for rid in fin_c:
+        np.testing.assert_array_equal(fin_p[rid].tokens, fin_c[rid].tokens)
+
+
+def test_paged_attention_multi_kv_chunk_matches_contiguous():
+    """nk > 1 paged reads (per-chunk block gathers inside the online-softmax
+    scan) are bit-identical to the contiguous cache — the regime where the
+    logical cache spans several attention KV chunks."""
+    import jax.numpy as jnp
+    from repro.models import transformer
+
+    cfg = _dense()
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(2))
+    rng = np.random.default_rng(3)
+    b, pl, max_len, bs, attn_chunk = 2, 9, 32, 4, 8     # nk = 32/8 = 4
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, (b, pl)), jnp.int32)
+
+    cont = transformer.init_cache(cfg, b, max_len)
+    lc, cont = transformer.prefill(params, cfg, prompts, cont,
+                                   attn_chunk=attn_chunk)
+
+    n_blocks = b * (max_len // bs)
+    pag = transformer.init_cache(cfg, b, max_len, paged=(n_blocks, bs))
+    # identity allocation: slot i owns blocks [i*mb, (i+1)*mb)
+    mb = max_len // bs
+    pag["block_tables"] = jnp.arange(b * mb, dtype=jnp.int32).reshape(b, mb)
+    lp, pag = transformer.prefill(params, cfg, prompts, pag,
+                                  attn_chunk=attn_chunk)
+    np.testing.assert_array_equal(np.asarray(lc), np.asarray(lp))
+
+    tok = jnp.argmax(lc[:, -1:], -1).astype(jnp.int32)
+    pos = jnp.full((b,), pl, jnp.int32)
+    dc, _ = transformer.decode_step(params, cfg, tok, cont, pos,
+                                    attn_chunk=attn_chunk)
+    dp, _ = transformer.decode_step(params, cfg, tok, pag, pos,
+                                    attn_chunk=attn_chunk)
+    np.testing.assert_array_equal(np.asarray(dc), np.asarray(dp))

@@ -173,3 +173,70 @@ def test_prepared_onehot_caches_t_b():
     assert prep.t_b is not None and prep.t_b.shape == (6 * 256, 4)
     np.testing.assert_array_equal(np.asarray(ops.prepared_matmul(a, prep)),
                                   np.asarray(lut.lut_matmul(a, b, k=4)))
+
+
+# --- adaptive correction-form selection (ROADMAP DCT-k=6 item) ---------------
+
+def test_adaptive_delta_picks_gather_when_rank_exceeds_width():
+    """When the weight-restricted rank r' exceeds the output width, the
+    adaptive policy prepares the (bit-identical) approx_lut gather path; a
+    wide output keeps the rank-r' correction matmuls."""
+    from repro.apps.dct import T8
+    pol = gemm.GemmPolicy(backend="approx_delta", k=6, delta_adaptive=True)
+    r_eff = error_delta.restricted_rank(T8, side="left", k=6)
+    assert r_eff > T8.shape[0], "the DCT k=6 regime: r' > 8-wide output"
+    prep = gemm.prepare_weights(T8, pol, layer="dct.fwd", side="left")
+    assert prep.backend == "approx_lut"
+    rng = np.random.default_rng(6)
+    wide = _rand((16, 256), rng, -100, 100)
+    assert gemm.prepare_weights(wide, pol, layer="w").backend == "approx_delta"
+
+
+def test_adaptive_delta_bitwise_parity_both_forms():
+    """dot() through an adaptive policy == non-adaptive approx_delta ==
+    approx_lut, bit for bit, on both sides of the width threshold."""
+    from repro.apps.dct import T8
+    rng = np.random.default_rng(7)
+    x = _rand((8, 24), rng, -100, 100)
+    pol_a = gemm.GemmPolicy(backend="approx_delta", k=6, delta_adaptive=True)
+    pol_d = gemm.GemmPolicy(backend="approx_delta", k=6)
+    pol_l = gemm.GemmPolicy(backend="approx_lut", k=6)
+    outs = []
+    for pol in (pol_a, pol_d, pol_l):
+        prep = gemm.prepare_weights(T8, pol, layer="dct.fwd", side="left")
+        outs.append(np.asarray(gemm.dot(prep, x, pol, layer="dct.fwd")))
+    np.testing.assert_array_equal(outs[0], outs[1])
+    np.testing.assert_array_equal(outs[0], outs[2])
+    # wide-output layer: adaptive keeps the delta form, still bit-identical
+    w = _rand((24, 128), rng)
+    a2 = _rand((5, 24), rng)
+    prep_a = gemm.prepare_weights(w, pol_a, layer="w")
+    prep_d = gemm.prepare_weights(w, pol_d, layer="w")
+    assert prep_a.backend == "approx_delta"
+    np.testing.assert_array_equal(
+        np.asarray(gemm.dot(a2, prep_a, pol_a, layer="w")),
+        np.asarray(gemm.dot(a2, prep_d, pol_d, layer="w")))
+
+
+def test_adaptive_delta_resolve_hints():
+    pol = gemm.GemmPolicy(backend="approx_delta", k=6, delta_adaptive=True)
+    assert pol.resolve("x") == "approx_delta"            # no hints: unchanged
+    assert pol.resolve("x", out_width=8, delta_rank=11) == "approx_lut"
+    assert pol.resolve("x", out_width=16, delta_rank=11) == "approx_delta"
+    off = gemm.GemmPolicy(backend="approx_delta", k=6)
+    assert off.resolve("x", out_width=8, delta_rank=11) == "approx_delta"
+
+
+def test_adaptive_delta_truncated_rank_keeps_delta_form():
+    """A truncated delta_rank/delta_tol correction is deliberately
+    approximate — adaptive selection must not swap it for the exact gather
+    path even when the restricted rank exceeds the output width."""
+    from repro.apps.dct import T8
+    pol = gemm.GemmPolicy(backend="approx_delta", k=6, delta_adaptive=True,
+                          delta_rank=3)
+    prep = gemm.prepare_weights(T8, pol, layer="dct.fwd", side="left")
+    assert prep.backend == "approx_delta" and prep.rank == 3
+    pol_t = gemm.GemmPolicy(backend="approx_delta", k=6, delta_adaptive=True,
+                            delta_tol=4.0)
+    prep_t = gemm.prepare_weights(T8, pol_t, layer="dct.fwd", side="left")
+    assert prep_t.backend == "approx_delta"
