@@ -25,9 +25,11 @@ import json
 import sys
 
 # same-run ratios: machine-invariant, gate-worthy
-GATED_KEYS = ("speedup", "speedup_vs_per_batch", "concurrency_ratio")
+GATED_KEYS = ("speedup", "speedup_vs_per_batch", "concurrency_ratio",
+              "guarded_frac")
 # absolute throughputs: printed for context only
-INFO_KEYS = ("engine_tok_per_s", "paged_tok_per_s", "chunked_tok_per_s")
+INFO_KEYS = ("engine_tok_per_s", "paged_tok_per_s", "chunked_tok_per_s",
+             "guarded_tok_per_s")
 
 
 def row_key(row: dict) -> tuple:

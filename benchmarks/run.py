@@ -571,6 +571,85 @@ def serve_engine_bench(fast: bool = False):
     print(f"bench_serve_engine_json,0,{os.path.normpath(path)}")
 
 
+def abft_guard_bench(fast: bool = False):
+    """ABFT guard overhead: guarded vs unguarded engine decode throughput.
+
+    Serves one fixed ragged Poisson trace through the paged engine per
+    backend, with ``guard='none'`` and ``guard='detect'`` (same params, same
+    compiled-step caches warmed), and records useful-tokens/s for both plus
+    their same-run ratio ``guarded_frac = guarded / unguarded`` — the
+    fraction of throughput that survives checksums + between-step scrubbing.
+    The scheduled CI job gates on that ratio (benchmarks/compare.py,
+    >20% drop fails): absolute tok/s is machine-bound, the fraction is not.
+    Streams are asserted bit-identical between the two runs — the guard must
+    observe, never perturb.
+    """
+    import json
+    import os
+    import jax
+    from repro.configs import ARCHS, reduced
+    from repro.core import gemm
+    from repro.launch import engine as engine_mod
+    from repro.models import get_model
+
+    cfg = reduced(ARCHS["smollm-360m"])
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    n_req = 8 if fast else 12
+    trace = engine_mod.make_poisson_trace(
+        n_req, rate=3.0, vocab_size=cfg.vocab_size, prompt_lens=(4, 6),
+        gen_lens=(6, 8, 12), seed=0)
+    useful = sum(r.max_new_tokens for r in trace)
+    backends = (("exact", False), ("approx_lut", True)) if fast else \
+        (("exact", False), ("mxu_int8", True), ("approx_lut", True),
+         ("approx_delta", True))
+    results = []
+    for backend, bind in backends:
+        p = model.bind_params(params, gemm.GemmPolicy(backend=backend, k=4)) \
+            if bind else params
+
+        def run(guard):
+            pol = gemm.GemmPolicy(backend=backend, k=4, guard=guard)
+            eng = engine_mod.ServeEngine(cfg, p, policy=pol, max_slots=4,
+                                         max_len=24)
+            fin = eng.run(list(trace))
+            assert eng.events["faults_detected"] == 0, eng.events
+            return {rid: f.tokens for rid, f in fin.items()}
+
+        base = run("none")
+        guarded = run("detect")                 # also warms both caches
+        for rid in base:
+            np.testing.assert_array_equal(base[rid], guarded[rid])
+        reps = 2 if fast else 3
+        none_s = min(engine_mod.elapsed(lambda: run("none"))[1]
+                     for _ in range(reps))
+        det_s = min(engine_mod.elapsed(lambda: run("detect"))[1]
+                    for _ in range(reps))
+        row = {"cell": "abft_guard", "backend": backend, "bound": bind,
+               "requests": n_req, "useful_tokens": useful,
+               "unguarded_tok_per_s": round(useful / none_s, 1),
+               "guarded_tok_per_s": round(useful / det_s, 1),
+               "guarded_frac": round(none_s / det_s, 3)}
+        results.append(row)
+        print(f"abft_guard_{backend}{'_bound' if bind else ''},"
+              f"{det_s / useful * 1e6:.0f},"
+              f"guarded={row['guarded_tok_per_s']}tok/s "
+              f"unguarded={row['unguarded_tok_per_s']}tok/s "
+              f"({row['guarded_frac']:.0%} survives the guard)")
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_abft.json")
+    with open(path, "w") as f:
+        json.dump({"device": jax.default_backend(),
+                   "mode": "interpret" if jax.default_backend() != "tpu"
+                   else "mosaic",
+                   "fast": fast, "arch": "smollm-360m (reduced)",
+                   "note": "guard='detect' vs guard='none' on one ragged "
+                           "Poisson trace through the paged engine; "
+                           "guarded_frac = guarded/unguarded tok/s "
+                           "(same-run ratio, gated in CI)",
+                   "results": results}, f, indent=1)
+    print(f"bench_abft_json,0,{os.path.normpath(path)}")
+
+
 def roofline_summary():
     """Dry-run roofline table (reads experiments/dryrun.jsonl if present)."""
     import json
@@ -613,6 +692,7 @@ BENCHES = {
     "apps_bench": apps_bench,
     "serve_bound_bench": serve_bound_bench,
     "serve_engine_bench": serve_engine_bench,
+    "abft_guard_bench": abft_guard_bench,
     "roofline_summary": lambda fast: roofline_summary(),
 }
 

@@ -1,0 +1,461 @@
+"""Algorithm-based fault tolerance (ABFT) for the GEMM path.
+
+The paper's energy savings come from aggressively simplified PE cells —
+exactly the regime (voltage/precision-scaled systolic hardware) where soft
+errors and stuck-at faults appear. A deployment must then distinguish
+*intended* approximation error from *actual* faults. This module provides the
+detection substrate `gemm.dot` uses when ``GemmPolicy.guard`` is
+``'detect'`` or ``'recompute'`` (see docs/serving.md "Reliability"):
+
+* **Weight-integrity checksum vectors** (the canonical systolic-array ABFT):
+  ``prepare_weights`` attaches row/column sums of the quantized weight matrix
+  (plus a bit-level fingerprint of the derived backend tables — delta
+  factors, one-hot ``T_B``, dequant scale) to every ``PreparedOperand``.
+  ``dot`` re-reduces the runtime operand and compares **exactly** (integer
+  arithmetic, threshold 0): any bit flip in a bound weight leaf that changes
+  the value the kernels consume is flagged, for every backend, with zero
+  false positives.
+* **Output checksums**: ``sum_j C_ij`` is compared against ``(A @ Be)_i``
+  (and ``sum_i C_ij`` against ``(e^T A @ B)_j``) computed by exact matvecs.
+  For exact integer backends the comparison threshold is 0. For approximate
+  backends the threshold is the *sound approximation envelope* derived from
+  the quantization/approximation bounds: each approximate product deviates
+  from exact by at most ``max |E_k|`` (the error table's max, exact per
+  (n_bits, k)), so a row checksum over N outputs of K-deep dots deviates by
+  at most ``N*K*max|E_k|``. Intended approximation error therefore **never**
+  false-positives; a fault is flagged when it pushes a checksum outside the
+  envelope.
+* **Table integrity**: the device-resident product/factor tables (uploaded
+  once, shared by all calls — the model for on-chip LUT SRAM) are compared
+  bit-for-bit against a freshly built host golden copy.
+* **Memory fingerprints** (`tree_fingerprint`/`verify_fingerprint`): bitcast
+  sums per pytree leaf, used by the serve engine to scrub bound params and
+  the paged KV pool between steps.
+
+Checksum arithmetic note: int32 sums may wrap, but wrapping is exact mod
+2^32 on both sides of each comparison; a clean run's true deviation is below
+the (< 2^31) threshold, so the signed wrapped difference equals the true
+difference and false positives remain impossible. A fault aliasing to within
+the envelope mod 2^32 is the only theoretical escape.
+
+Detection is reported through a **fault ledger**: inside traced code (the
+jitted serve-engine steps) a mismatch cannot raise, so it is recorded via
+``jax.debug.callback``; the engine drains the ledger after its per-step
+device sync and runs its quarantine/restore/replay protocol. Eager callers
+(apps, tests) get a synchronous ``AbftFaultError``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+GUARDS = ("none", "detect", "recompute")
+
+# Cap thresholds below int31 so signed wrapped differences stay ordered.
+_THRESHOLD_CAP = 1 << 30
+
+
+class AbftFaultError(RuntimeError):
+    """A guarded GEMM (or an engine scrub) detected a fault.
+
+    ``faults`` holds the `Fault` records that triggered the error; the
+    message summarizes the first few.
+    """
+
+    def __init__(self, faults: Sequence["Fault"]):
+        self.faults = list(faults)
+        head = "; ".join(str(f) for f in self.faults[:4])
+        more = f" (+{len(self.faults) - 4} more)" if len(self.faults) > 4 else ""
+        super().__init__(f"ABFT fault detected: {head}{more}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One detected integrity violation."""
+    layer: str
+    kind: str            # "weight" | "table" | "output" | "memory" | "aux"
+    deviation: float
+    threshold: float
+
+    def __str__(self) -> str:
+        return (f"[{self.kind}] layer={self.layer!r} deviation={self.deviation}"
+                f" > threshold={self.threshold}")
+
+
+# --------------------------------------------------------------------------
+# Fault ledger: the traced-code escape hatch
+# --------------------------------------------------------------------------
+
+_LEDGER: List[Fault] = []
+
+
+def _record_cb(dev, *, layer: str, kind: str, threshold: float) -> None:
+    d = float(dev)
+    if d > threshold:
+        _LEDGER.append(Fault(layer, kind, d, threshold))
+
+
+def record(dev, *, layer: str, kind: str, threshold: float = 0.0) -> None:
+    """Record a deviation (fault iff dev > threshold).
+
+    Traced values are routed through ``jax.debug.callback`` (the host-side
+    append happens when the step actually executes); concrete values append
+    immediately.
+    """
+    if isinstance(dev, jax.core.Tracer):
+        jax.debug.callback(functools.partial(_record_cb, layer=layer,
+                                             kind=kind, threshold=threshold),
+                           dev)
+    else:
+        _record_cb(dev, layer=layer, kind=kind, threshold=threshold)
+
+
+def drain_faults() -> List[Fault]:
+    """Flush pending device callbacks and return (and clear) the ledger."""
+    jax.effects_barrier()
+    out = list(_LEDGER)
+    _LEDGER.clear()
+    return out
+
+
+def clear_faults() -> None:
+    jax.effects_barrier()
+    _LEDGER.clear()
+
+
+# --------------------------------------------------------------------------
+# Thresholds from the approximation's error bounds
+# --------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=64)
+def max_error_distance(n_bits: int = 8, k: int = 4, acc_bits: int = 24,
+                       signed: bool = True) -> int:
+    """Exact max |approx - exact| per product (the error table's max)."""
+    if k <= 0:
+        return 0
+    from . import error_delta
+    return int(np.abs(error_delta.error_table(n_bits, k, signed,
+                                              acc_bits)).max())
+
+
+def _per_product_bound(policy, backend: str) -> int:
+    med = max_error_distance(policy.n_bits, policy.k, policy.acc_bits)
+    if backend in ("mxu_int8", "exact"):
+        return 0
+    if backend == "approx_oracle":
+        # the fused MAC chain also runs the *accumulator's* bits through the
+        # approximate columns (< k), which the per-product table cannot see:
+        # the approximate region's value error is < 2^k and each of the
+        # ~n_bits absorbed rows can lose/gain one carry into column k, so
+        # bound the extra per-MAC deviation by (n_bits + 3) * 2^k
+        med = max(med, (policy.n_bits + 3) << policy.k)
+    if (backend == "approx_delta"
+            and (policy.delta_rank is not None or policy.delta_tol is not None)):
+        # truncated correction: bounded extra error on top of the table's
+        from . import error_delta
+        fac = error_delta.delta_factors(policy.n_bits, policy.k, True,
+                                        policy.acc_bits,
+                                        rank=policy.delta_rank,
+                                        tol=policy.delta_tol)
+        med += int(np.ceil(fac.max_err)) + 1
+    return med
+
+
+def int_thresholds(policy, backend: str, a_shape, b_shape) -> Tuple[int, int]:
+    """(row, col) output-checksum thresholds for an (M,K)x(K,N) int GEMM.
+
+    Row checksums sum N outputs, col checksums sum M outputs; each output is
+    a K-deep dot whose per-product approximation error is bounded by
+    ``max_error_distance`` — the sound envelope intended approximation can
+    reach and a detectable fault must exceed.
+    """
+    m, kd = a_shape[-2], a_shape[-1]
+    n = b_shape[-1]
+    med = _per_product_bound(policy, backend)
+    return (min(kd * n * med, _THRESHOLD_CAP), min(kd * m * med, _THRESHOLD_CAP))
+
+
+# --------------------------------------------------------------------------
+# Prepared-operand checksum metadata
+# --------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AbftMeta:
+    """Clean-weight checksums attached to a ``PreparedOperand`` at bind time.
+
+    ``row``/``col`` are the last-axis / second-to-last-axis sums of the
+    quantized integer values (leading stack dims preserved so bound stacks
+    still ride ``lax.scan``/``vmap``); ``aux`` is a bitcast fingerprint of
+    every *derived* leaf of the prepared operand (delta factors, one-hot
+    table, dequant scale) reduced to the stack dims.
+    """
+    row: jnp.ndarray     # (..., K) int32 — sum over the last axis
+    col: jnp.ndarray     # (..., N) int32 — sum over the second-to-last axis
+    aux: jnp.ndarray     # (...,) uint32 — fingerprint of derived leaves
+
+
+jax.tree_util.register_pytree_node(
+    AbftMeta,
+    lambda m: ((m.row, m.col, m.aux), None),
+    lambda _, ch: AbftMeta(*ch))
+
+
+def _bitsum(leaf, lead_ndim: int) -> jnp.ndarray:
+    """uint32 wraparound sum of a leaf's bit patterns over its trailing axes."""
+    x = jnp.asarray(leaf)
+    if jnp.issubdtype(x.dtype, jnp.floating):
+        if x.dtype != jnp.float32:
+            x = x.astype(jnp.float32)
+        bits = jax.lax.bitcast_convert_type(x, jnp.uint32)
+    elif x.dtype == jnp.bool_:
+        bits = x.astype(jnp.uint32)
+    else:
+        bits = x.astype(jnp.uint32)
+    axes = tuple(range(lead_ndim, bits.ndim))
+    return jnp.sum(bits, axis=axes, dtype=jnp.uint32)
+
+
+def aux_fingerprint(children, lead_shape: Tuple[int, ...]) -> jnp.ndarray:
+    """Combined bitcast fingerprint of the derived leaves of a prepared
+    operand, shaped like the operand's leading stack dims."""
+    total = jnp.zeros(lead_shape, jnp.uint32)
+    for leaf in jax.tree_util.tree_leaves(children):
+        total = total + _bitsum(leaf, len(lead_shape))
+    return total
+
+
+def meta_for(values: jnp.ndarray, derived) -> AbftMeta:
+    """Build the checksum metadata for a freshly prepared (clean) operand."""
+    lead = values.shape[:-2]
+    return AbftMeta(
+        row=jnp.sum(values, axis=-1, dtype=jnp.int32),
+        col=jnp.sum(values, axis=-2, dtype=jnp.int32),
+        aux=aux_fingerprint(derived, lead))
+
+
+def prep_derived(prep) -> Tuple:
+    """The derived (non-``values``) numeric leaves of a PreparedOperand."""
+    return (prep.delta, prep.t_b, prep.scale)
+
+
+# --------------------------------------------------------------------------
+# The guards
+# --------------------------------------------------------------------------
+
+def _maxabs_i32(x) -> jnp.ndarray:
+    x = x.astype(jnp.int32)
+    # |INT32_MIN| overflows back to INT32_MIN (negative): a sign-bit upset
+    # whose wrapped deviation is exactly -2^31 would otherwise compare as
+    # *smaller* than any threshold — clamp it to INT32_MAX (> the 2^30
+    # threshold cap) so it always reads as a huge deviation
+    return jnp.max(jnp.where(x == jnp.iinfo(jnp.int32).min,
+                             jnp.iinfo(jnp.int32).max, jnp.abs(x)))
+
+
+def guard_weight_meta(prep, *, layer: str, guard: str) -> None:
+    """Exact integrity check of a prepared operand against its clean sums."""
+    meta = getattr(prep, "abft", None)
+    if meta is None or guard == "none":
+        return
+    vals = prep.values
+    dev = jnp.maximum(
+        _maxabs_i32(jnp.sum(vals, axis=-1, dtype=jnp.int32) - meta.row),
+        _maxabs_i32(jnp.sum(vals, axis=-2, dtype=jnp.int32) - meta.col))
+    aux = aux_fingerprint(prep_derived(prep), vals.shape[:-2])
+    aux_dev = jnp.max((aux - meta.aux).astype(jnp.int32) != 0).astype(jnp.int32)
+    total = jnp.maximum(dev, aux_dev).astype(jnp.float32)
+    if isinstance(total, jax.core.Tracer):
+        record(total, layer=layer, kind="weight", threshold=0.0)
+    elif float(total) > 0:
+        raise AbftFaultError([Fault(layer, "weight", float(total), 0.0)])
+
+
+def guard_int_matmul(acc, a, b, *, policy, backend: str, layer: str,
+                     meta: Optional[AbftMeta] = None, meta_side: str = "right",
+                     recompute_fn=None):
+    """Output-checksum guard for a 2-D integer GEMM ``acc = a @_approx b``.
+
+    ``meta`` (when the fixed operand was prepared) supplies the *clean*
+    checksum vector for the expected-value matvec, so a corrupted weight
+    perturbs the comparison even though the corrupted operand also feeds the
+    expected side. Returns ``acc`` (identity under ``detect``; under
+    ``recompute`` a flagged tile is re-executed once via ``recompute_fn``
+    and re-checked).
+    """
+    guard = policy.guard
+    if guard == "none":
+        return acc
+    a32 = a.astype(jnp.int32)
+    b32 = b.astype(jnp.int32)
+    thr_row, thr_col = int_thresholds(policy, backend, a32.shape, b32.shape)
+    b_row = meta.row if (meta is not None and meta_side == "right") \
+        else jnp.sum(b32, axis=-1, dtype=jnp.int32)
+    a_col = meta.col if (meta is not None and meta_side == "left") \
+        else jnp.sum(a32, axis=-2, dtype=jnp.int32)
+
+    def deviations(out):
+        dev_r = _maxabs_i32(jnp.sum(out, axis=-1, dtype=jnp.int32)
+                            - jnp.matmul(a32, b_row))
+        dev_c = _maxabs_i32(jnp.sum(out, axis=-2, dtype=jnp.int32)
+                            - jnp.matmul(a_col, b32))
+        return dev_r, dev_c
+
+    dev_r, dev_c = deviations(acc)
+    bad = (dev_r > thr_row) | (dev_c > thr_col)
+    traced = isinstance(bad, jax.core.Tracer)
+    if guard == "recompute" and recompute_fn is not None:
+        if traced:
+            acc = jax.lax.cond(bad, recompute_fn, lambda: acc)
+            dev_r, dev_c = deviations(acc)
+        elif bool(bad):
+            acc = recompute_fn()
+            dev_r, dev_c = deviations(acc)
+    dev_r, dev_c = dev_r.astype(jnp.float32), dev_c.astype(jnp.float32)
+    if traced:
+        record(dev_r, layer=layer, kind="output", threshold=float(thr_row))
+        record(dev_c, layer=layer, kind="output", threshold=float(thr_col))
+        return acc
+    faults = [Fault(layer, "output", float(d), float(t))
+              for d, t in ((dev_r, thr_row), (dev_c, thr_col))
+              if float(d) > t]
+    if faults:
+        raise AbftFaultError(faults)
+    return acc
+
+
+def float_threshold(a, b, out_dtype=None) -> jnp.ndarray:
+    """Sound checksum tolerance for an exact float matmul.
+
+    Re-association between the checksum matvec and the row/col sums of the
+    product perturbs each partial by at most a few ulps per accumulation —
+    in the *computation* precision: a bf16 model pays bf16 rounding per
+    output element, so the tolerance must use the widest eps among the
+    operand/output dtypes, not float32's. The bound below is far looser
+    than observed clean drift while an exponent or sign-bit fault exceeds
+    it by orders of magnitude.
+    """
+    kd = a.shape[-1]
+    # the column checksum flattens every leading dim of `a` into one long
+    # accumulation, so the drift budget must count *all* rows, not just the
+    # trailing matrix dimension
+    rows = int(np.prod(a.shape[:-1])) if a.ndim > 1 else 1
+    eps = max(float(jnp.finfo(dt).eps)
+              for dt in (a.dtype, b.dtype, out_dtype or a.dtype)
+              if jnp.issubdtype(dt, jnp.inexact))
+    amax = jnp.max(jnp.abs(a.astype(jnp.float32)))
+    bmax = jnp.max(jnp.abs(b.astype(jnp.float32)))
+    return (64.0 * jnp.float32(eps) * jnp.float32(kd * max(rows,
+                                                           b.shape[-1]))
+            * jnp.maximum(amax * bmax, jnp.float32(1e-30)))
+
+
+def guard_float_matmul(out, a, b, *, policy, layer: str):
+    """Output-checksum guard for the exact float path (2-D right operand)."""
+    if policy.guard == "none" or b.ndim != 2:
+        return out
+    a32 = a.astype(jnp.float32)
+    b32 = b.astype(jnp.float32)
+    o32 = out.astype(jnp.float32)
+    thr = float_threshold(a, b, out.dtype)
+    dev_r = jnp.max(jnp.abs(jnp.sum(o32, axis=-1) - a32 @ jnp.sum(b32, -1)))
+    a_col = jnp.sum(a32.reshape(-1, a32.shape[-1]), axis=0)
+    dev_c = jnp.max(jnp.abs(jnp.sum(o32.reshape(-1, o32.shape[-1]), axis=0)
+                            - a_col @ b32))
+    dev = jnp.maximum(dev_r, dev_c)
+    rel = dev / thr
+    if isinstance(rel, jax.core.Tracer):
+        record(rel, layer=layer, kind="output", threshold=1.0)
+        return out
+    if float(dev) > float(thr):
+        raise AbftFaultError([Fault(layer, "output", float(dev), float(thr))])
+    return out
+
+
+# --------------------------------------------------------------------------
+# Device-table integrity
+# --------------------------------------------------------------------------
+
+def _table_mismatch(golden: np.ndarray, device) -> bool:
+    return not np.array_equal(golden, np.asarray(device))
+
+
+def verify_tables(policy, backend: str, *, layer: str = "") -> None:
+    """Compare the device-resident tables a backend consumes against freshly
+    built host golden copies. Raises ``AbftFaultError`` on mismatch (host
+    context: at trace time under jit, per call in eager code).
+
+    The device caches model on-chip table SRAM (uploaded once, reused by
+    every call); the host build is the trusted reference. ``approx_oracle``
+    re-derives every product from the bit-level PE emulation and has no
+    table to corrupt.
+    """
+    if policy.guard == "none" or backend in ("exact", "mxu_int8",
+                                             "approx_oracle"):
+        return
+    from . import emulate, error_delta
+    n_bits, k, acc = policy.n_bits, policy.k, policy.acc_bits
+    golden = emulate.product_table(n_bits, k, True, acc)
+    with jax.ensure_compile_time_eval():
+        faults = []
+        if backend in ("approx_lut", "approx_onehot"):
+            dev = emulate.product_table_jnp(n_bits, k, True, acc,
+                                            flat=(backend == "approx_lut"))
+            ref = golden.reshape(-1) if backend == "approx_lut" else golden
+            if _table_mismatch(ref, dev):
+                faults.append(Fault(layer, "table", 1.0, 0.0))
+        elif backend == "approx_delta":
+            fac = error_delta.delta_factors(n_bits, k, True, acc,
+                                            rank=policy.delta_rank,
+                                            tol=policy.delta_tol)
+            f_dev, g_dev = error_delta.factor_tables_jnp(
+                n_bits, k, True, acc, rank=policy.delta_rank,
+                tol=policy.delta_tol)
+            if fac.rank:
+                span = 1 << n_bits
+                ok = (np.array_equal(np.ascontiguousarray(fac.f).reshape(-1),
+                                     np.asarray(f_dev))
+                      and np.array_equal(
+                          np.ascontiguousarray(fac.g).reshape(-1),
+                          np.asarray(g_dev)))
+                if not ok:
+                    faults.append(Fault(layer, "table", 1.0, 0.0))
+    if faults:
+        raise AbftFaultError(faults)
+
+
+# --------------------------------------------------------------------------
+# Memory fingerprints (engine scrub)
+# --------------------------------------------------------------------------
+
+def tree_fingerprint(tree) -> Dict[str, int]:
+    """Bitcast-sum fingerprint per array leaf, keyed by the pytree path.
+
+    Bitwise-sensitive: any single bit flip in a leaf changes its uint32
+    wraparound sum (a *pair* of compensating flips could alias — the engine
+    scrub targets single-event upsets). One device reduction + host sync per
+    leaf; the serve engine runs this over bound params and the paged KV pool
+    between steps when the policy is guarded.
+    """
+    out: Dict[str, int] = {}
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    for path, leaf in flat:
+        if not hasattr(leaf, "dtype") or not hasattr(leaf, "ndim"):
+            continue
+        key = jax.tree_util.keystr(path)
+        out[key] = int(_bitsum(leaf, 0))
+    return out
+
+
+def verify_fingerprint(tree, ref: Dict[str, int]) -> List[str]:
+    """Paths whose current fingerprint differs from ``ref`` (new/missing
+    leaves count as mismatches — structure changes are not expected between
+    scrubs)."""
+    cur = tree_fingerprint(tree)
+    bad = [p for p, v in cur.items() if ref.get(p) != v]
+    bad += [p for p in ref if p not in cur]
+    return bad

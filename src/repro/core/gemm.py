@@ -44,6 +44,7 @@ from . import emulate, lut, quant
 
 BACKENDS = ("exact", "mxu_int8", "approx_lut", "approx_oracle", "approx_onehot",
             "approx_delta")
+GUARDS = ("none", "detect", "recompute")     # GemmPolicy.guard modes
 
 
 @dataclasses.dataclass(frozen=True)
@@ -66,6 +67,13 @@ class GemmPolicy:
     so ``resolve`` falls back to ``approx_lut`` for that layer — bit-
     identical output, strictly less work. `prepare_weights` supplies the
     (out_width, delta_rank) hints; without hints resolution is unchanged.
+
+    ``guard`` selects the ABFT fault-detection mode (core/abft.py):
+    ``'none'`` (default, zero overhead), ``'detect'`` (checksum every GEMM,
+    raise/record ``AbftFaultError`` on mismatch), or ``'recompute'``
+    (re-execute a flagged tile once and re-check). Thresholds come from the
+    approximation's own error bounds, so intended approximation error never
+    false-positives.
     """
     backend: str = "exact"
     k: int = 4
@@ -75,6 +83,7 @@ class GemmPolicy:
     delta_rank: Optional[int] = None
     delta_tol: Optional[float] = None
     delta_adaptive: bool = False
+    guard: str = "none"
 
     def resolve(self, layer: str = "", *, out_width: Optional[int] = None,
                 delta_rank: Optional[int] = None) -> str:
@@ -115,6 +124,9 @@ def as_policy(policy=None, *, backend: str = "approx_lut",
                         f" got {type(policy).__name__}")
     if k is not None and policy.k != k:
         policy = dataclasses.replace(policy, k=k)
+    if policy.guard not in GUARDS:
+        raise ValueError(f"unknown guard {policy.guard!r}; "
+                         "one of ('none', 'detect', 'recompute')")
     return policy
 
 
@@ -141,6 +153,30 @@ def _int_gemm(x_q, w_q, backend: str, policy: GemmPolicy):
                                        rank=policy.delta_rank,
                                        tol=policy.delta_tol)
     raise ValueError(f"unknown integer backend {backend!r}")
+
+
+def _guard_mm(mm2d, policy: GemmPolicy, backend: str, layer: str, prep=None):
+    """Wrap a 2-D integer matmul closure with the ABFT output-checksum guard.
+
+    The wrapped closure receives the actual 2-D operands (the batched-app
+    shim hands them over flattened), so the checksum matvecs see exactly what
+    the kernel saw. ``prep`` supplies the clean-weight checksum metadata when
+    the fixed operand was prepared (``core.abft.AbftMeta``), which pins the
+    expected-value matvec to the *bind-time* weights.
+    """
+    if policy.guard == "none":
+        return mm2d
+    from . import abft
+    meta = getattr(prep, "abft", None) if prep is not None else None
+    meta_side = prep.side if prep is not None else "right"
+
+    def guarded(a, b):
+        acc = mm2d(a, b)
+        return abft.guard_int_matmul(
+            acc, a, b, policy=policy, backend=backend, layer=layer,
+            meta=meta, meta_side=meta_side,
+            recompute_fn=lambda: mm2d(a, b))
+    return guarded
 
 
 def _check_prepared(prep, backend: str, policy: GemmPolicy, layer: str) -> None:
@@ -265,15 +301,21 @@ def dot(a, b, policy: GemmPolicy = EXACT, *, layer: str = "",
                 f"layer {layer!r}: operand prepared from integer weights "
                 "used with float input — prepare from the float weights "
                 "instead so a dequantization scale is attached")
+        if policy.guard != "none":
+            from . import abft
+            abft.verify_tables(policy, prep.backend, layer=layer)
+            abft.guard_weight_meta(prep, layer=layer, guard=policy.guard)
         if prep.values.ndim > 2:                    # stacked (grouped) prepare
             return _dot_grouped(x, prep, policy, layer)
         if prep.scale is not None:
-            return _dot_float_prepared(x, prep, policy)
+            return _dot_float_prepared(x, prep, policy, layer)
         x = jnp.asarray(x, jnp.int32)
         if a_prep:
             mm = lambda _, bb: ops.prepared_matmul(bb, prep)  # noqa: E731
+            mm = _guard_mm(mm, policy, prep.backend, layer, prep)
             return ops.batched_app_matmul(mm, prep.values, x)
         mm = lambda aa, _: ops.prepared_matmul(aa, prep)      # noqa: E731
+        mm = _guard_mm(mm, policy, prep.backend, layer, prep)
         return ops.batched_app_matmul(mm, x, prep.values)
 
     a = jnp.asarray(a)
@@ -283,20 +325,30 @@ def dot(a, b, policy: GemmPolicy = EXACT, *, layer: str = "",
                         and a.shape[0] == b.shape[0]):
         raise ValueError(f"grouped=True wants (G, M, K) x (G, K, N), got "
                          f"{a.shape} x {b.shape}")
+    if policy.guard != "none" and backend not in ("exact",):
+        from . import abft
+        abft.verify_tables(policy, backend, layer=layer)
     if not float_mode:
         a = a.astype(jnp.int32)
         b = b.astype(jnp.int32)
         if backend == "exact":
             if grouped:
                 return jnp.matmul(a, b)
-            return ops.batched_app_matmul(jnp.matmul, a, b)
+            mm = _guard_mm(jnp.matmul, policy, "exact", layer)
+            return ops.batched_app_matmul(mm, a, b)
         mm = lambda aa, bb: _int_gemm(aa, bb, backend, policy)    # noqa: E731
+        mm = _guard_mm(mm, policy, backend, layer)
         if grouped:
             return ops.grouped_matmul(mm, a, b)
         return ops.batched_app_matmul(mm, a, b)
 
     if backend == "exact":
-        return jnp.matmul(a, b)
+        out = jnp.matmul(a, b)
+        if policy.guard != "none" and b.ndim == 2:
+            from . import abft
+            out = abft.guard_float_matmul(out, a, b, policy=policy,
+                                          layer=layer)
+        return out
     if grouped:
         return _dot_grouped(a, b, policy, layer)
     if b.ndim != 2:
@@ -309,12 +361,15 @@ def dot(a, b, policy: GemmPolicy = EXACT, *, layer: str = "",
     x2 = a.reshape(-1, k_dim)
     xq = quant.quantize(x2, n_bits=policy.n_bits, axis=-1)  # per-row (token)
     wq = quant.quantize(b, n_bits=policy.n_bits, axis=0)   # per-output-channel
-    acc = _int_gemm(xq.values, wq.values, backend, policy)
+    mm = _guard_mm(lambda aa, bb: _int_gemm(aa, bb, backend, policy),
+                   policy, backend, layer)
+    acc = mm(xq.values, wq.values)
     out = _dequant(acc, xq.scale, wq.scale)
     return _round_to(out.reshape(*lead, b.shape[-1]), a.dtype)
 
 
-def _dot_float_prepared(x, prep, policy: GemmPolicy) -> jnp.ndarray:
+def _dot_float_prepared(x, prep, policy: GemmPolicy,
+                        layer: str = "") -> jnp.ndarray:
     """Float-in/float-out against a float-prepared (scaled) fixed operand.
 
     Mirrors the unprepared float path bit-for-bit: the moving operand is
@@ -328,12 +383,15 @@ def _dot_float_prepared(x, prep, policy: GemmPolicy) -> jnp.ndarray:
         lead = x.shape[:-1]
         x2 = x.reshape(-1, x.shape[-1])
         xq = quant.quantize(x2, n_bits=policy.n_bits, axis=-1)     # per-row
-        acc = ops.prepared_matmul(xq.values, prep)
+        mm = lambda aa, _: ops.prepared_matmul(aa, prep)           # noqa: E731
+        mm = _guard_mm(mm, policy, prep.backend, layer, prep)
+        acc = mm(xq.values, prep.values)
         out = _dequant(acc, xq.scale, prep.scale)          # (R, 1) x (1, N)
         return _round_to(out.reshape(*lead, prep.values.shape[-1]), x.dtype)
     # fixed left operand W (M, K) x moving (..., K, N)
     xq = quant.quantize(x, n_bits=policy.n_bits, axis=-2)          # per-column
     mm = lambda _, bb: ops.prepared_matmul(bb, prep)               # noqa: E731
+    mm = _guard_mm(mm, policy, prep.backend, layer, prep)
     acc = ops.batched_app_matmul(mm, prep.values, xq.values)
     out = _dequant(acc, xq.scale, prep.scale)          # (M, 1) x (..., 1, N)
     return _round_to(out, x.dtype)
@@ -346,19 +404,25 @@ def _dot_grouped(x, w_or_prep, policy: GemmPolicy, layer: str) -> jnp.ndarray:
     if _is_float(x):
         def mm(x2, w2):
             if isinstance(w2, ops.PreparedOperand):
-                return _dot_float_prepared(x2, w2, policy)
+                return _dot_float_prepared(x2, w2, policy, layer)
             xq = quant.quantize(x2, n_bits=policy.n_bits, axis=-1)
             wq = quant.quantize(w2, n_bits=policy.n_bits, axis=0)
             backend = policy.resolve(layer)
-            acc = _int_gemm(xq.values, wq.values, backend, policy)
+            gm = _guard_mm(lambda aa, bb: _int_gemm(aa, bb, backend, policy),
+                           policy, backend, layer)
+            acc = gm(xq.values, wq.values)
             return _round_to(_dequant(acc, xq.scale, wq.scale), x2.dtype)
         return ops.grouped_matmul(mm, x, w_or_prep)
     x = x.astype(jnp.int32)
     if isinstance(w_or_prep, ops.PreparedOperand):
-        mm = lambda x2, p2: ops.prepared_matmul(x2, p2)            # noqa: E731
+        def mm(x2, p2):
+            gm = lambda aa, _: ops.prepared_matmul(aa, p2)         # noqa: E731
+            gm = _guard_mm(gm, policy, p2.backend, layer, p2)
+            return gm(x2, p2.values)
     else:
         backend = policy.resolve(layer)
-        mm = lambda x2, w2: _int_gemm(x2, w2, backend, policy)     # noqa: E731
+        mm = _guard_mm(lambda x2, w2: _int_gemm(x2, w2, backend, policy),
+                       policy, backend, layer)
     return ops.grouped_matmul(mm, x, w_or_prep)
 
 
@@ -427,6 +491,12 @@ def prepare_weights(w, policy: GemmPolicy, *, layer: str = "",
                                tol=policy.delta_tol, restrict=restrict)
     if scale is not None:
         prep = dataclasses.replace(prep, scale=scale)
+    # clean-weight checksums for the ABFT guard — attached unconditionally
+    # (cheap, and keeps the prepared pytree structure guard-independent, so
+    # the prepared-weights cache and jitted consumers never fork on `guard`)
+    from . import abft
+    prep = dataclasses.replace(
+        prep, abft=abft.meta_for(prep.values, abft.prep_derived(prep)))
     return prep
 
 

@@ -191,6 +191,12 @@ class PreparedOperand:
     presence switches ``gemm.dot`` into float mode (quantize the moving
     operand only, dequantize with ``moving_scale * scale``).
 
+    ``abft`` is the clean-weight checksum metadata (``core.abft.AbftMeta``)
+    attached by ``core.gemm.prepare_weights``: row/column sums of ``values``
+    plus a bit-level fingerprint of the derived leaves. Always attached (it
+    is cheap) so the pytree structure does not depend on ``GemmPolicy.guard``;
+    ``gemm.dot`` only *checks* it when the policy asks.
+
     Registered as a JAX pytree — arrays are children, the backend/shape-free
     metadata is static aux data — so prepared operands (and whole bound
     parameter pytrees containing them) can be jit arguments and ``lax.scan``
@@ -209,15 +215,16 @@ class PreparedOperand:
     rank: Optional[int] = None
     tol: Optional[float] = None
     scale: Optional[jnp.ndarray] = None
+    abft: Optional[object] = None
 
 
 jax.tree_util.register_pytree_node(
     PreparedOperand,
-    lambda p: ((p.values, p.delta, p.t_b, p.scale),
+    lambda p: ((p.values, p.delta, p.t_b, p.scale, p.abft),
                (p.backend, p.side, p.k, p.n_bits, p.acc_bits, p.rank, p.tol)),
     lambda aux, ch: PreparedOperand(aux[0], aux[1], aux[2], aux[3], aux[4],
                                     ch[0], ch[1], ch[2], aux[5], aux[6],
-                                    ch[3]))
+                                    ch[3], ch[4]))
 
 
 def prepare_operand(w, *, backend: str, k: int = 4, n_bits: int = 8,

@@ -34,6 +34,24 @@ of one jit'd decode step) continuously busy under ragged real-world traffic:
 regions, fused whole-prompt prefill-on-admit — the baseline the capacity
 benchmark compares against, bit-identical streams to the paged engine.
 
+**Request lifecycle hardening** (see docs/serving.md "Reliability"):
+bounded admission queue with an explicit ``rejected_queue_full`` status,
+per-request TTFT / total-latency deadlines in engine steps (deterministic —
+no wall clocks in scheduling decisions), client cancellation that frees the
+slot and its blocks immediately, and priority admission with
+preempt-and-requeue under block-pool exhaustion: a higher-priority arrival
+may evict the most-recently-admitted lower-priority slot, whose request is
+requeued and later **replayed from its prompt bit-identically** (the
+determinism contract above makes preemption invisible in the stream). A
+preempted request's effective priority is aged up by one per preemption, so
+sustained high-priority pressure cannot starve it forever. With
+``policy.guard != 'none'`` the paged engine additionally scrubs its bound
+params and KV pool between steps (bit-level fingerprints, core/abft.py),
+drains the ABFT fault ledger after every step, and recovers: params faults
+restore from the init-time pristine snapshot and re-dispatch (bounded
+retries), cache faults quarantine the pool — every active request is
+requeued and the pool reinitialized, streams again bit-identical on replay.
+
 Per-request determinism: activations are quantized per-row (`core.gemm.dot`),
 attention/caches are per-slot, MoE serving dispatch runs at full capacity,
 recurrent and ring state advances per token under a validity mask (so prompt
@@ -55,13 +73,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import abft
 from repro.core.gemm import EXACT, GemmPolicy
 from repro.models import api as model_api
+from repro.train.fault import TransientError
 from . import paged as paged_mod
 from . import sampling
 from . import steps as steps_mod
 
 PyTree = Any
+
+# Retirement status code for requests bounced by a full admission queue.
+REJECTED_QUEUE_FULL = "rejected_queue_full"
+
+# Engine default for the retirement-time BlockPool.check() invariant sweep.
+# Off in production (O(pool) asserts per retirement); the test suite turns it
+# on globally via conftest so every engine test doubles as a leak detector.
+VALIDATE_POOL_DEFAULT = False
 
 
 def _build_steps(cfg: ModelConfig, policy: GemmPolicy):
@@ -189,6 +217,15 @@ class Request:
     `arrival` is in engine *steps* (trace replay): the request becomes
     admissible once the engine has taken that many steps. `eos_id` overrides
     the engine-level EOS token for this request (None = engine default).
+
+    `priority` orders admission (higher wins; equal priorities keep exact
+    FIFO order) and qualifies the request to preempt strictly-lower-priority
+    slots when the block pool is exhausted. `ttft_deadline` /
+    `total_deadline` are budgets in engine *steps from arrival*: a request
+    that has not emitted its first token (resp. retired) within the budget
+    is retired with status ``deadline_ttft`` / ``deadline_total``.
+    `preempt_count` is engine-maintained aging state: each preemption raises
+    the request's effective priority by one, so it cannot starve.
     """
     rid: int
     prompt: np.ndarray                      # (P,) int32 prompt tokens
@@ -197,6 +234,10 @@ class Request:
     arrival: int = 0
     eos_id: Optional[int] = None
     input_embeds: Optional[np.ndarray] = None   # vlm: (S_img, d) patch embeds
+    priority: int = 0
+    ttft_deadline: Optional[int] = None
+    total_deadline: Optional[int] = None
+    preempt_count: int = 0                  # engine-maintained (aging)
 
 
 @dataclasses.dataclass
@@ -204,9 +245,12 @@ class FinishedRequest:
     rid: int
     tokens: np.ndarray                      # (n,) int32 generated tokens
     prompt_len: int                         # incl. vlm patch positions
-    admitted_step: int
+    admitted_step: int                      # -1 if never admitted
     finished_step: int
-    finish_reason: str                      # "eos" | "length"
+    finish_reason: str    # "eos" | "length" | "deadline_ttft" |
+    #                       "deadline_total" | "cancelled" |
+    #                       "rejected_queue_full"
+    preemptions: int = 0                    # times preempted before finishing
 
 
 class ServeEngine:
@@ -225,12 +269,20 @@ class ServeEngine:
                  policy: GemmPolicy = EXACT, max_slots: int = 4,
                  max_len: int = 64, eos_id: Optional[int] = None,
                  paged: bool = True, block_size: int = 8,
-                 n_blocks: Optional[int] = None, prefill_chunk: int = 8):
+                 n_blocks: Optional[int] = None, prefill_chunk: int = 8,
+                 queue_limit: Optional[int] = None,
+                 validate_pool: Optional[bool] = None,
+                 max_step_retries: int = 2, retry_backoff_s: float = 0.0):
         if cfg.family == "audio":
             raise ValueError("encoder-only arch has no decode step")
         self.cfg = cfg
         self.params = params
         self.policy = policy
+        self.queue_limit = queue_limit
+        self.validate_pool = (VALIDATE_POOL_DEFAULT if validate_pool is None
+                              else validate_pool)
+        self.max_step_retries = max_step_retries
+        self.retry_backoff_s = retry_backoff_s
         self.model = model_api.get_model(cfg)
         self.n_slots = max_slots
         self.max_len = max_len
@@ -282,6 +334,11 @@ class ServeEngine:
         self.step_count = 0
         self.decode_steps = 0
         self.peak_active = 0                 # measured, both engine modes
+        # reliability counters, surfaced through `stats` and serve.py
+        self.events = {REJECTED_QUEUE_FULL: 0, "cancelled": 0,
+                       "deadline_ttft": 0, "deadline_total": 0,
+                       "preemptions": 0, "faults_detected": 0,
+                       "step_retries": 0, "quarantines": 0}
 
         if paged:
             self._chunk, self._admit_paged_step, self._retire = cached_steps(
@@ -290,10 +347,54 @@ class ServeEngine:
             self._admit_step, self._decode, self._retire = cached_steps(cfg,
                                                                         policy)
 
+        # ABFT scrub state: pristine params reference (JAX arrays are
+        # immutable, so an injected flip *replaces* leaves on self.params and
+        # this snapshot stays clean — restore is a reference swap) plus
+        # bit-level fingerprints of params and the KV cache, re-verified
+        # before every step
+        self._guard = policy.guard != "none"
+        if self._guard:
+            self._pristine_params = params
+            self._params_fp = abft.tree_fingerprint(params)
+            self._cache_fp = abft.tree_fingerprint(self._scrub_view())
+
     # --- scheduler ----------------------------------------------------------
 
-    def submit(self, request: Request) -> None:
+    def submit(self, request: Request) -> bool:
+        """Queue a request. With `queue_limit` set, a full queue rejects it
+        immediately with status ``rejected_queue_full`` (visible in
+        `finished` and the `events` counters) instead of blocking silently.
+        Returns False iff rejected."""
+        if (self.queue_limit is not None
+                and len(self.queue) >= self.queue_limit):
+            self._finish_unstarted(request, REJECTED_QUEUE_FULL)
+            return False
         self.queue.append(request)
+        return True
+
+    def cancel(self, rid: int) -> bool:
+        """Client cancellation: retire the request now with status
+        ``cancelled``, freeing its slot and blocks immediately (queued
+        requests are simply removed). Tokens generated so far are kept in
+        the `FinishedRequest`. Returns False if `rid` is not live."""
+        for slot in np.flatnonzero(self.active):
+            req = self.slot_req[slot]
+            if req is not None and req.rid == rid:
+                self._retire_slot(slot, "cancelled")
+                return True
+        for req in self.queue:
+            if req.rid == rid:
+                self.queue.remove(req)
+                self._finish_unstarted(req, "cancelled")
+                return True
+        return False
+
+    def _finish_unstarted(self, req: Request, reason: str) -> None:
+        self.finished[req.rid] = FinishedRequest(
+            req.rid, np.zeros(0, np.int32), self._start_len(req), -1,
+            self.step_count, reason, preemptions=req.preempt_count)
+        if reason in self.events:
+            self.events[reason] += 1
 
     def _start_len(self, req: Request) -> int:
         n = len(req.prompt)
@@ -324,6 +425,8 @@ class ServeEngine:
         self.slot_admitted[slot] = self.step_count
         self.slot_prefill_off[slot] = 0
         self.slot_pos[slot] = 0
+        if self._guard:                      # admit wiped the slot's cache
+            self._cache_fp = abft.tree_fingerprint(self._scrub_view())
 
     def _admit(self, slot: int, req: Request) -> None:
         start = self._start_len(req)
@@ -343,6 +446,8 @@ class ServeEngine:
         self.slot_req[slot] = req
         self.slot_out[slot] = [int(first)]
         self.slot_admitted[slot] = self.step_count
+        if self._guard:                      # admit wrote the slot's cache
+            self._cache_fp = abft.tree_fingerprint(self._scrub_view())
         self._maybe_retire(slot)
 
     def _budget(self, req: Request) -> int:
@@ -353,48 +458,148 @@ class ServeEngine:
         return max(1, min(req.max_new_tokens,
                           self.max_len - self._start_len(req) + 1))
 
+    def _free_slot(self, slot: int) -> None:
+        """Clear a slot's device flag, host mirrors, and (paged) blocks."""
+        self.active[slot] = False
+        self.state = self._retire(self.state, slot)
+        self.slot_req[slot] = None
+        self.slot_out[slot] = []
+        if self.paged:
+            self.pool.release(slot)          # free-on-retire
+            self.slot_prefill_off[slot] = None
+            self._tables_dev = None          # force re-upload of the tables
+            if self.validate_pool:
+                self.pool.check()            # leaks surface at retire time
+
+    def _retire_slot(self, slot: int, reason: str) -> None:
+        req = self.slot_req[slot]
+        self.finished[req.rid] = FinishedRequest(
+            req.rid, np.asarray(self.slot_out[slot], np.int32),
+            self._start_len(req), int(self.slot_admitted[slot]),
+            self.step_count, reason, preemptions=req.preempt_count)
+        self._free_slot(slot)
+        if reason in self.events:
+            self.events[reason] += 1
+
     def _maybe_retire(self, slot: int) -> None:
         req = self.slot_req[slot]
         out = self.slot_out[slot]
         eos = req.eos_id if req.eos_id is not None else self.eos_id
-        reason = None
         if eos is not None and out and out[-1] == eos:
-            reason = "eos"
+            self._retire_slot(slot, "eos")
         elif len(out) >= self._budget(req):
-            reason = "length"
-        if reason:
-            self.finished[req.rid] = FinishedRequest(
-                req.rid, np.asarray(out, np.int32), self._start_len(req),
-                int(self.slot_admitted[slot]), self.step_count, reason)
-            self.active[slot] = False
-            self.state = self._retire(self.state, slot)
-            self.slot_req[slot] = None
-            self.slot_out[slot] = []
-            if self.paged:
-                self.pool.release(slot)      # free-on-retire
-                self.slot_prefill_off[slot] = None
-                self._tables_dev = None      # force re-upload of the tables
+            self._retire_slot(slot, "length")
+
+    def _preempt_slot(self, slot: int) -> Request:
+        """Evict a live request: free its slot/blocks, discard its partial
+        stream, and return it for requeueing. Replay is bit-identical to an
+        uninterrupted run (per-request determinism), so preemption is
+        invisible in the stream. Ages the request's effective priority."""
+        req = self.slot_req[slot]
+        req.preempt_count += 1               # aging: no starvation
+        self._free_slot(slot)
+        self.events["preemptions"] += 1
+        return req
+
+    def _eff_priority(self, req: Request) -> int:
+        return req.priority + req.preempt_count
+
+    def _next_candidate(self) -> Optional[int]:
+        """Queue index of the next request to admit: highest effective
+        priority among arrived requests; equal priorities keep FIFO order."""
+        best = None
+        for i, req in enumerate(self.queue):
+            if req.arrival > self.step_count:
+                continue                     # trace replay: not yet arrived
+            if (best is None or self._eff_priority(req)
+                    > self._eff_priority(self.queue[best])):
+                best = i
+        return best
+
+    def _plan_preemption(self, req: Request, need: int) -> Optional[List[int]]:
+        """Victim slots to evict so `req` can reserve `need` blocks, or None.
+
+        Only strictly-lower-effective-priority slots qualify; victims are
+        taken most-recently-admitted first (least progress lost). Pure
+        planning — no side effects until the caller commits."""
+        pri = self._eff_priority(req)
+        victims = sorted(
+            (s for s in np.flatnonzero(self.active)
+             if self._eff_priority(self.slot_req[s]) < pri),
+            key=lambda s: (-int(self.slot_admitted[s]), -s))
+        avail = self.pool.spec.n_blocks - self.pool.reserved_blocks
+        chosen: List[int] = []
+        for s in victims:
+            if avail >= need:
+                break
+            avail += int(self.pool._reserved[s])
+            chosen.append(s)
+        return chosen if avail >= need else None
+
+    def _enforce_deadlines(self) -> None:
+        """Retire every live/queued request past its step budget (budgets
+        are measured from `arrival` in engine steps — deterministic)."""
+        for slot in np.flatnonzero(self.active):
+            req = self.slot_req[slot]
+            age = self.step_count - req.arrival
+            if (req.ttft_deadline is not None and not self.slot_out[slot]
+                    and age >= req.ttft_deadline):
+                self._retire_slot(slot, "deadline_ttft")
+            elif req.total_deadline is not None and age >= req.total_deadline:
+                self._retire_slot(slot, "deadline_total")
+        if any(r.ttft_deadline is not None or r.total_deadline is not None
+               for r in self.queue):
+            keep = collections.deque()
+            for req in self.queue:
+                age = self.step_count - req.arrival
+                reason = None
+                if req.arrival <= self.step_count:
+                    if (req.ttft_deadline is not None
+                            and age >= req.ttft_deadline):
+                        reason = "deadline_ttft"
+                    elif (req.total_deadline is not None
+                          and age >= req.total_deadline):
+                        reason = "deadline_total"
+                if reason:
+                    self._finish_unstarted(req, reason)
+                else:
+                    keep.append(req)
+            self.queue = keep
 
     def _admit_ready(self) -> None:
         for slot in range(self.n_slots):
             if not self.queue:
                 return
-            if self.queue[0].arrival > self.step_count:
-                return                       # trace replay: not yet arrived
             if self.active[slot]:
                 continue
+            idx = self._next_candidate()
+            if idx is None:
+                return                       # nothing has arrived yet
+            req = self.queue[idx]
             if self.paged:
-                need = self._reserved_blocks(self.queue[0])
+                need = self._reserved_blocks(req)
                 if need > self.pool.spec.n_blocks:
                     raise ValueError(
-                        f"request {self.queue[0].rid} needs {need} blocks "
+                        f"request {req.rid} needs {need} blocks "
                         f"but the pool holds {self.pool.spec.n_blocks} — "
                         "raise n_blocks or lower max_new_tokens")
                 if not self.pool.can_reserve(need):
-                    return                   # out of blocks: FIFO backpressure
-                self._admit_paged(slot, self.queue.popleft())
+                    victims = self._plan_preemption(req, need)
+                    if victims is None:
+                        return               # out of blocks: backpressure
+                    del self.queue[idx]
+                    # evicted requests go back to the queue front (oldest
+                    # first among themselves); aging already bumped their
+                    # effective priority for the next admission pass
+                    for s in victims:
+                        self.queue.appendleft(self._preempt_slot(s))
+                    self._admit_paged(slot, req)
+                    continue
+                del self.queue[idx]
+                self._admit_paged(slot, req)
             else:
-                self._admit(slot, self.queue.popleft())
+                del self.queue[idx]
+                self._admit(slot, req)
 
     def _paged_step(self) -> None:
         """One mixed prefill+decode chunk step over all slots."""
@@ -451,12 +656,22 @@ class ServeEngine:
         if tables_dirty:
             self._tables_dev = jnp.asarray(self.pool.tables)
         self.cache = dict(self.cache, block_tables=self._tables_dev)
-        args = [self.params, jnp.asarray(tokens), self.cache, self.state,
+        args = [jnp.asarray(tokens), self.cache, self.state,
                 jnp.asarray(q_len), jnp.asarray(emit)]
         if vlm:
             args += [jnp.asarray(embeds), jnp.asarray(emask)]
-        tok, self.cache, self.state = self._chunk(*args)
+        # dispatch with recovery: params are read at call time (a retry after
+        # restore-from-pristine must not replay the poisoned leaves) and
+        # nothing below mutates scheduler state, so a retried or quarantined
+        # step cannot double-commit (pool.ensure above is idempotent)
+        dispatched = self._dispatch(lambda: self._chunk(self.params, *args))
+        if dispatched is None:               # quarantined: step consumed
+            self.step_count += 1
+            return
+        tok, self.cache, self.state = dispatched
         tok_np = np.asarray(tok)             # the one per-step device sync
+        if self._guard:
+            self._cache_fp = abft.tree_fingerprint(self._scrub_view())
         self.step_count += 1
         if len(prefilling) < len(live):
             self.decode_steps += 1
@@ -479,8 +694,132 @@ class ServeEngine:
                 self.slot_out[s].append(int(tok_np[s]))
                 self._maybe_retire(s)
 
+    # --- fault detection & recovery (policy.guard != "none") ----------------
+
+    def _scrub_view(self):
+        """The cache leaves the integrity scrub covers. `block_tables` is
+        host-authoritative (re-pushed every step) and excluded."""
+        if isinstance(self.cache, dict):
+            return {k: v for k, v in self.cache.items()
+                    if k != "block_tables"}
+        return self.cache
+
+    def _scrub(self) -> None:
+        """Bit-level integrity sweep before a step: bound params against the
+        init-time fingerprints, KV cache against the post-commit
+        fingerprints, device tables against host golden rebuilds. Raises
+        ``AbftFaultError`` naming the corrupted leaves."""
+        bad = [("params", p) for p in
+               abft.verify_fingerprint(self.params, self._params_fp)]
+        if self._cache_fp is not None:
+            bad += [("cache", p) for p in
+                    abft.verify_fingerprint(self._scrub_view(),
+                                            self._cache_fp)]
+        if bad:
+            raise abft.AbftFaultError(
+                [abft.Fault(f"{dom}:{path}", "memory", 1.0, 0.0)
+                 for dom, path in bad])
+        backends = ({self.policy.backend}
+                    | set((self.policy.overrides or {}).values()))
+        for be in sorted(backends):
+            abft.verify_tables(self.policy, be, layer="<serve>")
+
+    def _restore_known_good(self, kinds) -> None:
+        """Swap the (possibly poisoned) params back to the pristine init
+        reference; a table fault additionally clears the device table caches
+        so the next trace re-uploads from the host golden copies."""
+        self.params = self._pristine_params
+        self._params_fp = abft.tree_fingerprint(self.params)
+        if "table" in kinds:
+            from repro.core import emulate, error_delta
+            for fn in (emulate.product_table_jnp,
+                       error_delta.factor_tables_jnp):
+                # an active fault-injection patch is a plain function
+                if hasattr(fn, "cache_clear"):
+                    fn.cache_clear()
+
+    def _quarantine(self) -> None:
+        """KV corruption recovery: requeue every active request (replay from
+        the prompt is bit-identical, so the corruption never reaches a
+        stream) and rebuild the block pool and paged cache from scratch."""
+        self.events["quarantines"] += 1
+        order = sorted(np.flatnonzero(self.active),
+                       key=lambda s: (-int(self.slot_admitted[s]), -s))
+        for s in order:
+            self.queue.appendleft(self._preempt_slot(s))
+        spec = self.pool.spec
+        self.pool = paged_mod.BlockPool(spec, self.n_slots, self.max_len)
+        self.cache = self.model.init_paged_cache(
+            self.n_slots, self.max_len, spec.n_blocks, spec.block_size)
+        self._tables_dev = None
+        self._cache_fp = abft.tree_fingerprint(self._scrub_view())
+
+    def _dispatch(self, step_fn):
+        """Run one jitted step under the recovery protocol.
+
+        * ``TransientError`` (preemption notice, flaky interconnect — or the
+          fault injector) -> bounded retry with linear backoff.
+        * ABFT fault in **params / weights / tables** -> restore from the
+          pristine snapshot and re-dispatch (bounded by `max_step_retries`).
+        * ABFT fault in the **KV cache** -> quarantine: requeue all active
+          requests, rebuild pool + cache; returns None (step consumed).
+        * The contiguous engine fails fast on any ABFT fault (its fused
+          admit emits tokens inside jit, so there is no safe replay point).
+
+        Exhausted retries re-raise to the caller.
+        """
+        attempts = 0
+        while True:
+            try:
+                if self._guard:
+                    self._scrub()
+                out = step_fn()
+                if self._guard:
+                    jax.block_until_ready(out)
+                    faults = abft.drain_faults()
+                    if faults:
+                        raise abft.AbftFaultError(faults)
+                return out
+            except TransientError:
+                attempts += 1
+                self.events["step_retries"] += 1
+                if attempts > self.max_step_retries:
+                    raise
+                if self.retry_backoff_s:
+                    time.sleep(self.retry_backoff_s * attempts)
+            except abft.AbftFaultError as e:
+                self.events["faults_detected"] += len(e.faults)
+                if not self.paged:
+                    raise                    # contiguous: fail fast
+                if any(f.kind == "memory" and f.layer.startswith("cache:")
+                       for f in e.faults):
+                    self._quarantine()
+                    return None
+                attempts += 1
+                self.events["step_retries"] += 1
+                if attempts > self.max_step_retries:
+                    raise
+                self._restore_known_good({f.kind for f in e.faults})
+                if self.retry_backoff_s:
+                    time.sleep(self.retry_backoff_s * attempts)
+
     def step(self) -> None:
-        """Admit what fits, then run one batched ragged step."""
+        """Enforce deadlines, admit what fits, run one batched ragged step."""
+        # cache scrub FIRST: admission legitimately rewrites a slot's cache
+        # and refreshes the fingerprint, so corruption struck between steps
+        # must be caught before any admit can launder it into the baseline
+        if self._guard and self._cache_fp is not None:
+            bad = abft.verify_fingerprint(self._scrub_view(), self._cache_fp)
+            if bad:
+                self.events["faults_detected"] += len(bad)
+                if not self.paged:           # contiguous: fail fast
+                    raise abft.AbftFaultError(
+                        [abft.Fault(f"cache:{p}", "memory", 1.0, 0.0)
+                         for p in bad])
+                self._quarantine()
+                self.step_count += 1         # step consumed by recovery
+                return
+        self._enforce_deadlines()
         self._admit_ready()
         self.peak_active = max(self.peak_active, int(self.active.sum()))
         if not self.active.any():
@@ -489,10 +828,12 @@ class ServeEngine:
         if self.paged:
             self._paged_step()
             return
-        next_tok, self.cache, self.state = self._decode(self.params,
-                                                        self.cache,
-                                                        self.state)
+        next_tok, cache, state = self._dispatch(
+            lambda: self._decode(self.params, self.cache, self.state))
+        self.cache, self.state = cache, state
         next_np = np.asarray(next_tok)       # the one per-step device sync
+        if self._guard:
+            self._cache_fp = abft.tree_fingerprint(self._scrub_view())
         self.step_count += 1
         self.decode_steps += 1
         for slot in np.flatnonzero(self.active):
@@ -516,6 +857,7 @@ class ServeEngine:
             "steps": self.step_count, "decode_steps": self.decode_steps,
             "generated_tokens": gen, "finished": len(self.finished),
             "peak_active_slots": self.peak_active}
+        out.update(self.events)              # reliability counters
         if self.paged:
             occ = self.occ
             out.update({

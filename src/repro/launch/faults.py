@@ -1,0 +1,251 @@
+"""Deterministic, scoped fault injection for the serving stack.
+
+The robustness layer (core/abft.py + the hardened engine lifecycle) claims
+that any single bit flip in the state the GEMM path consumes — bound weight
+leaves, paged KV pool blocks, device-resident product/factor tables — is
+detected under ``GemmPolicy.guard`` and recovered from without corrupting a
+served stream. This module provides the attacker: a seeded injector whose
+every fault is a pure function of ``(seed, call order)``, so an injected
+campaign reproduces **bit-for-bit** across runs and a failure found in CI
+replays locally from its seed alone.
+
+Targets:
+
+* :meth:`FaultInjector.flip_params` — one bit of one element of one leaf of
+  a (bound or raw) parameter pytree. JAX arrays are immutable, so the flip
+  *replaces* the leaf: the caller's original pytree reference stays clean,
+  which is exactly the property the engine's restore-from-pristine recovery
+  relies on.
+* :meth:`FaultInjector.flip_cache` — one bit in a paged KV pool leaf (or any
+  cache pytree), same replace semantics.
+* :meth:`FaultInjector.poisoned_tables` — context manager that monkeypatches
+  the device-table constructors (``emulate.product_table_jnp`` — including
+  the by-name import in ``core.lut`` — and ``error_delta.factor_tables_jnp``)
+  to return a copy with one bit flipped, modelling corrupted on-chip table
+  SRAM. Scoped: the originals are always restored on exit.
+* :meth:`FaultInjector.failing_steps` — context manager that makes an
+  engine's jitted step raise ``train.fault.TransientError`` at chosen step
+  counts, exercising the bounded retry-with-backoff path.
+
+Every injection appends a :class:`FaultRecord` to ``injector.records`` — the
+campaign log a test asserts detection against.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Any, Iterator, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.fault import TransientError
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultRecord:
+    """One injected fault, fully reproducible from its fields."""
+    target: str                  # "params" | "cache" | "table" | "step"
+    path: str                    # pytree keystr / patched function name
+    index: int                   # flat element index within the leaf
+    bit: int                     # flipped bit position within the element
+    note: str = ""
+
+    def __str__(self) -> str:
+        return (f"<fault {self.target} {self.path or '(root)'}"
+                f"[{self.index}] bit {self.bit}{' ' + self.note if self.note else ''}>")
+
+
+def _bit_width(dtype) -> int:
+    return np.dtype(dtype).itemsize * 8 if np.dtype(dtype) != np.bool_ else 1
+
+
+def flip_bit(leaf, index: int, bit: int):
+    """Return a copy of ``leaf`` with one bit of one element flipped.
+
+    Works for any fixed-width dtype (floats through their bit patterns,
+    bf16/f16 through uint16 views, bools by negation). The input is never
+    mutated — JAX arrays are immutable and the host copy is fresh.
+    """
+    x = np.array(np.asarray(leaf))           # host copy, owns its memory
+    flat = x.reshape(-1)
+    index %= max(1, flat.size)
+    dt = flat.dtype
+    if dt == np.bool_:
+        flat[index] = not flat[index]
+    else:
+        view = flat.view(np.dtype(f"u{dt.itemsize}"))
+        view[index] ^= np.dtype(f"u{dt.itemsize}").type(1) << (
+            bit % _bit_width(dt))
+    return jnp.asarray(x, dtype=jnp.asarray(leaf).dtype)
+
+
+def _array_leaves(tree) -> List[Tuple[str, Any]]:
+    """(keystr, leaf) for every fixed-width array leaf, in path-sorted order
+    (the deterministic target universe — tree_flatten order is already
+    deterministic, sorting makes it robust to registration changes too)."""
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        if hasattr(leaf, "dtype") and hasattr(leaf, "ndim") and np.asarray(
+                leaf).size:
+            out.append((jax.tree_util.keystr(path), leaf))
+    out.sort(key=lambda kv: kv[0])
+    return out
+
+
+class FaultInjector:
+    """Seeded bit-flip / step-failure injector (see module docstring).
+
+    Each injection draws from one ``numpy`` Generator seeded at construction,
+    so a campaign is a deterministic function of ``(seed, sequence of calls)``.
+    """
+
+    def __init__(self, seed: int = 0):
+        self.seed = seed
+        self.rng = np.random.default_rng(seed)
+        self.records: List[FaultRecord] = []
+
+    # -- pytree targets ------------------------------------------------------
+
+    def _pick(self, leaves, path: Optional[str]):
+        if path is not None:
+            match = [kv for kv in leaves if path in kv[0]]
+            if not match:
+                raise ValueError(f"no array leaf matching {path!r}")
+            leaves = match
+        key, leaf = leaves[self.rng.integers(len(leaves))]
+        arr = np.asarray(leaf)
+        index = int(self.rng.integers(arr.size))
+        bit = int(self.rng.integers(_bit_width(arr.dtype)))
+        return key, leaf, index, bit
+
+    def _flip_tree(self, tree, target: str, path: Optional[str],
+                   note: str) -> Tuple[PyTree, FaultRecord]:
+        leaves = _array_leaves(tree)
+        key, _, index, bit = self._pick(leaves, path)
+        flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+        new_leaves = [flip_bit(leaf, index, bit)
+                      if jax.tree_util.keystr(p) == key else leaf
+                      for p, leaf in flat]
+        rec = FaultRecord(target, key, index, bit, note)
+        self.records.append(rec)
+        return jax.tree_util.tree_unflatten(treedef, new_leaves), rec
+
+    def flip_params(self, params: PyTree, *, path: Optional[str] = None
+                    ) -> Tuple[PyTree, FaultRecord]:
+        """Flip one bit in one (optionally path-filtered) parameter leaf.
+
+        Returns the poisoned pytree; the input pytree is untouched.
+        """
+        return self._flip_tree(params, "params", path, "")
+
+    def flip_cache(self, cache: PyTree, *, path: Optional[str] = None
+                   ) -> Tuple[PyTree, FaultRecord]:
+        """Flip one bit in a KV-cache leaf (paged pool block or contiguous
+        region). ``block_tables`` is host-authoritative and excluded."""
+        view = ({k: v for k, v in cache.items() if k != "block_tables"}
+                if isinstance(cache, dict) else cache)
+        poisoned, rec = self._flip_tree(view, "cache", path, "")
+        if isinstance(cache, dict) and "block_tables" in cache:
+            poisoned = dict(poisoned, block_tables=cache["block_tables"])
+        return poisoned, rec
+
+    def strike_engine(self, engine, *, target: str = "params",
+                      path: Optional[str] = None) -> FaultRecord:
+        """Inject into a live ``ServeEngine`` between steps: replaces
+        ``engine.params`` or ``engine.cache`` with a poisoned copy (the
+        engine's own pristine snapshot is untouched — JAX immutability)."""
+        if target == "params":
+            engine.params, rec = self.flip_params(engine.params, path=path)
+        elif target == "cache":
+            engine.cache, rec = self.flip_cache(engine.cache, path=path)
+        else:
+            raise ValueError(f"unknown engine target {target!r}")
+        return rec
+
+    # -- device-table targets ------------------------------------------------
+
+    @contextlib.contextmanager
+    def poisoned_tables(self, *, which: str = "product") -> Iterator[FaultRecord]:
+        """Scope in which the device table constructors return a copy with
+        one bit flipped — corrupted table SRAM. ``which`` is ``"product"``
+        (``product_table_jnp``, consumed by approx_lut/approx_onehot and the
+        lut module's by-name import) or ``"factors"``
+        (``error_delta.factor_tables_jnp``, consumed by approx_delta).
+
+        Note: jitted programs bake these tables in as compile-time constants,
+        so poisoning is visible to *newly traced* or eager calls — the model
+        for faults present at upload time, which is when ABFT's golden-copy
+        comparison (``core.abft.verify_tables``) runs.
+        """
+        from repro.core import emulate, error_delta, lut
+        index = int(self.rng.integers(1 << 16))
+        bit = int(self.rng.integers(32))
+        if which == "product":
+            real = emulate.product_table_jnp
+
+            def poisoned(*a, **k):
+                return flip_bit(real(*a, **k), index, bit)
+
+            rec = FaultRecord("table", "emulate.product_table_jnp", index,
+                              bit, which)
+            self.records.append(rec)
+            emulate.product_table_jnp = poisoned
+            lut.product_table_jnp = poisoned
+            try:
+                yield rec
+            finally:
+                emulate.product_table_jnp = real
+                lut.product_table_jnp = real
+        elif which == "factors":
+            real = error_delta.factor_tables_jnp
+
+            def poisoned(*a, **k):
+                f, g = real(*a, **k)
+                return flip_bit(f, index, bit), g
+
+            rec = FaultRecord("table", "error_delta.factor_tables_jnp",
+                              index, bit, which)
+            self.records.append(rec)
+            error_delta.factor_tables_jnp = poisoned
+            try:
+                yield rec
+            finally:
+                error_delta.factor_tables_jnp = real
+        else:
+            raise ValueError(f"unknown table {which!r}")
+
+    # -- step-level failures -------------------------------------------------
+
+    @contextlib.contextmanager
+    def failing_steps(self, engine, fail_at: Sequence[int],
+                      times: int = 1) -> Iterator[FaultRecord]:
+        """Scope in which the engine's jitted step raises ``TransientError``
+        the first ``times`` times it runs at each step count in ``fail_at``
+        — a preemption notice / flaky-interconnect stand-in the engine's
+        bounded retry must absorb. Deterministic: failures depend only on
+        ``engine.step_count``."""
+        fail_at = set(int(s) for s in fail_at)
+        budget = {s: times for s in fail_at}
+        attr = "_chunk" if engine.paged else "_decode"
+        real = getattr(engine, attr)
+
+        def flaky(*args, **kwargs):
+            if budget.get(engine.step_count, 0) > 0:
+                budget[engine.step_count] -= 1
+                raise TransientError(
+                    f"injected step failure at step {engine.step_count}")
+            return real(*args, **kwargs)
+
+        rec = FaultRecord("step", attr, 0, 0,
+                          f"fail_at={sorted(fail_at)} x{times}")
+        self.records.append(rec)
+        setattr(engine, attr, flaky)
+        try:
+            yield rec
+        finally:
+            setattr(engine, attr, real)

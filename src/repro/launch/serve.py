@@ -124,6 +124,10 @@ def main(argv=None):
     ap.add_argument("--backend", default="exact", choices=gemm.BACKENDS,
                     help="GemmPolicy backend for every model GEMM")
     ap.add_argument("--k", type=int, default=4, help="approximation factor")
+    ap.add_argument("--guard", default="none", choices=gemm.GUARDS,
+                    help="ABFT integrity checking on every GEMM: 'detect' "
+                         "flags faults (the engine restores/quarantines), "
+                         "'recompute' additionally re-executes flagged tiles")
     ap.add_argument("--bind", action="store_true",
                     help="bind params to the policy (weight-stationary decode)")
     ap.add_argument("--no-bind", dest="bind", action="store_false")
@@ -151,6 +155,16 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=8,
                     help="engine: prompt tokens admitted per chunked-prefill "
                          "step")
+    ap.add_argument("--queue-limit", type=int, default=0,
+                    help="engine: bound the admission queue — overflow is "
+                         "rejected with status 'rejected_queue_full' "
+                         "(0 = unbounded)")
+    ap.add_argument("--ttft-deadline", type=int, default=0,
+                    help="engine: retire requests that have not emitted a "
+                         "first token within N steps of arrival (0 = off)")
+    ap.add_argument("--total-deadline", type=int, default=0,
+                    help="engine: retire requests not finished within N "
+                         "steps of arrival (0 = off)")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--top-p", type=float, default=1.0)
@@ -164,7 +178,7 @@ def main(argv=None):
         cfg = reduced(cfg)
     if cfg.family == "audio":
         raise SystemExit("encoder-only arch has no decode step")
-    policy = gemm.GemmPolicy(backend=args.backend, k=args.k)
+    policy = gemm.GemmPolicy(backend=args.backend, k=args.k, guard=args.guard)
     do_bind = (args.backend != "exact") if args.bind is None else args.bind
     model = get_model(cfg)
     params = model.init_params(jax.random.PRNGKey(0))
@@ -194,9 +208,14 @@ def main(argv=None):
             kw = {"block_size": args.block_size,
                   "n_blocks": args.n_blocks or None,
                   "prefill_chunk": args.prefill_chunk}
+        if args.ttft_deadline or args.total_deadline:
+            for r in requests:
+                r.ttft_deadline = args.ttft_deadline or None
+                r.total_deadline = args.total_deadline or None
         eng = engine_mod.ServeEngine(cfg, params, policy=policy,
                                      max_slots=args.batch, max_len=max_len,
                                      eos_id=args.eos_id, paged=args.paged,
+                                     queue_limit=args.queue_limit or None,
                                      **kw)
         t0 = time.time()
         finished = eng.run(requests)
@@ -216,6 +235,13 @@ def main(argv=None):
                   f"token split {st['prefill_tokens']}/{st['decode_tokens']} "
                   f"prefill/decode "
                   f"({st['prefill_tokens'] / tok_total:.0%} prefill)")
+        rel = {k: st[k] for k in (engine_mod.REJECTED_QUEUE_FULL, "cancelled",
+                                  "deadline_ttft", "deadline_total",
+                                  "preemptions", "faults_detected",
+                                  "step_retries", "quarantines")}
+        if args.guard != "none" or any(rel.values()):
+            print("reliability: " + ", ".join(f"{k}={v}"
+                                              for k, v in rel.items()))
         for rid in sorted(finished)[:4]:
             f = finished[rid]
             print(f"  rid={rid} [{f.finish_reason}] "

@@ -1,6 +1,33 @@
 """Make the tests directory importable regardless of pytest import mode, so
-test modules can fall back to `_hypothesis_fallback` when hypothesis is absent."""
+test modules can fall back to `_hypothesis_fallback` when hypothesis is absent.
+
+Also turns on the serve engine's retirement-time BlockPool invariant sweep
+for the whole suite (off by default in production): every engine test then
+doubles as a block-leak regression test."""
 import os
 import sys
 
+import pytest
+
 sys.path.insert(0, os.path.dirname(__file__))
+
+from repro.launch import engine as _engine_mod  # noqa: E402
+
+_engine_mod.VALIDATE_POOL_DEFAULT = True
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _bounded_compile_state():
+    """Drop JAX's compiled-executable caches after each test module.
+
+    A full-suite run compiles thousands of distinct XLA programs in one
+    process; on small CI boxes the accumulated compiler state eventually
+    segfaults the CPU backend mid-compile (observed deterministically near
+    the end of the suite). Modules rarely share executables, so clearing
+    between modules bounds the accumulation for a few percent of extra
+    compile time.
+    """
+    yield
+    import jax
+
+    jax.clear_caches()

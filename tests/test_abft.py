@@ -1,0 +1,249 @@
+"""ABFT checksum guards (core/abft.py) on the GEMM path.
+
+Pins the PR-6 integrity contract:
+
+* **Zero false positives**: with ``guard='detect'`` every backend produces
+  bit-identical outputs to the unguarded run on clean data — the detection
+  thresholds are derived from the quantization/approximation bounds, so the
+  *intended* approximation error never trips the guard, eagerly or under jit.
+* **Single-bit weight faults are detected**: flipping any one bit of a
+  prepared operand's ``values`` (or of a derived leaf — delta tables, scales)
+  raises ``AbftFaultError`` naming the layer.
+* **Corrupted device tables are detected**: the golden-copy compare
+  (``verify_tables``) flags a poisoned product/factor table before results
+  are consumed.
+* **Thresholds**: exact-int backends get τ=0; approximate τ scales with the
+  contraction size and the backend's per-product error bound; everything is
+  capped below int32-wraparound soundness.
+* ``guard='recompute'`` is the identity on clean data.
+
+The ``faultinject`` campaign (scheduled CI job, also in the slow tier) sweeps
+seeded random flips across every backend and asserts 100% detection.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import abft, gemm
+from repro.launch import faults as F
+
+INT_BACKENDS = ("exact", "mxu_int8", "approx_lut", "approx_oracle",
+                "approx_onehot", "approx_delta")
+PREP_BACKENDS = tuple(b for b in INT_BACKENDS if b != "exact")
+
+
+def _pol(backend, guard="detect", k=4):
+    return gemm.GemmPolicy(backend=backend, k=k, guard=guard)
+
+
+def _int_ops(m=6, kd=16, n=8, seed=0):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.integers(-128, 128, (m, kd)), jnp.int32)
+    b = jnp.asarray(rng.integers(-128, 128, (kd, n)), jnp.int32)
+    return a, b
+
+
+def _float_ops(m=5, kd=16, n=7, seed=0):
+    rng = np.random.default_rng(seed)
+    a = jnp.asarray(rng.normal(size=(m, kd)), jnp.float32)
+    b = jnp.asarray(rng.normal(size=(kd, n)), jnp.float32)
+    return a, b
+
+
+# --- clean data: zero false positives, bit-identical outputs -----------------
+
+@pytest.mark.parametrize("backend", INT_BACKENDS)
+def test_clean_int_no_false_positive(backend):
+    a, b = _int_ops()
+    want = gemm.dot(a, b, _pol(backend, "none"))
+    for guard in ("detect", "recompute"):
+        got = gemm.dot(a, b, _pol(backend, guard))  # must not raise
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert abft.drain_faults() == []
+
+
+@pytest.mark.parametrize("backend", INT_BACKENDS)
+def test_clean_prepared_no_false_positive(backend):
+    a, b = _int_ops(seed=1)
+    pol = _pol(backend, "detect")
+    prep = gemm.prepare_weights(b, pol, layer="t")
+    want = gemm.dot(a, b, _pol(backend, "none"))
+    np.testing.assert_array_equal(np.asarray(gemm.dot(a, prep, pol)),
+                                  np.asarray(want))
+    assert abft.drain_faults() == []
+
+
+@pytest.mark.parametrize("backend", PREP_BACKENDS)
+def test_clean_float_bound_no_false_positive(backend):
+    """The serving path: float activations against a policy-bound weight."""
+    a, b = _float_ops()
+    pol = _pol(backend, "detect")
+    prep = gemm.prepare_weights(b, pol, layer="t")
+    want = gemm.dot(a, gemm.prepare_weights(b, _pol(backend, "none"),
+                                            layer="t"), _pol(backend, "none"))
+    np.testing.assert_array_equal(np.asarray(gemm.dot(a, prep, pol)),
+                                  np.asarray(want))
+    assert abft.drain_faults() == []
+
+
+def test_clean_float_exact_unprepared_no_false_positive():
+    a, b = _float_ops(seed=3)
+    pol = _pol("exact", "detect")
+    want = gemm.dot(a, b, gemm.EXACT)
+    np.testing.assert_array_equal(np.asarray(gemm.dot(a, b, pol)),
+                                  np.asarray(want))
+    assert abft.drain_faults() == []
+
+
+@pytest.mark.parametrize("backend", ("approx_lut", "approx_delta"))
+def test_clean_jit_no_false_positive(backend):
+    """Under jit the guard records to the ledger instead of raising — clean
+    data must leave the ledger empty after the effects barrier."""
+    a, b = _int_ops(seed=2)
+    pol = _pol(backend, "detect")
+    prep = gemm.prepare_weights(b, pol, layer="t")
+    out = jax.jit(lambda x: gemm.dot(x, prep, pol))(a)
+    jax.block_until_ready(out)
+    assert abft.drain_faults() == []
+
+
+# --- single-bit faults are detected ------------------------------------------
+
+@pytest.mark.parametrize("backend", PREP_BACKENDS)
+def test_weight_values_flip_detected(backend):
+    a, b = _int_ops(seed=4)
+    pol = _pol(backend, "detect")
+    prep = gemm.prepare_weights(b, pol, layer="blk0.w")
+    bad = dataclasses.replace(prep, values=F.flip_bit(prep.values, 17, 3))
+    with pytest.raises(abft.AbftFaultError) as ei:
+        gemm.dot(a, bad, pol, layer="blk0.w")
+    assert "blk0.w" in str(ei.value)       # the fault names its layer
+
+
+@pytest.mark.parametrize("backend", ("approx_onehot", "approx_delta"))
+def test_derived_leaf_flip_detected(backend):
+    """A flip in a *derived* prepared leaf (not `values`) trips the aux
+    bitcast fingerprint even though the row/col checksums cannot see it."""
+    a, b = _int_ops(seed=5)
+    pol = _pol(backend, "detect")
+    prep = gemm.prepare_weights(b, pol, layer="blk1.w")
+    if backend == "approx_onehot":
+        assert prep.t_b is not None
+        bad = dataclasses.replace(prep, t_b=F.flip_bit(prep.t_b, 5, 1))
+    else:
+        d = prep.delta
+        assert d is not None
+        bad = dataclasses.replace(
+            prep, delta=dataclasses.replace(
+                d, gather_tab=F.flip_bit(d.gather_tab, 9, 2)))
+    with pytest.raises(abft.AbftFaultError):
+        gemm.dot(a, bad, pol)
+
+
+def test_float_scale_flip_detected():
+    """Quantization scales ride the aux fingerprint on the float path."""
+    a, b = _float_ops(seed=6)
+    pol = _pol("approx_lut", "detect")
+    prep = gemm.prepare_weights(b, pol, layer="blk2.w")
+    assert prep.scale is not None
+    bad = dataclasses.replace(prep, scale=F.flip_bit(prep.scale, 0, 30))
+    with pytest.raises(abft.AbftFaultError):
+        gemm.dot(a, bad, pol)
+
+
+def test_jit_fault_lands_in_ledger():
+    a, b = _int_ops(seed=7)
+    pol = _pol("approx_lut", "detect")
+    prep = gemm.prepare_weights(b, pol, layer="jit.w")
+    bad = dataclasses.replace(prep, values=F.flip_bit(prep.values, 3, 6))
+    out = jax.jit(lambda x: gemm.dot(x, bad, pol, layer="jit.w"))(a)
+    jax.block_until_ready(out)
+    faults = abft.drain_faults()
+    assert faults and any("jit.w" in f.layer for f in faults)
+    assert abft.drain_faults() == []        # drained
+
+
+@pytest.mark.parametrize("which,backend", [("product", "approx_lut"),
+                                           ("factors", "approx_delta")])
+def test_poisoned_table_detected(which, backend):
+    a, b = _int_ops(seed=8)
+    pol = _pol(backend, "detect")
+    inj = F.FaultInjector(3)
+    with inj.poisoned_tables(which=which):
+        with pytest.raises(abft.AbftFaultError):
+            gemm.dot(a, b, pol)
+    gemm.dot(a, b, pol)                     # scope restored: clean again
+    assert abft.drain_faults() == []
+
+
+# --- thresholds ---------------------------------------------------------------
+
+def test_thresholds_exact_backends_are_zero():
+    for be in ("exact", "mxu_int8"):
+        assert abft.int_thresholds(_pol(be), be, (4, 16), (16, 8)) == (0, 0)
+
+
+def test_thresholds_scale_with_contraction_and_cap():
+    pol = _pol("approx_lut")
+    r1, c1 = abft.int_thresholds(pol, "approx_lut", (4, 16), (16, 8))
+    r2, c2 = abft.int_thresholds(pol, "approx_lut", (4, 32), (32, 8))
+    assert 0 < r1 < r2 and 0 < c1 <= c2
+    cap = abft.int_thresholds(pol, "approx_lut", (1 << 20, 1 << 20),
+                              (1 << 20, 1 << 20))
+    assert cap == (1 << 30, 1 << 30)        # int32-wraparound soundness cap
+
+
+def test_threshold_oracle_covers_fused_chain():
+    """approx_oracle's fused MAC chain runs accumulator bits through the
+    approximate columns, so its bound must dominate the LUT model's."""
+    shapes = ((4, 16), (16, 8))
+    r_lut, _ = abft.int_thresholds(_pol("approx_lut"), "approx_lut", *shapes)
+    r_orc, _ = abft.int_thresholds(_pol("approx_oracle"), "approx_oracle",
+                                   *shapes)
+    assert r_orc >= r_lut
+
+
+def test_guard_validation():
+    with pytest.raises(ValueError):
+        gemm.as_policy(gemm.GemmPolicy(backend="exact", guard="bogus"))
+
+
+# --- fault-injection campaign (scheduled CI job) ------------------------------
+
+@pytest.mark.faultinject
+@pytest.mark.slow
+@pytest.mark.parametrize("backend", PREP_BACKENDS)
+def test_campaign_random_weight_flips_all_detected(backend):
+    """Seeded sweep: every random single-bit flip in a prepared operand's
+    leaves is detected; interleaved clean runs never false-positive."""
+    a, b = _int_ops(m=8, kd=24, n=8, seed=9)
+    pol = _pol(backend, "detect")
+    prep = gemm.prepare_weights(b, pol, layer=f"campaign.{backend}")
+    clean = np.asarray(gemm.dot(a, prep, pol))
+    rng = np.random.default_rng(42)
+    flat, treedef = jax.tree_util.tree_flatten(prep)
+    sized = [i for i, lf in enumerate(flat) if np.asarray(lf).size]
+    detected = 0
+    for trial in range(24):
+        # flip one bit of one array leaf of the whole prepared pytree —
+        # values, delta factors, onehot tables, scales, and the checksum
+        # metadata itself are all fair game
+        li = sized[int(rng.integers(len(sized)))]
+        leaf = flat[li]
+        idx = int(rng.integers(np.asarray(leaf).size))
+        bit = int(rng.integers(np.asarray(leaf).dtype.itemsize * 8))
+        bad_flat = list(flat)
+        bad_flat[li] = F.flip_bit(leaf, idx, bit)
+        bad = jax.tree_util.tree_unflatten(treedef, bad_flat)
+        try:
+            gemm.dot(a, bad, pol)
+        except abft.AbftFaultError:
+            detected += 1
+        # clean run in between must stay silent and bit-identical
+        np.testing.assert_array_equal(np.asarray(gemm.dot(a, prep, pol)),
+                                      clean)
+    assert detected == 24, f"{backend}: only {detected}/24 flips detected"
+    assert abft.drain_faults() == []

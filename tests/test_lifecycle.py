@@ -1,0 +1,303 @@
+"""Serve-engine lifecycle hardening: deadlines, cancellation, bounded queue,
+priority preemption, and ABFT fault recovery (PR 6).
+
+Contracts pinned here:
+
+* **Clean guard parity**: ``guard='detect'`` serves bit-identical streams to
+  the unguarded engine with zero fault events — scrubbing and output
+  checksums never perturb or false-positive on healthy runs.
+* **Recovery**: an injected bit flip in the bound params is detected by the
+  pre-step scrub and healed by restore-from-pristine + re-dispatch; a flip
+  in the paged KV pool quarantines (requeue + pool rebuild). Both recover
+  **bit-identical** final streams.
+* **Lifecycle**: TTFT/total deadlines retire in engine steps (deterministic),
+  cancellation frees slots/blocks immediately, a bounded queue rejects with
+  ``rejected_queue_full``, and a higher-priority arrival preempts
+  lower-priority slots under block-pool exhaustion — the preempted request
+  replays bit-identically and is aged so it cannot starve.
+* **Allocator invariants**: `conftest` turns retirement-time
+  ``BlockPool.check()`` on for the whole suite, so every run here doubles as
+  a block-leak regression test; the property tests additionally drain random
+  interleavings of submit/cancel/preempt and assert the pool empties.
+"""
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fallback, see _hypothesis_fallback.py
+    from _hypothesis_fallback import given, settings, strategies as st
+
+import jax
+
+from repro.configs import ARCHS, reduced
+from repro.core import abft, gemm
+from repro.launch import engine as E
+from repro.launch import faults as F
+from repro.models import get_model
+from repro.train.fault import TransientError
+
+CFG = reduced(ARCHS["smollm-360m"])
+PARAMS = get_model(CFG).init_params(jax.random.PRNGKey(0))
+LENS = ((5, 4), (8, 6), (3, 5), (6, 3))
+DETECT = gemm.GemmPolicy(backend="approx_lut", k=4, guard="detect")
+UNGUARDED = gemm.GemmPolicy(backend="approx_lut", k=4)
+
+
+def mkreqs(**kw):
+    rng = np.random.default_rng(0)
+    return [E.Request(rid=i, prompt=rng.integers(
+                0, CFG.vocab_size, pl).astype(np.int32),
+                      max_new_tokens=gl, **kw)
+            for i, (pl, gl) in enumerate(LENS)]
+
+
+def mkengine(policy=gemm.EXACT, **kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_len", 16)
+    return E.ServeEngine(CFG, PARAMS, policy=policy, **kw)
+
+
+_BASE_CACHE = {}
+
+
+def _base_exact():
+    """Lazy per-request exact reference streams for the property tests
+    (hypothesis-decorated tests cannot take fixtures through the
+    deterministic fallback)."""
+    if not _BASE_CACHE:
+        _BASE_CACHE.update({rid: f.tokens for rid, f in
+                            mkengine(gemm.EXACT).run(mkreqs()).items()})
+    return _BASE_CACHE
+
+
+@pytest.fixture(scope="module")
+def base():
+    """Per-request reference streams from an unguarded clean run."""
+    return {p: {rid: f.tokens for rid, f in
+                mkengine(p).run(mkreqs()).items()}
+            for p in (gemm.EXACT, UNGUARDED)}
+
+
+def _assert_streams(finished, ref):
+    for rid, tokens in ref.items():
+        np.testing.assert_array_equal(finished[rid].tokens, tokens,
+                                      err_msg=f"rid={rid} stream diverged")
+
+
+# --- clean guard parity -------------------------------------------------------
+
+def test_guard_detect_clean_parity(base):
+    eng = mkengine(DETECT)
+    _assert_streams(eng.run(mkreqs()), base[UNGUARDED])
+    assert eng.events["faults_detected"] == 0
+    assert eng.events["quarantines"] == 0
+    st_ = eng.stats
+    assert st_["faults_detected"] == 0       # counters surfaced via stats
+
+
+# --- fault recovery -----------------------------------------------------------
+
+def _strike_at(eng, inj, step, target):
+    orig = eng.step
+
+    def step_fn():
+        if eng.step_count == step:
+            inj.strike_engine(eng, target=target)
+        orig()
+
+    eng.step = step_fn
+
+
+def test_params_fault_restores_and_replays(base):
+    inj = F.FaultInjector(7)
+    eng = mkengine(DETECT)
+    _strike_at(eng, inj, 3, "params")
+    fin = eng.run(mkreqs())
+    assert eng.events["faults_detected"] >= 1
+    assert eng.events["quarantines"] == 0
+    _assert_streams(fin, base[UNGUARDED])    # recovery is bit-invisible
+    assert len(inj.records) == 1             # campaign log replays from seed
+
+
+def test_cache_fault_quarantines_and_replays(base):
+    inj = F.FaultInjector(11)
+    eng = mkengine(DETECT)
+    _strike_at(eng, inj, 4, "cache")
+    fin = eng.run(mkreqs())
+    assert eng.events["quarantines"] >= 1
+    assert eng.events["preemptions"] >= 1    # actives were requeued
+    _assert_streams(fin, base[UNGUARDED])
+    eng.pool.check()
+
+
+def test_injector_is_deterministic():
+    r1 = F.FaultInjector(5).flip_params(PARAMS)[1]
+    r2 = F.FaultInjector(5).flip_params(PARAMS)[1]
+    assert r1 == r2
+    assert F.FaultInjector(6).flip_params(PARAMS)[1] != r1
+
+
+def test_transient_steps_retried(base):
+    inj = F.FaultInjector(13)
+    eng = mkengine(gemm.EXACT)
+    with inj.failing_steps(eng, [2, 5]):
+        fin = eng.run(mkreqs())
+    assert eng.events["step_retries"] == 2
+    _assert_streams(fin, base[gemm.EXACT])
+
+
+def test_transient_retries_are_bounded():
+    inj = F.FaultInjector(13)
+    eng = mkengine(gemm.EXACT, max_step_retries=2)
+    with inj.failing_steps(eng, [1], times=5):
+        with pytest.raises(TransientError):
+            eng.run(mkreqs())
+    assert eng.events["step_retries"] == 3   # initial try + 2 retries failed
+
+
+def test_contiguous_engine_fails_fast():
+    inj = F.FaultInjector(17)
+    eng = mkengine(DETECT, paged=False)
+    _strike_at(eng, inj, 3, "params")
+    with pytest.raises(abft.AbftFaultError):
+        eng.run(mkreqs())
+
+
+# --- bounded queue / cancellation / deadlines ---------------------------------
+
+def test_queue_limit_rejects(base):
+    eng = mkengine(queue_limit=2)
+    oks = [eng.submit(r) for r in mkreqs()]
+    assert oks == [True, True, False, False]
+    while eng.queue or eng.active.any():
+        eng.step()
+    assert eng.events[E.REJECTED_QUEUE_FULL] == 2
+    assert eng.finished[2].finish_reason == E.REJECTED_QUEUE_FULL
+    assert eng.finished[2].admitted_step == -1
+    np.testing.assert_array_equal(eng.finished[0].tokens,
+                                  base[gemm.EXACT][0])
+
+
+def test_cancel_frees_slot_and_blocks(base):
+    eng = mkengine(max_slots=1)
+    for r in mkreqs():
+        eng.submit(r)
+    eng.step(); eng.step()
+    assert eng.cancel(0)                     # active: slot + blocks freed now
+    assert eng.pool.allocated_blocks == 0
+    assert eng.cancel(2)                     # still queued
+    assert not eng.cancel(99)                # unknown rid
+    while eng.queue or eng.active.any():
+        eng.step()
+    assert eng.finished[0].finish_reason == "cancelled"
+    assert eng.finished[2].finish_reason == "cancelled"
+    assert eng.events["cancelled"] == 2
+    np.testing.assert_array_equal(eng.finished[1].tokens,
+                                  base[gemm.EXACT][1])
+    eng.pool.check()
+
+
+def test_deadlines_retire_in_engine_steps():
+    reqs = mkreqs()
+    reqs[2].ttft_deadline = 0                # expires before first admission
+    reqs[1].total_deadline = 3
+    eng = mkengine()
+    fin = eng.run(reqs)
+    assert fin[2].finish_reason == "deadline_ttft" and fin[2].tokens.size == 0
+    assert fin[1].finish_reason == "deadline_total"
+    assert fin[0].finish_reason in ("eos", "length")
+    assert eng.events["deadline_ttft"] == 1
+    assert eng.events["deadline_total"] == 1
+
+
+# --- priority preemption ------------------------------------------------------
+
+def _tight_engine(**kw):
+    # 3 slots over a 3-block pool: block exhaustion, not slot exhaustion,
+    # is the bottleneck — the preemption trigger
+    return mkengine(max_slots=3, n_blocks=3, block_size=8, **kw)
+
+
+def test_priority_preempts_and_replays_bit_identical(base):
+    reqs = mkreqs()
+    reqs[3].priority = 5
+    reqs[3].arrival = 2
+    eng = _tight_engine()
+    fin = eng.run(reqs)
+    assert eng.events["preemptions"] >= 1
+    assert any(f.preemptions for f in fin.values())
+    _assert_streams(fin, base[gemm.EXACT])   # preemption invisible in streams
+    eng.pool.check()
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 3), st.integers(0, 3), st.integers(0, 3),
+       st.integers(0, 3), st.integers(0, 6))
+def test_property_no_starvation_and_replay(p0, p1, p2, p3, arr):
+    """Random priorities + a late arrival over an exhausted pool: every
+    request still finishes (aging beats starvation) with its reference
+    stream, and the pool drains clean."""
+    ref = _base_exact()
+    reqs = mkreqs()
+    for r, p in zip(reqs, (p0, p1, p2, p3)):
+        r.priority = p
+    reqs[3].arrival = arr
+    eng = _tight_engine()
+    fin = eng.run(reqs, max_steps=500)
+    assert len(fin) == len(reqs), "a request starved"
+    _assert_streams(fin, ref)
+    assert not eng.active.any() and eng.pool.allocated_blocks == 0
+    assert eng.pool.reserved_blocks == 0
+    eng.pool.check()
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(0, 3), st.integers(1, 4), st.integers(0, 30))
+def test_property_cancel_interleaving_never_leaks(cancel_rid, cancel_at,
+                                                  extra_seed):
+    """Cancel a random request at a random step mid-flight: the pool must
+    drain to zero and every survivor must keep its reference stream."""
+    reqs = mkreqs()
+    rng = np.random.default_rng(extra_seed)
+    for r in reqs:
+        r.priority = int(rng.integers(0, 3))
+    eng = _tight_engine()
+    for r in reqs:
+        eng.submit(r)
+    for _ in range(cancel_at):
+        eng.step()
+    eng.cancel(cancel_rid)
+    steps = 0
+    while (eng.queue or eng.active.any()) and steps < 500:
+        eng.step()
+        steps += 1
+    assert len(eng.finished) == len(reqs)
+    assert eng.pool.allocated_blocks == 0 and eng.pool.reserved_blocks == 0
+    eng.pool.check()
+    for rid, tokens in _base_exact().items():
+        if rid == cancel_rid:
+            continue
+        np.testing.assert_array_equal(eng.finished[rid].tokens, tokens,
+                                      err_msg=f"rid={rid} diverged")
+
+
+
+
+# --- scheduled fault campaign -------------------------------------------------
+
+@pytest.mark.faultinject
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", range(4))
+def test_campaign_engine_strikes_recover(seed, base):
+    """Seeded sweep: params/cache strikes at random steps, all detected and
+    healed with bit-identical streams; the campaign log replays from seed."""
+    rng = np.random.default_rng(seed)
+    inj = F.FaultInjector(seed)
+    target = ("params", "cache")[int(rng.integers(2))]
+    eng = mkengine(DETECT)
+    _strike_at(eng, inj, int(rng.integers(1, 8)), target)
+    fin = eng.run(mkreqs())
+    assert eng.events["faults_detected"] + eng.events["quarantines"] >= 1
+    _assert_streams(fin, base[UNGUARDED])
+    eng.pool.check()
