@@ -37,20 +37,52 @@ def row_key(row: dict) -> tuple:
             row.get("bound", False))
 
 
+# Baseline values below this are unusable as a ratio denominator: a relative
+# metric (speedup, concurrency ratio) is O(1) by construction, so a ~0 means
+# the baseline row is degenerate (empty run, placeholder), not a real number.
+EPS = 1e-9
+
+
+def _numeric(val) -> bool:
+    return isinstance(val, (int, float)) and not isinstance(val, bool)
+
+
 def compare(new: dict, base: dict, max_drop: float) -> int:
     base_rows = {row_key(r): r for r in base.get("results", [])}
     failures = []
+    skips = 0
     for row in new.get("results", []):
         ref = base_rows.get(row_key(row))
         if ref is None:
             print(f"new cell (no baseline): {row_key(row)}")
             continue
         for key in INFO_KEYS:
-            if key in row and key in ref and ref[key]:
+            if key in row and key in ref and _numeric(row[key]) \
+                    and _numeric(ref[key]) and abs(ref[key]) > EPS:
                 print(f"info {row_key(row)} {key}: {ref[key]} -> {row[key]} "
                       f"({row[key] / ref[key]:.2f}x, not gated)")
         for key in GATED_KEYS:
-            if key not in row or key not in ref or not ref[key]:
+            in_new, in_ref = key in row, key in ref
+            if not in_new and not in_ref:
+                continue                       # cell doesn't carry this metric
+            if not in_ref:
+                # older baseline predates this metric — report, don't gate
+                print(f"skip {row_key(row)} {key}: missing from baseline "
+                      f"(new={row[key]!r})")
+                skips += 1
+                continue
+            if not in_new:
+                # the metric vanished from the new run: loud, but non-fatal
+                # (renamed/retired metrics shouldn't brick the gate)
+                print(f"WARN {row_key(row)} {key}: in baseline "
+                      f"({ref[key]!r}) but missing from new run")
+                skips += 1
+                continue
+            if not _numeric(ref[key]) or not _numeric(row[key]) \
+                    or abs(ref[key]) <= EPS:
+                print(f"skip {row_key(row)} {key}: unusable baseline value "
+                      f"{ref[key]!r} (new={row[key]!r})")
+                skips += 1
                 continue
             ratio = row[key] / ref[key]
             status = "FAIL" if ratio < 1.0 - max_drop else "ok"
@@ -62,7 +94,8 @@ def compare(new: dict, base: dict, max_drop: float) -> int:
         print(f"\n{len(failures)} relative metric(s) dropped more than "
               f"{max_drop:.0%} vs the committed baseline")
         return 1
-    print("\nall matched relative metrics within tolerance")
+    tail = f" ({skips} skipped, see above)" if skips else ""
+    print(f"\nall matched relative metrics within tolerance{tail}")
     return 0
 
 

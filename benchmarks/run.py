@@ -427,9 +427,10 @@ def serve_engine_bench(fast: bool = False):
                 done += len(group) * gl
             return done
 
-        def run_engine():
+        def run_engine(paged_kernel=None):
             eng = engine_mod.ServeEngine(cfg, p, policy=pol, max_slots=slots,
-                                         max_len=max_len)
+                                         max_len=max_len,
+                                         paged_kernel=paged_kernel)
             eng.run(list(trace))
             return eng.stats
 
@@ -467,6 +468,33 @@ def serve_engine_bench(fast: bool = False):
               f"engine={row['engine_tok_per_s']}tok/s "
               f"lockstep={row['lockstep_tok_per_s']}tok/s "
               f"bind={bind_s:.2f}s")
+
+        # --- paged_kernel cell: fused in-kernel-table-walk attention --------
+        # Same trace, same lockstep baseline; the engine swaps the per-layer
+        # gather + wide chunked_attention for kernels.paged_attention
+        # (n_splits=1, the bit-exact serving contract). `speedup` is gated by
+        # benchmarks/compare.py exactly like the gather row's.
+        run_engine(1)                                   # warm compile caches
+        pk_s, st_pk = np.inf, None
+        for _ in range(reps):
+            st_i, dt = engine_mod.elapsed(lambda: run_engine(1))
+            if dt < pk_s:
+                pk_s, st_pk = dt, st_i
+        assert st_pk["generated_tokens"] == useful, (st_pk, useful)
+        row_pk = {"cell": "paged_kernel",
+                  "backend": backend, "bound": bind, "slots": slots,
+                  "requests": n_req, "useful_tokens": useful, "n_splits": 1,
+                  "engine_tok_per_s": round(useful / pk_s, 1),
+                  "gather_engine_tok_per_s": round(useful / eng_s, 1),
+                  "lockstep_tok_per_s": round(useful / lock_s, 1),
+                  "engine_decode_steps": st_pk["decode_steps"],
+                  "speedup": round(lock_s / pk_s, 2),
+                  "speedup_vs_gather": round(eng_s / pk_s, 2)}
+        results.append(row_pk)
+        print(f"serve_paged_kernel_{backend}{'_bound' if bind else ''},"
+              f"{pk_s / useful * 1e6:.0f},speedup={row_pk['speedup']}x "
+              f"(vs gather engine {row_pk['speedup_vs_gather']}x) "
+              f"engine={row_pk['engine_tok_per_s']}tok/s")
 
     # --- capacity cell: concurrent requests at one fixed KV budget ----------
     cap_len, cap_bs, cap_slots_c = 32, 4, 4

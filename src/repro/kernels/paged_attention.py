@@ -1,0 +1,258 @@
+"""Paged flash-attention / flash-decoding as a Pallas TPU kernel (forward).
+
+The gather path in `models.layers.chunked_attention` reconstructs a
+contiguous KV layout in HBM before the flash scan: each KV chunk does a
+`jnp.take` through the block table, materializing chunk-sized K/V copies the
+scan immediately consumes. This kernel removes the round trip — the block
+table rides in as a *scalar-prefetch* operand (`pltpu.PrefetchScalarGridSpec`)
+so the KV inner loop DMAs pool blocks straight into VMEM through the table:
+storage stays paged end to end, exactly the operand-resident dataflow the
+paper's systolic PEs are built around.
+
+Two schedules share one kernel body:
+
+* ``n_splits=1`` (default) — one grid cell owns a (batch row, Q chunk) pair
+  (every KV head of the row is batched inside the cell — fewer grid cells,
+  wider dots) and scans every KV chunk sequentially. The math mirrors
+  `chunked_attention`'s ``kv_body`` operation for operation (same chunk grid,
+  same masking, same online-softmax update, same reduction order), so the
+  output is **bit-identical** to the gather path — and therefore to solo
+  lockstep decode — on every backend. This is the serving configuration.
+* ``n_splits>1`` — flash-decoding: the KV chunk range is split across grid
+  cells that each produce a partial softmax ``(acc, m, l)``; partials are
+  combined outside the kernel with the standard log-sum-exp merge. The
+  combine reassociates the softmax sums, so parity with the sequential scan
+  is up to float rounding (~1e-6), not bitwise — long-context throughput at
+  the cost of the strict determinism contract.
+
+Unlike the gather path (a fixed-trip `lax.scan` over every table chunk), the
+KV loop bound here is *dynamic per batch row*: chunks past
+``ceil(kv_valid_len / chunk)`` (and, causally, past the row's last query
+position) are never visited. Skipped chunks are fully masked in the
+reference — an exact bitwise no-op (``corr = exp(0)``, ``p = exp(-inf)``) —
+so early exit is free, and decode work scales with each slot's *live* length
+instead of the table width. Rows with ``kv_valid_len == 0`` return zeros
+(the reference emits a masked-garbage mean over V; no caller reads either).
+
+Pool payloads may be int8 (`layers.cache_store`): blocks are dequantized
+in-kernel after the load, so no full-pool dequant copy is ever materialized.
+
+Written for Mosaic; validated in interpret mode against the gather path
+(tests/test_paged.py) like the other kernels in this package.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BIG_NEG = -2.3819763e38  # min bf16 (matches layers.BIG_NEG)
+
+
+def _kernel(tables_ref, kvlen_ref, qpos_ref, win_ref,      # scalar prefetch
+            q_ref, k_ref, v_ref, *out_refs,
+            kh: int, g: int, qc: int, chunk: int, blk_sz: int, nk: int,
+            n_splits: int, causal: bool, softcap: float, int8_scale: float,
+            quant: bool):
+    b = pl.program_id(0)
+    qi = pl.program_id(1)
+    si = pl.program_id(2)
+    nbpc = chunk // blk_sz
+    d = q_ref.shape[-1]
+
+    q = q_ref[0, 0].astype(jnp.float32)                     # (KH, G, qc, D)
+    kvl = kvlen_ref[b]
+    win = win_ref[0]
+    window_eff = jnp.where(win > 0, win,
+                           jnp.iinfo(jnp.int32).max).astype(jnp.int32)
+
+    def gather(ref, ci):
+        # in-kernel table walk: one pool-block DMA per table entry — the
+        # chunk's contiguous layout is assembled in VMEM, never in HBM
+        parts = []
+        for j in range(nbpc):
+            blk = tables_ref[b, ci * nbpc + j]
+            pj = pl.load(ref, (pl.dslice(blk, 1), slice(None),
+                               slice(None), slice(None)))
+            parts.append(pj.reshape(blk_sz, kh, d))
+        blk_v = parts[0] if nbpc == 1 else jnp.concatenate(parts, axis=0)
+        blk_f = blk_v.astype(jnp.float32).swapaxes(0, 1)    # (KH, chunk, D)
+        return blk_f / int8_scale if quant else blk_f
+
+    def body(ci, state):
+        acc, m, l = state
+        k_blk = gather(k_ref, ci)
+        v_blk = gather(v_ref, ci)
+        # (KH, G*qc, D) x (KH, chunk, D), batched over the head dim: the
+        # per-(b, kh) contraction is bit-identical to the reference batched
+        # einsum (tests pin this)
+        s = jax.lax.dot_general(q.reshape(kh, g * qc, d), k_blk,
+                                (((2,), (2,)), ((0,), (0,))),
+                                preferred_element_type=jnp.float32)
+        s = s.reshape(kh, g, qc, chunk)
+        if softcap > 0:
+            s = softcap * jnp.tanh(s / softcap)
+        kpos = ci * chunk + jax.lax.broadcasted_iota(jnp.int32, (qc, chunk), 1)
+        valid = kpos < kvl
+        if causal:
+            qp = pl.load(qpos_ref, (b, pl.dslice(qi * qc, qc)))
+            delta = qp[:, None] - kpos
+            valid = valid & (delta >= 0) & (delta < window_eff)
+        s = jnp.where(valid[None, None], s, BIG_NEG)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] + jax.lax.dot_general(
+            p.reshape(kh, g * qc, chunk), v_blk,
+            (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32).reshape(kh, g, qc, d)
+        return acc_new, m_new, l_new
+
+    init = (jnp.zeros((kh, g, qc, d), jnp.float32),
+            jnp.full((kh, g, qc), BIG_NEG, jnp.float32),
+            jnp.zeros((kh, g, qc), jnp.float32))
+    cps = -(-nk // n_splits)                     # chunks per split
+    lo = si * cps
+    hi = jnp.minimum(lo + cps, nk)
+    # dynamic per-row early exit: chunks past the live KV length (and, for
+    # causal attention, past the block's last query position) are exact
+    # bitwise no-ops in the reference scan — skip them
+    hi = jnp.minimum(hi, (kvl + chunk - 1) // chunk)
+    if causal:
+        qp_all = pl.load(qpos_ref, (b, pl.dslice(qi * qc, qc)))
+        hi = jnp.minimum(hi, (jnp.max(qp_all) + chunk) // chunk)
+    acc, m, l = jax.lax.fori_loop(lo, hi, body, init)
+
+    if n_splits == 1:
+        o_ref, = out_refs
+        o_ref[0, 0] = (acc / jnp.maximum(l, 1e-30)[..., None]
+                       ).astype(o_ref.dtype)
+    else:
+        acc_ref, m_ref, l_ref = out_refs
+        acc_ref[0, 0, 0] = acc
+        m_ref[0, 0, 0] = m
+        l_ref[0, 0, 0] = l
+
+
+def paged_attention(q, k_pool, v_pool, block_tables, kv_valid_len,
+                    q_positions, *, causal: bool = True, window=0,
+                    softcap: float = 0.0, chunk: int = 64,
+                    q_chunk: int = 1024, n_splits: int = 1,
+                    int8_scale: float = 32.0, interpret=None):
+    """Fused paged attention over a shared block pool.
+
+    q: (B, Sq, H, D) — *unscaled* queries (the kernel applies D**-0.5 in the
+    query dtype, exactly like `chunked_attention`). k_pool/v_pool:
+    ``(n_blocks + 1, block_size, KH, D)`` shared pools, float or int8
+    payload (int8 is dequantized in-kernel with ``int8_scale``).
+    block_tables: (B, max_blocks) int32 per-slot map, dump row = pool row
+    ``n_blocks`` for unused entries. kv_valid_len: scalar or (B,);
+    q_positions: (Sq,) or (B, Sq). ``window`` may be a traced per-layer
+    scalar (it rides the layer scan); 0/negative disables windowing.
+    ``n_splits > 1`` enables flash-decoding (see module docstring — parity
+    becomes tolerance-level, not bitwise). Returns (B, Sq, H, D) in q.dtype.
+    """
+    b, sq, h, d = q.shape
+    n_pool, blk_sz, kh, _ = k_pool.shape
+    g = h // kh
+    width = block_tables.shape[1]
+    skv = width * blk_sz
+    # Narrow the chunk grid to the logical cache. When the table fits one
+    # chunk the reference also runs a single (zero-padded) chunk pass, and a
+    # single narrow pass is bitwise-identical to a single wide one — every
+    # extra reference column is masked to an exact-zero contribution. The
+    # serving win: a 64-token table scans 64 wide, not attn_chunk (1024)
+    # wide. (Never changes the chunk *count*, so multi-chunk grids still
+    # match the reference exactly.)
+    chunk = min(chunk, skv)
+    if chunk % blk_sz:
+        raise ValueError(f"attention chunk {chunk} must be a multiple of "
+                         f"the KV block size {blk_sz}")
+    nbpc = chunk // blk_sz
+    nk = -(-skv // chunk)
+    n_splits = max(1, min(int(n_splits), nk))
+    pad_b = nk * nbpc - width
+    bt = block_tables.astype(jnp.int32)
+    if pad_b:       # pad with the dump row — masked exactly like zero-pad
+        bt = jnp.pad(bt, ((0, 0), (0, pad_b)), constant_values=n_pool - 1)
+
+    qc = min(q_chunk, sq)
+    nq = -(-sq // qc)
+    qpad = nq * qc - sq
+    scale = d ** -0.5
+    qh = (q * scale).reshape(b, sq, kh, g, d).transpose(0, 2, 3, 1, 4)
+    qpos = jnp.asarray(q_positions, jnp.int32)
+    qpos = jnp.broadcast_to(qpos[None] if qpos.ndim == 1 else qpos, (b, sq))
+    if qpad:
+        qh = jnp.pad(qh, ((0, 0), (0, 0), (0, 0), (0, qpad), (0, 0)))
+        qpos = jnp.pad(qpos, ((0, 0), (0, qpad)))
+    # (B, NQ, KH, G, qc, D): one grid row per batch row — every KV head of a
+    # row is batched inside its cell (fewer grid cells, wider dots)
+    q_in = qh.reshape(b, kh, g, nq, qc, d).transpose(0, 3, 1, 2, 4, 5)
+
+    kvl = jnp.broadcast_to(
+        jnp.asarray(kv_valid_len, jnp.int32).reshape(-1), (b,))
+    win = jnp.asarray(window, jnp.int32).reshape(-1)[:1]
+
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    kern = functools.partial(
+        _kernel, kh=kh, g=g, qc=qc, chunk=chunk, blk_sz=blk_sz, nk=nk,
+        n_splits=n_splits, causal=causal, softcap=float(softcap),
+        int8_scale=float(int8_scale), quant=k_pool.dtype == jnp.int8)
+    pool_spec = pl.BlockSpec((n_pool, blk_sz, kh, d),
+                             lambda bi, qi, si, *_: (0, 0, 0, 0))
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(b, nq, n_splits),
+        in_specs=[
+            pl.BlockSpec((1, 1, kh, g, qc, d),
+                         lambda bi, qi, si, *_: (bi, qi, 0, 0, 0, 0)),
+            pool_spec,
+            pool_spec,
+        ],
+        out_specs=(
+            pl.BlockSpec((1, 1, kh, g, qc, d),
+                         lambda bi, qi, si, *_: (bi, qi, 0, 0, 0, 0))
+            if n_splits == 1 else [
+                pl.BlockSpec((1, 1, 1, kh, g, qc, d),
+                             lambda bi, qi, si, *_: (bi, qi, si, 0, 0, 0, 0)),
+                pl.BlockSpec((1, 1, 1, kh, g, qc),
+                             lambda bi, qi, si, *_: (bi, qi, si, 0, 0, 0)),
+                pl.BlockSpec((1, 1, 1, kh, g, qc),
+                             lambda bi, qi, si, *_: (bi, qi, si, 0, 0, 0)),
+            ]),
+    )
+    out_shape = (
+        jax.ShapeDtypeStruct((b, nq, kh, g, qc, d), q.dtype)
+        if n_splits == 1 else [
+            jax.ShapeDtypeStruct((b, nq, n_splits, kh, g, qc, d),
+                                 jnp.float32),
+            jax.ShapeDtypeStruct((b, nq, n_splits, kh, g, qc), jnp.float32),
+            jax.ShapeDtypeStruct((b, nq, n_splits, kh, g, qc), jnp.float32),
+        ])
+    res = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        compiler_params=None if interpret else pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "parallel")),
+        interpret=interpret,
+    )(bt, kvl, qpos, win, q_in, k_pool, v_pool)
+
+    if n_splits == 1:
+        out = res
+    else:
+        acc, m, l = res                      # (B, NQ, NS, KH, G, qc[, D])
+        m_tot = m.max(axis=2)
+        w = jnp.exp(m - m_tot[:, :, None])
+        l_tot = (l * w).sum(axis=2)
+        acc_tot = (acc * w[..., None]).sum(axis=2)
+        out = (acc_tot / jnp.maximum(l_tot, 1e-30)[..., None]).astype(q.dtype)
+    out = (out.transpose(0, 1, 4, 2, 3, 5)   # (B, NQ, qc, KH, G, D)
+           .reshape(b, nq * qc, h, d))
+    return out[:, :sq]

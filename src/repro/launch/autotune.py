@@ -15,6 +15,39 @@ from .analytic import PerfKnobs
 
 HBM_BYTES = 16 * 2 ** 30          # v5e
 _TP_CHOICES = (1, 2, 4, 8, 16)
+_MXU_LANE = 128                   # MXU tile edge: KV chunks below this waste it
+
+
+def paged_kernel_plan(max_len: int, block_size: int, *, batch: int = 1,
+                      kv_heads: int = 1, attn_chunk: int = 1024,
+                      target_cells: int = 8,
+                      allow_splits: bool = False) -> Tuple[int, int]:
+    """Pick (kv_chunk, n_splits) for `kernels.paged_attention`.
+
+    ``kv_chunk``: the widest multiple of ``block_size`` that is <= the
+    logical cache (table width * block) and <= ``attn_chunk`` — matching the
+    narrowing the kernel itself applies, so callers can size VMEM/scratch
+    against it. Below one MXU lane-width the chunk is left at the cache size
+    (splitting a sub-128 scan buys nothing).
+
+    ``n_splits``: 1 unless ``allow_splits`` — split-KV flash decoding
+    reassociates the softmax combine, so the bit-exact serving contract
+    (engine == solo lockstep) only holds at 1. When allowed (long-context
+    throughput mode), split so the grid reaches ~``target_cells`` cells
+    (cores / MXU pipelines to fill), bounded by the chunk count — each split
+    must keep >= 1 chunk.
+    """
+    width = -(-max_len // block_size)
+    skv = width * block_size
+    kv_chunk = min(attn_chunk, skv)
+    kv_chunk -= kv_chunk % block_size
+    kv_chunk = max(kv_chunk, block_size)
+    nk = -(-skv // kv_chunk)
+    if not allow_splits or skv <= _MXU_LANE:
+        return kv_chunk, 1
+    cells = batch * kv_heads                      # decode: nq == 1
+    n_splits = max(1, min(nk, -(-target_cells // max(cells, 1))))
+    return kv_chunk, n_splits
 
 
 def _mem_estimate(cfg: ModelConfig, shape: ShapeSpec, n_chips: int,

@@ -150,14 +150,20 @@ def _build_steps(cfg: ModelConfig, policy: GemmPolicy):
     return jax.jit(admit), jax.jit(decode), jax.jit(retire)
 
 
-def _build_paged_steps(cfg: ModelConfig, policy: GemmPolicy):
+def _build_paged_steps(cfg: ModelConfig, policy: GemmPolicy,
+                       paged_kernel=None):
     """Jitted paged-engine steps: one fused **chunk step** (mixed
     prefill+decode batch -> per-slot sample + device-side state advance; jit
     specializes per chunk width T, bounded by `prefill_chunk` distinct
     widths — the step narrows to the widest live chunk), a fused **admit** (slot state + per-slot cache
     wipe), and the retire flag-flip. The scheduler syncs one sampled-token
-    vector per step, exactly like the contiguous engine."""
-    step_fn = steps_mod.make_chunk_step(cfg, policy)
+    vector per step, exactly like the contiguous engine.
+
+    ``paged_kernel`` routes the step's paged-attention reads through the
+    fused Pallas kernel (`kernels.paged_attention`) instead of the
+    block-table gather path — bit-identical streams at n_splits == 1."""
+    step_fn = steps_mod.make_chunk_step(cfg, policy,
+                                        paged_kernel=paged_kernel)
 
     def chunk(params, tokens, cache, state, q_len, emit, input_embeds=None,
               embed_mask=None):
@@ -199,15 +205,19 @@ _cached_build_steps = functools.lru_cache(maxsize=64)(_build_steps)
 _cached_build_paged = functools.lru_cache(maxsize=64)(_build_paged_steps)
 
 
-def cached_steps(cfg: ModelConfig, policy: GemmPolicy, paged: bool = False):
-    """`_build_steps` memoized by (cfg, policy) so every engine instance (and
-    benchmark rep) reuses the compiled executables. Policies with dict
-    overrides are unhashable and fall back to a fresh build."""
+def cached_steps(cfg: ModelConfig, policy: GemmPolicy, paged: bool = False,
+                 paged_kernel=None):
+    """`_build_steps` memoized by (cfg, policy[, paged_kernel]) so every
+    engine instance (and benchmark rep) reuses the compiled executables.
+    Policies with dict overrides are unhashable and fall back to a fresh
+    build."""
+    kw = {"paged_kernel": paged_kernel} if paged else {}
     build = _cached_build_paged if paged else _cached_build_steps
     try:
-        return build(cfg, policy)
+        return build(cfg, policy, **kw)
     except TypeError:
-        return (_build_paged_steps if paged else _build_steps)(cfg, policy)
+        return (_build_paged_steps if paged else _build_steps)(cfg, policy,
+                                                               **kw)
 
 
 @dataclasses.dataclass
@@ -263,6 +273,15 @@ class ServeEngine:
     trade per-slot headroom for concurrency), ``prefill_chunk`` prompt
     tokens admitted per step. ``paged=False`` is the PR-4 contiguous
     engine; both produce bit-identical per-request streams.
+
+    ``paged_kernel`` (paged mode only) serves attention reads through the
+    fused Pallas paged-attention kernel — the block table is walked *inside*
+    the kernel, so no gather materializes KV in HBM and each slot's scan
+    stops at its live length. ``True``/``1`` keeps the sequential KV scan
+    (streams stay bit-identical to the gather path and to solo lockstep);
+    an int > 1 enables split-KV flash decoding with that many splits
+    (log-sum-exp combine — tolerance-level parity, long contexts only).
+    See `launch.autotune.paged_kernel_plan` for picking the split count.
     """
 
     def __init__(self, cfg: ModelConfig, params: PyTree, *,
@@ -270,11 +289,14 @@ class ServeEngine:
                  max_len: int = 64, eos_id: Optional[int] = None,
                  paged: bool = True, block_size: int = 8,
                  n_blocks: Optional[int] = None, prefill_chunk: int = 8,
-                 queue_limit: Optional[int] = None,
+                 paged_kernel=None, queue_limit: Optional[int] = None,
                  validate_pool: Optional[bool] = None,
                  max_step_retries: int = 2, retry_backoff_s: float = 0.0):
         if cfg.family == "audio":
             raise ValueError("encoder-only arch has no decode step")
+        if paged_kernel and not paged:
+            raise ValueError("paged_kernel requires paged=True (the fused "
+                             "kernel reads through block tables)")
         self.cfg = cfg
         self.params = params
         self.policy = policy
@@ -288,6 +310,7 @@ class ServeEngine:
         self.max_len = max_len
         self.eos_id = eos_id
         self.paged = paged
+        self.paged_kernel = paged_kernel
 
         if paged:
             spec = (paged_mod.PagedSpec(n_blocks, block_size)
@@ -302,6 +325,7 @@ class ServeEngine:
             self.slot_prefill_off: List[Optional[int]] = [None] * max_slots
             self.slot_pos = np.zeros(max_slots, np.int64)
             self._tables_dev = None          # device mirror, rebuilt on change
+            self._dev_cache = {}             # step-input mirrors, see _dev_cached
             self.occ = {"slot_steps": 0, "slot_active_steps": 0,
                         "block_steps": 0, "block_alloc_steps": 0,
                         "prefill_tokens": 0, "decode_tokens": 0}
@@ -342,7 +366,7 @@ class ServeEngine:
 
         if paged:
             self._chunk, self._admit_paged_step, self._retire = cached_steps(
-                cfg, policy, paged=True)
+                cfg, policy, paged=True, paged_kernel=paged_kernel)
         else:
             self._admit_step, self._decode, self._retire = cached_steps(cfg,
                                                                         policy)
@@ -601,6 +625,20 @@ class ServeEngine:
                 del self.queue[idx]
                 self._admit(slot, req)
 
+    def _dev_cached(self, name: str, arr: np.ndarray):
+        """Device copy of a small per-step host array, reused while the host
+        bytes are unchanged. In the pure-decode steady state ``q_len`` (all
+        ones) and ``emit`` (all True) repeat every step, and host->device
+        uploads of even tiny arrays are a measurable slice of a small-model
+        step — nothing donates its inputs, so reuse is safe."""
+        key = (arr.shape, arr.tobytes())
+        hit = self._dev_cache.get(name)
+        if hit is not None and hit[0] == key:
+            return hit[1]
+        dev = jax.device_put(arr)
+        self._dev_cache[name] = (key, dev)
+        return dev
+
     def _paged_step(self) -> None:
         """One mixed prefill+decode chunk step over all slots."""
         live = np.flatnonzero(self.active)
@@ -656,8 +694,18 @@ class ServeEngine:
         if tables_dirty:
             self._tables_dev = jnp.asarray(self.pool.tables)
         self.cache = dict(self.cache, block_tables=self._tables_dev)
-        args = [jnp.asarray(tokens), self.cache, self.state,
-                jnp.asarray(q_len), jnp.asarray(emit)]
+        if prefilling or vlm:
+            tok_dev = jax.device_put(tokens)
+        else:
+            # pure-decode step: every live row's token is the one the device
+            # sampled last step (``state["last_tok"]`` — the host mirrors it
+            # into slot_out before building ``tokens``), and q_len == 0 rows
+            # only ever write to the dump block, so the device copy already
+            # holds this step's tokens — skip the upload
+            tok_dev = self.state["last_tok"]
+        args = [tok_dev, self.cache, self.state,
+                self._dev_cached("q_len", q_len),
+                self._dev_cached("emit", emit)]
         if vlm:
             args += [jnp.asarray(embeds), jnp.asarray(emask)]
         # dispatch with recovery: params are read at call time (a retry after

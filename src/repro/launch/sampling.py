@@ -63,5 +63,16 @@ def sample_tokens(logits, temperature, top_k, top_p, keys) -> jnp.ndarray:
     logits: (B, V) float; temperature (B,), top_k (B,) int32, top_p (B,);
     keys: (B, 2) uint32 per-slot RNG keys. Returns (B,) int32. Slots with
     temperature == 0 take the greedy argmax (and ignore their key).
+
+    The top-k/top-p machinery costs two full V-wide sorts per slot; a batch
+    where every slot is greedy (the bit-parity serving default) skips them
+    at runtime via `lax.cond` — slots still get exactly the value the
+    sampled branch would have produced for them (greedy is the
+    temperature == 0 case of `_sample_one`), so outputs are unchanged.
     """
-    return jax.vmap(_sample_one)(logits, temperature, top_k, top_p, keys)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    return jax.lax.cond(
+        jnp.any(temperature > 0.0),
+        lambda _: jax.vmap(_sample_one)(logits, temperature, top_k, top_p,
+                                        keys),
+        lambda _: greedy, None)

@@ -155,6 +155,11 @@ def main(argv=None):
     ap.add_argument("--prefill-chunk", type=int, default=8,
                     help="engine: prompt tokens admitted per chunked-prefill "
                          "step")
+    ap.add_argument("--paged-kernel", type=int, default=0, metavar="N",
+                    help="engine: serve attention through the fused Pallas "
+                         "paged-attention kernel; N=1 keeps the bit-exact "
+                         "sequential KV scan, N>1 enables split-KV flash "
+                         "decoding with N splits (0 = gather path)")
     ap.add_argument("--queue-limit", type=int, default=0,
                     help="engine: bound the admission queue — overflow is "
                          "rejected with status 'rejected_queue_full' "
@@ -207,7 +212,8 @@ def main(argv=None):
         if args.paged:
             kw = {"block_size": args.block_size,
                   "n_blocks": args.n_blocks or None,
-                  "prefill_chunk": args.prefill_chunk}
+                  "prefill_chunk": args.prefill_chunk,
+                  "paged_kernel": args.paged_kernel or None}
         if args.ttft_deadline or args.total_deadline:
             for r in requests:
                 r.ttft_deadline = args.ttft_deadline or None

@@ -100,7 +100,7 @@ def make_prefill_step(cfg: ModelConfig, policy: GemmPolicy = EXACT,
 
 
 def make_decode_step(cfg: ModelConfig, policy: GemmPolicy = EXACT,
-                     batch_axes=()):
+                     batch_axes=(), paged_kernel=None):
     """Decode step builder. Pass `bind_serving_params(cfg, params, policy)`
     instead of raw params to serve weight-stationary: every weight leaf is
     quantized + backend-prepared once at bind time, so the per-token step
@@ -108,25 +108,36 @@ def make_decode_step(cfg: ModelConfig, policy: GemmPolicy = EXACT,
 
     `pos` may be a scalar (lockstep decode) or a per-slot `(B,)` position
     vector — the ragged form the continuous-batching engine
-    (`launch.engine.ServeEngine`) drives this step with."""
+    (`launch.engine.ServeEngine`) drives this step with.
+
+    ``paged_kernel`` (paged caches only): route block-table attention reads
+    through the fused Pallas kernel (`kernels.paged_attention`) instead of
+    the gather path — see `make_chunk_step`."""
     model = model_api.get_model(cfg)
 
     def serve_step(params, token, cache, pos):
+        kw = {"paged_kernel": paged_kernel} if paged_kernel else {}
         return model.decode_step(params, token, cache, pos, policy=policy,
-                                 batch_axes=batch_axes)
+                                 batch_axes=batch_axes, **kw)
 
     return serve_step
 
 
 def make_chunk_step(cfg: ModelConfig, policy: GemmPolicy = EXACT,
-                    batch_axes=()):
+                    batch_axes=(), paged_kernel=None):
     """The unified serving step behind the paged engine: one jit-able function
     covering decode (T == 1, q_len == 1) and chunked prefill (T = chunk
     budget, per-slot q_len <= T, trailing padding masked) — a mixed
     prefill+decode batch is just rows with different q_len. `cache` may be
     contiguous or paged (``block_tables`` leaf); `pos` is the per-slot (B,)
     write position of each row's first token. Returns each slot's
-    last-valid-token logits (B, 1, V) plus the updated cache."""
+    last-valid-token logits (B, 1, V) plus the updated cache.
+
+    ``paged_kernel``: truthy routes paged-cache attention reads through the
+    fused Pallas kernel (in-kernel block-table walk, no HBM gather); the
+    integer value is the flash-decoding split count (1 = sequential scan,
+    bit-identical to the gather path). Ignored by families without
+    attention pools (pure-recurrent xLSTM)."""
     model = model_api.get_model(cfg)
 
     def chunk_step(params, tokens, cache, pos, q_len, input_embeds=None,
@@ -134,6 +145,8 @@ def make_chunk_step(cfg: ModelConfig, policy: GemmPolicy = EXACT,
         kw = {}
         if input_embeds is not None:
             kw = {"input_embeds": input_embeds, "embed_mask": embed_mask}
+        if paged_kernel:
+            kw["paged_kernel"] = paged_kernel
         return model.chunk_step(params, tokens, cache, pos, q_len,
                                 policy=policy, batch_axes=batch_axes, **kw)
 

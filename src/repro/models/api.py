@@ -70,16 +70,19 @@ def get_model(cfg: ModelConfig) -> Model:
                                        input_embeds=batch.get("input_embeds"),
                                        policy=policy, batch_axes=batch_axes)
 
-        def decode(params, token, cache, pos, policy=EXACT, batch_axes=()):
+        def decode(params, token, cache, pos, policy=EXACT, batch_axes=(),
+                   paged_kernel=None):
             return transformer.decode_step(params, cfg, token, cache, pos,
-                                           policy=policy, batch_axes=batch_axes)
+                                           policy=policy, batch_axes=batch_axes,
+                                           paged_kernel=paged_kernel)
 
         def chunk(params, tokens, cache, pos, q_len, policy=EXACT,
-                  batch_axes=(), input_embeds=None, embed_mask=None):
+                  batch_axes=(), input_embeds=None, embed_mask=None,
+                  paged_kernel=None):
             return transformer.chunk_step(
                 params, cfg, tokens, cache, pos, q_len, policy=policy,
                 batch_axes=batch_axes, input_embeds=input_embeds,
-                embed_mask=embed_mask)
+                embed_mask=embed_mask, paged_kernel=paged_kernel)
 
         return Model(cfg, lambda key: transformer.init_params(cfg, key),
                      loss, prefill, decode,
@@ -96,14 +99,17 @@ def get_model(cfg: ModelConfig) -> Model:
             return hybrid.prefill(params, cfg, batch["tokens"], cache,
                                   policy=policy, batch_axes=batch_axes)
 
-        def decode(params, token, cache, pos, policy=EXACT, batch_axes=()):
+        def decode(params, token, cache, pos, policy=EXACT, batch_axes=(),
+                   paged_kernel=None):
             return hybrid.decode_step(params, cfg, token, cache, pos,
-                                      policy=policy, batch_axes=batch_axes)
+                                      policy=policy, batch_axes=batch_axes,
+                                      paged_kernel=paged_kernel)
 
         def chunk(params, tokens, cache, pos, q_len, policy=EXACT,
-                  batch_axes=(), **_):
+                  batch_axes=(), paged_kernel=None, **_):
             return hybrid.chunk_step(params, cfg, tokens, cache, pos, q_len,
-                                     policy=policy, batch_axes=batch_axes)
+                                     policy=policy, batch_axes=batch_axes,
+                                     paged_kernel=paged_kernel)
 
         return Model(cfg, lambda key: hybrid.init_params(cfg, key),
                      loss, prefill, decode,

@@ -127,7 +127,8 @@ def _mamba_group_scan(group_params, x, cfg, policy, states, token_valid=None):
 
 def forward(params, cfg: ModelConfig, *, tokens, cache: Optional[Dict] = None,
             cache_pos=0, positions=None, policy: GemmPolicy = EXACT,
-            attn_chunk: int = 1024, batch_axes=(), q_len=None):
+            attn_chunk: int = 1024, batch_axes=(), q_len=None,
+            paged_kernel=None):
     """`q_len` (B,) marks valid-token counts for chunked serving (trailing
     padding never advances SSM state or writes KV); a cache with a
     ``block_tables`` leaf pages the shared-attention KV through block pools
@@ -162,7 +163,8 @@ def forward(params, cfg: ModelConfig, *, tokens, cache: Optional[Dict] = None,
             head_dim=cfg.hd, rope_theta=cfg.rope_theta, q_positions=positions,
             kv_cache=kv, cache_pos=cache_pos, kv_valid_len=kv_valid,
             causal=True, window=0, softcap=0.0, chunk=attn_chunk, policy=policy,
-            layer="attn", block_tables=block_tables, token_valid=token_valid)
+            layer="attn", block_tables=block_tables, token_valid=token_valid,
+            paged_kernel=paged_kernel)
         x = x + out
         h = L.rms_norm(x, sp["ln2"], cfg.norm_eps)
         x = x + L.mlp_block(sp["mlp"], h, act=cfg.act, policy=policy,
@@ -220,7 +222,7 @@ def prefill(params, cfg, tokens, cache, *, policy=EXACT, attn_chunk=1024,
 
 
 def chunk_step(params, cfg, tokens, cache, pos, q_len, *, policy=EXACT,
-               attn_chunk=1024, batch_axes=(), **_):
+               attn_chunk=1024, batch_axes=(), paged_kernel=None, **_):
     """Unified serving step over a (B, T) token block — see
     `transformer.chunk_step`. Returns each slot's last-valid-token logits."""
     pos = jnp.asarray(pos, jnp.int32)
@@ -229,7 +231,7 @@ def chunk_step(params, cfg, tokens, cache, pos, q_len, *, policy=EXACT,
     hidden, cache = forward(params, cfg, tokens=tokens, cache=cache,
                             cache_pos=pos, positions=positions, policy=policy,
                             attn_chunk=attn_chunk, batch_axes=batch_axes,
-                            q_len=q_len)
+                            q_len=q_len, paged_kernel=paged_kernel)
     sel = jnp.maximum(jnp.asarray(q_len, jnp.int32) - 1, 0)
     hidden = jnp.take_along_axis(hidden, sel[:, None, None], axis=1)
     logits = dot(hidden, L.head_weight(params, hidden.dtype), policy,
@@ -238,14 +240,15 @@ def chunk_step(params, cfg, tokens, cache, pos, q_len, *, policy=EXACT,
 
 
 def decode_step(params, cfg, token, cache, pos, *, policy=EXACT,
-                attn_chunk=1024, batch_axes=(), **_):
+                attn_chunk=1024, batch_axes=(), paged_kernel=None, **_):
     """`pos` may be a scalar (lockstep) or a (B,) per-slot position vector
     (ragged continuous batching) — see `transformer.decode_step`."""
     pos = jnp.asarray(pos, jnp.int32)
     positions = pos[:, None] if pos.ndim else jnp.full((1,), pos, jnp.int32)
     hidden, cache = forward(params, cfg, tokens=token, cache=cache,
                             cache_pos=pos, positions=positions, policy=policy,
-                            attn_chunk=attn_chunk, batch_axes=batch_axes)
+                            attn_chunk=attn_chunk, batch_axes=batch_axes,
+                            paged_kernel=paged_kernel)
     logits = dot(hidden, L.head_weight(params, hidden.dtype), policy,
                  layer="lm_head")
     return logits.astype(jnp.float32), cache

@@ -84,7 +84,8 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
                       q_positions: jnp.ndarray, kv_valid_len,
                       *, causal: bool = True, window=0, softcap=0.0,
                       chunk: int = 1024, q_chunk: int = 1024,
-                      kv_positions=None, block_tables=None) -> jnp.ndarray:
+                      kv_positions=None, block_tables=None,
+                      paged_kernel=None) -> jnp.ndarray:
     """Flash-style attention: outer scan over Q chunks, inner online-softmax scan
     over KV chunks — score/probability tensors never exceed
     (B, H, q_chunk, chunk), so 32k prefill fits HBM.
@@ -105,7 +106,23 @@ def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
     decoupled from the compute schedule), reconstructing exactly the
     positional layout of a contiguous cache — chunk grids, masking, and
     therefore output bits are identical to the contiguous path.
+
+    ``paged_kernel`` (paged caches only): truthy routes the read to the
+    fused Pallas kernel (`kernels.paged_attention`) that walks the block
+    table *inside* the kernel — no HBM gather, per-slot early exit. The
+    integer value is the flash-decoding split count: 1/True is the
+    sequential scan (bit-identical to this gather path — the tests pin it),
+    >1 splits the KV range with a log-sum-exp combine (tolerance-level
+    parity; long contexts only). This gather path stays the interpret-mode
+    reference the kernel is validated against.
     """
+    if block_tables is not None and paged_kernel:
+        from repro.kernels.paged_attention import paged_attention
+        return paged_attention(q, k, v, block_tables, kv_valid_len,
+                               q_positions, causal=causal, window=window,
+                               softcap=softcap, chunk=chunk, q_chunk=q_chunk,
+                               n_splits=int(paged_kernel),
+                               int8_scale=CACHE_INT8_SCALE)
     b, sq, h, d = q.shape
     kh = k.shape[-2]
     g = h // kh
@@ -338,7 +355,7 @@ def attention_block(p, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
                     q_positions, kv_cache=None, ring_cache=None, cache_pos=None,
                     kv_valid_len=None, causal=True, window=0, softcap=0.0,
                     chunk=1024, policy: GemmPolicy = EXACT, layer: str = "",
-                    block_tables=None, token_valid=None):
+                    block_tables=None, token_valid=None, paged_kernel=None):
     """GQA attention.
 
     kv_cache=(k, v): uniform cache — new K/V written at cache_pos, attention
@@ -431,10 +448,15 @@ def attention_block(p, x, *, n_heads, n_kv_heads, head_dim, rope_theta,
             cv = cv.at[blk, off].set(cache_store(v, cv.dtype))
             new_cache = (ck, cv)
             valid = kv_valid_len if kv_valid_len is not None else cp + sq
-            out = chunked_attention(q, cache_load(ck), cache_load(cv),
+            # fused-kernel reads take the raw pools — int8 payloads are
+            # dequantized block by block in VMEM, never as a full-pool copy
+            ka, va = (ck, cv) if paged_kernel else (cache_load(ck),
+                                                    cache_load(cv))
+            out = chunked_attention(q, ka, va,
                                     q_positions, valid, causal=causal,
                                     window=window, softcap=softcap, chunk=chunk,
-                                    block_tables=block_tables)
+                                    block_tables=block_tables,
+                                    paged_kernel=paged_kernel)
             out = out.reshape(b, sq, n_heads * head_dim)
             return dot(out, p["wo"], policy, layer=layer + "/wo"), new_cache
         if cp.ndim:         # per-slot scatter: row i writes at its own cp[i]

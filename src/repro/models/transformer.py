@@ -76,7 +76,7 @@ def init_params(cfg: ModelConfig, key) -> PyTree:
 def _layer_body(lp, x, window, kv_cache, *, cfg: ModelConfig, positions,
                 cache_pos, kv_valid_len, policy: GemmPolicy, chunk: int,
                 ring_cache=None, remat_attn: bool = False,
-                block_tables=None, token_valid=None):
+                block_tables=None, token_valid=None, paged_kernel=None):
     h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
 
     def attn_fn(ap, hh, w):
@@ -87,7 +87,8 @@ def _layer_body(lp, x, window, kv_cache, *, cfg: ModelConfig, positions,
             kv_valid_len=kv_valid_len,
             causal=cfg.causal, window=w, softcap=cfg.attn_softcap,
             chunk=chunk, policy=policy, layer="attn",
-            block_tables=block_tables, token_valid=token_valid)
+            block_tables=block_tables, token_valid=token_valid,
+            paged_kernel=paged_kernel)
 
     if remat_attn:
         # "attn-only" remat (§Perf cell-B iter 3): the attention scan's
@@ -112,7 +113,7 @@ def forward(params: PyTree, cfg: ModelConfig, *, tokens=None, input_embeds=None,
             cache: Optional[Dict] = None, cache_pos=0, positions=None,
             policy: GemmPolicy = EXACT, attn_chunk: int = 1024,
             remat: bool = False, remat_save_attn: bool = False,
-            batch_axes=(), q_len=None, embed_mask=None):
+            batch_axes=(), q_len=None, embed_mask=None, paged_kernel=None):
     """Returns (hidden, new_cache, aux_loss). Input is tokens (B, S) or
     precomputed embeddings (audio/vlm stubs). `cache_pos` may be a scalar
     (lockstep) or a (B,) per-slot vector (ragged continuous batching);
@@ -164,7 +165,8 @@ def forward(params: PyTree, cfg: ModelConfig, *, tokens=None, input_embeds=None,
         return _grouped_forward(params, cfg, x, cache, cache_pos, positions,
                                 kv_valid, policy, attn_chunk, batch_axes,
                                 block_tables=block_tables,
-                                token_valid=token_valid)
+                                token_valid=token_valid,
+                                paged_kernel=paged_kernel)
 
     def body(x, xs):
         lp, window, ck, cv = xs
@@ -174,7 +176,8 @@ def forward(params: PyTree, cfg: ModelConfig, *, tokens=None, input_embeds=None,
                                policy=policy, chunk=attn_chunk,
                                remat_attn=(not remat) and remat_save_attn,
                                block_tables=block_tables,
-                               token_valid=token_valid)
+                               token_valid=token_valid,
+                               paged_kernel=paged_kernel)
         if remat:
             # selective remat (§Perf cell-A iter 2): keep each layer's attention
             # output resident so the backward pass recomputes only norms + MLP,
@@ -205,7 +208,7 @@ def forward(params: PyTree, cfg: ModelConfig, *, tokens=None, input_embeds=None,
 
 def _grouped_forward(params, cfg: ModelConfig, x, cache, cache_pos, positions,
                      kv_valid, policy, attn_chunk, batch_axes,
-                     block_tables=None, token_valid=None):
+                     block_tables=None, token_valid=None, paged_kernel=None):
     """Two-tier windowed-cache path (gemma-style local:global patterns).
 
     Layers are processed in groups of `global_every` — (global_every - 1) local
@@ -241,7 +244,7 @@ def _grouped_forward(params, cfg: ModelConfig, x, cache, cache_pos, positions,
             lp, x, 0, (kg, vg), cfg=cfg, positions=positions,
             cache_pos=cache_pos, kv_valid_len=kv_valid, policy=policy,
             chunk=attn_chunk, block_tables=block_tables,
-            token_valid=token_valid)
+            token_valid=token_valid, paged_kernel=paged_kernel)
         aux_sum = aux_sum + aux
         x = L.constrain_batch(x, batch_axes)
         ys = (jnp.stack(new_loc[0]), jnp.stack(new_loc[1]),
@@ -363,18 +366,20 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16,
 
 
 def prefill(params, cfg: ModelConfig, tokens, cache, *, input_embeds=None,
-            policy: GemmPolicy = EXACT, attn_chunk: int = 1024, batch_axes=()):
+            policy: GemmPolicy = EXACT, attn_chunk: int = 1024, batch_axes=(),
+            paged_kernel=None):
     hidden, cache, _ = forward(params, cfg, tokens=tokens,
                                input_embeds=input_embeds, cache=cache,
                                cache_pos=0, policy=policy, attn_chunk=attn_chunk,
-                               batch_axes=batch_axes)
+                               batch_axes=batch_axes, paged_kernel=paged_kernel)
     logits = logits_from_hidden(params, cfg, hidden[:, -1:], policy)
     return logits, cache
 
 
 def chunk_step(params, cfg: ModelConfig, tokens, cache, pos, q_len, *,
                policy: GemmPolicy = EXACT, attn_chunk: int = 1024,
-               batch_axes=(), input_embeds=None, embed_mask=None):
+               batch_axes=(), input_embeds=None, embed_mask=None,
+               paged_kernel=None):
     """One serving step over a (B, T) token block: the unified form behind
     both decode (T == 1, q_len == 1) and chunked prefill (T = chunk budget,
     per-slot q_len <= T with trailing padding). Mixed prefill+decode batches
@@ -391,7 +396,8 @@ def chunk_step(params, cfg: ModelConfig, tokens, cache, pos, q_len, *,
                                policy=policy, attn_chunk=attn_chunk,
                                batch_axes=batch_axes, q_len=q_len,
                                input_embeds=input_embeds,
-                               embed_mask=embed_mask)
+                               embed_mask=embed_mask,
+                               paged_kernel=paged_kernel)
     sel = jnp.maximum(jnp.asarray(q_len, jnp.int32) - 1, 0)
     hidden = jnp.take_along_axis(hidden, sel[:, None, None], axis=1)  # (B,1,d)
     return logits_from_hidden(params, cfg, hidden, policy), cache
@@ -399,7 +405,7 @@ def chunk_step(params, cfg: ModelConfig, tokens, cache, pos, q_len, *,
 
 def decode_step(params, cfg: ModelConfig, token, cache, pos, *,
                 policy: GemmPolicy = EXACT, attn_chunk: int = 1024,
-                batch_axes=()):
+                batch_axes=(), paged_kernel=None):
     """One decode step. token: (B, 1); pos: scalar int32 (current length,
     lockstep — the whole batch at one position) or (B,) int32 per-slot
     positions (ragged continuous batching; the scalar form is the all-equal
@@ -408,5 +414,6 @@ def decode_step(params, cfg: ModelConfig, token, cache, pos, *,
     positions = pos[:, None] if pos.ndim else jnp.full((1,), pos, jnp.int32)
     hidden, cache, _ = forward(params, cfg, tokens=token, cache=cache,
                                cache_pos=pos, positions=positions, policy=policy,
-                               attn_chunk=attn_chunk, batch_axes=batch_axes)
+                               attn_chunk=attn_chunk, batch_axes=batch_axes,
+                               paged_kernel=paged_kernel)
     return logits_from_hidden(params, cfg, hidden, policy), cache

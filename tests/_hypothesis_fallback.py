@@ -11,7 +11,8 @@ and dev machines). Rather than skipping four whole test modules, test files do
 and property tests then run `max_examples` seeded-random samples instead of
 hypothesis' adaptive search — no shrinking, but the same assertions execute.
 Only the subset of the API the suite uses is implemented (`st.integers`,
-`@given` positional/keyword, `@settings(max_examples=..., deadline=...)`).
+`st.sampled_from`, `st.booleans`, `@given` positional/keyword,
+`@settings(max_examples=..., deadline=...)`).
 """
 from __future__ import annotations
 
@@ -37,10 +38,26 @@ class _IntegersStrategy:
         return rng.randint(self.min_value, self.max_value)
 
 
+class _SampledFromStrategy:
+    def __init__(self, elements):
+        self.elements = list(elements)
+
+    def example(self, rng: random.Random):
+        return rng.choice(self.elements)
+
+
 class strategies:  # noqa: N801 - mirrors the hypothesis module name
     @staticmethod
     def integers(min_value: int, max_value: int) -> _IntegersStrategy:
         return _IntegersStrategy(min_value, max_value)
+
+    @staticmethod
+    def sampled_from(elements) -> _SampledFromStrategy:
+        return _SampledFromStrategy(elements)
+
+    @staticmethod
+    def booleans() -> _SampledFromStrategy:
+        return _SampledFromStrategy([False, True])
 
 
 st = strategies

@@ -1,0 +1,100 @@
+"""Unit tests for the benchmarks/compare.py regression gate.
+
+The gate must be robust to baseline drift: older committed baselines miss
+keys that newer bench code emits (and vice versa), and a degenerate baseline
+row can carry a zero / near-zero relative metric. Each of those must produce
+an explicit skip/WARN line and a clean exit — never a crash, and never a
+silent pass that hides what was (or wasn't) compared.
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks.compare import compare  # noqa: E402
+
+
+def _doc(rows):
+    return {"results": rows}
+
+
+def _row(**kw):
+    base = {"cell": "engine_vs_lockstep", "backend": "exact", "bound": False}
+    base.update(kw)
+    return base
+
+
+def test_within_tolerance_passes(capsys):
+    new = _doc([_row(speedup=1.55)])
+    base = _doc([_row(speedup=1.61)])
+    assert compare(new, base, 0.2) == 0
+    out = capsys.readouterr().out
+    assert "ok" in out and "FAIL" not in out
+
+
+def test_real_drop_fails(capsys):
+    new = _doc([_row(speedup=1.0)])
+    base = _doc([_row(speedup=1.61)])
+    assert compare(new, base, 0.2) == 1
+    assert "FAIL" in capsys.readouterr().out
+
+
+def test_missing_key_in_baseline_is_reported_skip(capsys):
+    # older baseline predates the metric: must not gate, must not be silent
+    new = _doc([_row(speedup=1.6, speedup_vs_per_batch=1.2)])
+    base = _doc([_row(speedup=1.6)])
+    assert compare(new, base, 0.2) == 0
+    out = capsys.readouterr().out
+    assert "skip" in out and "missing from baseline" in out
+    assert "speedup_vs_per_batch" in out
+
+
+def test_metric_vanished_from_new_run_warns(capsys):
+    new = _doc([_row(speedup=1.6)])
+    base = _doc([_row(speedup=1.6, speedup_vs_per_batch=1.2)])
+    assert compare(new, base, 0.2) == 0
+    out = capsys.readouterr().out
+    assert "WARN" in out and "missing from new run" in out
+
+
+def test_zero_baseline_skips_not_crashes(capsys):
+    new = _doc([_row(speedup=1.6)])
+    base = _doc([_row(speedup=0.0)])
+    assert compare(new, base, 0.2) == 0          # no ZeroDivisionError
+    out = capsys.readouterr().out
+    assert "skip" in out and "unusable baseline" in out
+
+
+def test_near_zero_baseline_skips(capsys):
+    # sub-EPS baseline: ratio would be meaningless noise, must skip loudly
+    new = _doc([_row(speedup=0.5)])
+    base = _doc([_row(speedup=1e-12)])
+    assert compare(new, base, 0.2) == 0
+    assert "unusable baseline" in capsys.readouterr().out
+
+
+def test_non_numeric_baseline_value_skips_not_crashes(capsys):
+    new = _doc([_row(speedup=1.6)])
+    base = _doc([_row(speedup="n/a")])
+    assert compare(new, base, 0.2) == 0
+    assert "unusable baseline" in capsys.readouterr().out
+
+
+def test_new_cell_without_baseline_is_nonfatal(capsys):
+    new = _doc([_row(cell="paged_kernel", speedup=1.9), _row(speedup=1.6)])
+    base = _doc([_row(speedup=1.6)])
+    assert compare(new, base, 0.2) == 0
+    assert "new cell (no baseline)" in capsys.readouterr().out
+
+
+def test_zero_info_key_does_not_crash(capsys):
+    new = _doc([_row(speedup=1.6, engine_tok_per_s=900.0)])
+    base = _doc([_row(speedup=1.6, engine_tok_per_s=0.0)])
+    assert compare(new, base, 0.2) == 0
+
+
+def test_skip_count_in_summary(capsys):
+    new = _doc([_row(speedup=1.6, speedup_vs_per_batch=1.2)])
+    base = _doc([_row(speedup=1.6)])
+    compare(new, base, 0.2)
+    assert "1 skipped" in capsys.readouterr().out

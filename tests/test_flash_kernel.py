@@ -1,19 +1,31 @@
 """Pallas flash-attention kernel vs the validated pure-JAX chunked attention."""
+import sys
+from pathlib import Path
+
 import numpy as np
 import jax.numpy as jnp
 import pytest
 
+sys.path.insert(0, str(Path(__file__).resolve().parent))
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fallback, see _hypothesis_fallback.py
+    from _hypothesis_fallback import given, settings, strategies as st
+
 from repro.kernels.flash_attention import flash_attention
 from repro.models.layers import chunked_attention
 
+pytestmark = pytest.mark.kernel
 
-def _ref(q, k, v, *, causal, window, softcap):
+
+def _ref(q, k, v, *, causal, window, softcap, kv_valid_len=None):
     # (B,H,S,D) -> layers.chunked_attention layout (B,S,H,D)
     b, h, s, d = q.shape
     qpos = np.arange(s)
+    kvl = k.shape[2] if kv_valid_len is None else kv_valid_len
     out = chunked_attention(
         jnp.asarray(q.transpose(0, 2, 1, 3)), jnp.asarray(k.transpose(0, 2, 1, 3)),
-        jnp.asarray(v.transpose(0, 2, 1, 3)), jnp.asarray(qpos), k.shape[2],
+        jnp.asarray(v.transpose(0, 2, 1, 3)), jnp.asarray(qpos), kvl,
         causal=causal, window=window, softcap=softcap, chunk=16, q_chunk=16)
     return np.asarray(out).transpose(0, 2, 1, 3)
 
@@ -52,3 +64,94 @@ def test_flash_causal_skips_are_exact():
                                     jnp.asarray(v), bq=64, bk=8,
                                     interpret=True))
     np.testing.assert_allclose(a, b_, rtol=2e-5, atol=2e-5)
+
+
+# --- ragged kv_valid_len: non-multiple-of-block live lengths ----------------
+#
+# Callers zero-pad S_kv up to a block multiple. Without masking, padded rows
+# score s = 0 and contribute exp(0 - m) softmax mass — invisible under causal
+# self-attention (the causal mask hides trailing keys) but a real divergence
+# for non-causal / cross-attention. These tests pin the fix.
+
+
+def _padded(rng, b, h, s_live, s_pad, d, sq):
+    q = rng.normal(size=(b, h, sq, d)).astype(np.float32)
+    k = np.zeros((b, h, s_pad, d), np.float32)
+    v = np.zeros((b, h, s_pad, d), np.float32)
+    k[:, :, :s_live] = rng.normal(size=(b, h, s_live, d))
+    v[:, :, :s_live] = rng.normal(size=(b, h, s_live, d))
+    return q, k, v
+
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("live", [1, 7, 8, 9, 15, 17, 31, 32])
+def test_flash_ragged_kv_valid_len(causal, live):
+    """flash(padded K/V, kv_valid_len=L) == reference on the first L keys."""
+    rng = np.random.default_rng(live * 2 + causal)
+    b, h, d, sq, bk = 2, 2, 16, 32, 8
+    s_pad = 32
+    q, k, v = _padded(rng, b, h, live, s_pad, d, sq)
+    got = np.asarray(flash_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), kv_valid_len=live,
+        causal=causal, bq=8, bk=bk, interpret=True))
+    want = _ref(q, k, v, causal=causal, window=0, softcap=0.0,
+                kv_valid_len=live)
+    # causal rows with no visible key (q pos < first live key never happens
+    # here: live >= 1 and causal keys start at 0) — all rows comparable
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_flash_noncausal_padding_was_the_bug():
+    """The unmasked kernel demonstrably diverges on non-causal padded K — the
+    masked one must match the truncated-input oracle exactly (same math)."""
+    rng = np.random.default_rng(3)
+    b, h, d, sq, live, s_pad = 1, 2, 8, 16, 11, 16
+    q, k, v = _padded(rng, b, h, live, s_pad, d, sq)
+    masked = np.asarray(flash_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), kv_valid_len=live,
+        causal=False, bq=8, bk=8, interpret=True))
+    unmasked = np.asarray(flash_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+        causal=False, bq=8, bk=8, interpret=True))
+    want = _ref(q, k, v, causal=False, window=0, softcap=0.0,
+                kv_valid_len=live)
+    np.testing.assert_allclose(masked, want, rtol=2e-4, atol=2e-4)
+    # the padded keys carry nonzero softmax mass without the mask
+    assert np.abs(unmasked - want).max() > 1e-3
+
+
+def test_flash_per_batch_kv_valid_len():
+    """(B,) lengths: each batch row masks at its own live length."""
+    rng = np.random.default_rng(17)
+    b, h, d, sq, s_pad = 3, 2, 16, 16, 32
+    lens = np.array([5, 19, 32], np.int32)
+    q = rng.normal(size=(b, h, sq, d)).astype(np.float32)
+    k = np.zeros((b, h, s_pad, d), np.float32)
+    v = np.zeros((b, h, s_pad, d), np.float32)
+    for i, L in enumerate(lens):
+        k[i, :, :L] = rng.normal(size=(h, L, d))
+        v[i, :, :L] = rng.normal(size=(h, L, d))
+    got = np.asarray(flash_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+        kv_valid_len=jnp.asarray(lens), causal=False, bq=8, bk=8,
+        interpret=True))
+    for i, L in enumerate(lens):
+        want = _ref(q[i:i + 1], k[i:i + 1], v[i:i + 1], causal=False,
+                    window=0, softcap=0.0, kv_valid_len=int(L))
+        np.testing.assert_allclose(got[i:i + 1], want, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(live=st.integers(1, 64), causal=st.booleans(),
+       bk=st.sampled_from([8, 16, 32]))
+def test_flash_ragged_property(live, causal, bk):
+    """Any live length in [1, S], any block size: padded == truncated oracle."""
+    rng = np.random.default_rng(live * 7 + bk + causal)
+    b, h, d, sq, s_pad = 1, 2, 8, 32, 64
+    q, k, v = _padded(rng, b, h, live, s_pad, d, sq)
+    got = np.asarray(flash_attention(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), kv_valid_len=live,
+        causal=causal, bq=16, bk=bk, interpret=True))
+    want = _ref(q, k, v, causal=causal, window=0, softcap=0.0,
+                kv_valid_len=live)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)

@@ -253,3 +253,228 @@ def test_paged_attention_multi_kv_chunk_matches_contiguous():
     dp, _ = transformer.decode_step(params, cfg, tok, pag, pos,
                                     attn_chunk=attn_chunk)
     np.testing.assert_array_equal(np.asarray(dc), np.asarray(dp))
+
+
+# --- fused paged-attention kernel (kernels.paged_attention) ------------------
+#
+# The serving contract: with n_splits == 1 the fused kernel is bit-identical
+# to the gather path (and the gather path to a contiguous cache) whenever
+# both execute the same single-chunk geometry — chunk == table width * block
+# size, which is what the engine's serving steps arrange. Outside that
+# geometry, parity is one float32 ulp, not bitwise, for two verified
+# compiler-level reasons (every individual dot/reduction IS bitwise equal
+# across the paths in isolation):
+#   * multiple KV chunks: the online-softmax accumulate (`l*corr + p.sum()`,
+#     `acc*corr + p@v`) compiles to a fused multiply-add inside the
+#     reference's lax.scan but rounds twice in op-by-op interpret Pallas;
+#   * chunk > logical length: the reference zero-pads the chunk grid while
+#     the kernel narrows chunk to the logical length, so the p@v reduction
+#     tree associates differently (28-wide vs 32-wide sum of the same terms).
+# The gather path stays the interpret-mode reference.
+
+_ULP = dict(rtol=5e-7, atol=5e-7)   # one float32 ulp + headroom
+
+
+def _assert_parity(ref, got, *, exact):
+    if exact:
+        np.testing.assert_array_equal(ref, got)
+    else:
+        np.testing.assert_allclose(ref, got, **_ULP)
+
+
+def _paged_case(rng, *, b, sq, h, kh, d, width, bs, int8=False):
+    """Random pool + fragmented tables + in-contract (qpos < kvl) rows."""
+    import jax.numpy as jnp
+    from repro.models.layers import cache_store
+
+    n_pool = b * width + 1                   # + dump row
+    q = jnp.asarray(rng.normal(size=(b, sq, h, d)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(n_pool, bs, kh, d)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(n_pool, bs, kh, d)), jnp.float32)
+    if int8:
+        kp, vp = cache_store(kp, jnp.int8), cache_store(vp, jnp.int8)
+    # fragmented ownership: any permutation of the non-dump pool rows
+    perm = rng.permutation(n_pool - 1)[:b * width]
+    bt = jnp.asarray(perm.reshape(b, width), jnp.int32)
+    skv = width * bs
+    kvl = jnp.asarray(rng.integers(max(sq, 1), skv + 1, size=b), jnp.int32)
+    qpos = (kvl[:, None] - sq + jnp.arange(sq)[None]).astype(jnp.int32)
+    return q, kp, vp, bt, kvl, qpos
+
+
+def _both_paths(case, *, chunk, n_splits=1, **kw):
+    import jax.numpy as jnp
+    from repro.models.layers import chunked_attention, cache_load
+
+    q, kp, vp, bt, kvl, qpos = case
+    quant = kp.dtype == jnp.int8
+    ka, va = (cache_load(kp), cache_load(vp)) if quant else (kp, vp)
+    ref = chunked_attention(q, ka, va, qpos, kvl, block_tables=bt,
+                            chunk=chunk, **kw)
+    got = chunked_attention(q, kp, vp, qpos, kvl, block_tables=bt,
+                            chunk=chunk, paged_kernel=n_splits, **kw)
+    return np.asarray(ref), np.asarray(got)
+
+
+@pytest.mark.kernel
+@pytest.mark.parametrize("bs,width", [
+    (1, 24),     # single-token blocks
+    (3, 8),      # non-power-of-two block size
+    (8, 8),      # the engine default
+    (64, 2),     # huge blocks
+])
+@pytest.mark.parametrize("sq", [1, 5])
+def test_paged_kernel_bitwise_vs_gather(bs, width, sq):
+    """chunk >= logical length (the engine regime): strictly bitwise."""
+    rng = np.random.default_rng(bs * 100 + sq)
+    case = _paged_case(rng, b=2, sq=sq, h=4, kh=2, d=16, width=width, bs=bs)
+    ref, got = _both_paths(case, chunk=width * bs)
+    np.testing.assert_array_equal(ref, got)
+
+
+@pytest.mark.kernel
+@pytest.mark.parametrize("bs,width,chunk", [
+    (1, 24, 8),     # nk = 3
+    (3, 8, 12),     # nk = 2, non-power-of-two
+    (64, 2, 64),    # chunk == block, nk = 2
+])
+def test_paged_kernel_multichunk_vs_gather(bs, width, chunk):
+    """Multiple KV chunks: one-ulp parity (FMA contraction, see above)."""
+    rng = np.random.default_rng(bs)
+    case = _paged_case(rng, b=2, sq=4, h=4, kh=2, d=16, width=width, bs=bs)
+    ref, got = _both_paths(case, chunk=chunk)
+    _assert_parity(ref, got, exact=False)
+
+
+@pytest.mark.kernel
+@pytest.mark.parametrize("int8", [False, True])
+@pytest.mark.parametrize("softcap,window", [(0.0, 0), (30.0, 0), (0.0, 16)])
+def test_paged_kernel_bitwise_variants(int8, softcap, window):
+    rng = np.random.default_rng(int(softcap) + window + int8)
+    case = _paged_case(rng, b=2, sq=2, h=4, kh=2, d=16, width=8, bs=8,
+                       int8=int8)
+    ref, got = _both_paths(case, chunk=64, softcap=softcap, window=window)
+    np.testing.assert_array_equal(ref, got)
+
+
+@pytest.mark.kernel
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), bs=st.sampled_from([1, 2, 4, 8]),
+       sq=st.sampled_from([1, 3]))
+def test_paged_kernel_fragmented_tables_property(seed, bs, sq):
+    """Any pool permutation, any block size, any in-contract length mix:
+    fused == gather — bitwise on the exact single-chunk geometry, one ulp
+    otherwise."""
+    rng = np.random.default_rng(seed)
+    width = max(1, 32 // bs)
+    chunk = 8 * bs                           # multi-chunk for width*bs > chunk
+    case = _paged_case(rng, b=3, sq=sq, h=4, kh=2, d=8, width=width, bs=bs)
+    ref, got = _both_paths(case, chunk=chunk)
+    _assert_parity(ref, got, exact=width * bs == chunk)
+
+
+@pytest.mark.kernel
+def test_paged_kernel_split_kv_matches_unsplit():
+    """Flash-decoding (n_splits > 1) reassociates the combine: tolerance
+    parity with the sequential scan, not bitwise."""
+    rng = np.random.default_rng(11)
+    case = _paged_case(rng, b=2, sq=1, h=4, kh=2, d=16, width=16, bs=4)
+    _, seq = _both_paths(case, chunk=8, n_splits=1)
+    _, split = _both_paths(case, chunk=8, n_splits=4)
+    np.testing.assert_allclose(seq, split, rtol=2e-6, atol=2e-6)
+
+
+# --- pad_b boundary: table widths around the chunk grid (the bugfix) --------
+#
+# Width < chunk/bs takes the single-upfront-gather fast path; width == hits
+# the exact grid; width > pads the last chunk's table slice with the dump row.
+# All three must reproduce the contiguous cache bit-for-bit, and the fused
+# kernel must match them in turn.
+
+
+@pytest.mark.kernel
+@pytest.mark.parametrize("width", [7, 8, 9])    # nbpc = chunk//bs = 8
+def test_paged_gather_pad_b_boundary_matches_contiguous(width):
+    import jax.numpy as jnp
+    from repro.models.layers import chunked_attention
+
+    rng = np.random.default_rng(width)
+    b, sq, h, kh, d, bs, chunk = 2, 3, 4, 2, 16, 4, 32
+    case = _paged_case(rng, b=b, sq=sq, h=h, kh=kh, d=d, width=width, bs=bs)
+    q, kp, vp, bt, kvl, qpos = case
+    # contiguous reconstruction through the table
+    kc = jnp.take(kp, bt, axis=0).reshape(b, width * bs, kh, d)
+    vc = jnp.take(vp, bt, axis=0).reshape(b, width * bs, kh, d)
+    cont = chunked_attention(q, kc, vc, qpos, kvl, chunk=chunk)
+    gather = chunked_attention(q, kp, vp, qpos, kvl, block_tables=bt,
+                               chunk=chunk)
+    fused = chunked_attention(q, kp, vp, qpos, kvl, block_tables=bt,
+                              chunk=chunk, paged_kernel=1)
+    # gather vs contiguous: both run the scanned reference on the same chunk
+    # grid — bitwise at every width, including the dump-padded last chunk
+    np.testing.assert_array_equal(np.asarray(cont), np.asarray(gather))
+    _assert_parity(np.asarray(gather), np.asarray(fused),
+                   exact=width * bs == chunk)
+
+
+# --- engine-level: the fused kernel cannot move a bit of any stream ---------
+
+
+def test_paged_kernel_engine_streams_pinned():
+    cfg = _dense()
+    params = get_model(cfg).init_params(jax.random.PRNGKey(0))
+    lens = [(5, 6), (6, 5), (4, 7), (7, 4), (5, 5)]
+    kw = dict(max_slots=3, max_len=16, block_size=4, prefill_chunk=4)
+    fin_g = E.ServeEngine(cfg, params, **kw).run(_requests(cfg, lens))
+    fin_k = E.ServeEngine(cfg, params, paged_kernel=1,
+                          **kw).run(_requests(cfg, lens))
+    assert sorted(fin_g) == sorted(fin_k)
+    for rid in fin_g:
+        np.testing.assert_array_equal(fin_g[rid].tokens, fin_k[rid].tokens)
+
+
+def test_paged_kernel_requires_paged_cache():
+    cfg = _dense()
+    params = get_model(cfg).init_params(jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="paged"):
+        E.ServeEngine(cfg, params, paged=False, paged_kernel=1)
+
+
+def test_paged_kernel_hybrid_family_streams_pinned():
+    """Hybrid (attention + SSM mix): the fused kernel only touches the
+    attention pools; streams must still match the gather engine exactly."""
+    cfg = reduced(ARCHS["zamba2-1.2b"])
+    params = get_model(cfg).init_params(jax.random.PRNGKey(0))
+    lens = [(4, 5), (6, 4), (5, 6)]
+    kw = dict(max_slots=3, max_len=16, block_size=4, prefill_chunk=4)
+    fin_g = E.ServeEngine(cfg, params, **kw).run(_requests(cfg, lens))
+    fin_k = E.ServeEngine(cfg, params, paged_kernel=1,
+                          **kw).run(_requests(cfg, lens))
+    for rid in fin_g:
+        np.testing.assert_array_equal(fin_g[rid].tokens, fin_k[rid].tokens)
+
+
+@pytest.mark.slow
+@pytest.mark.kernel
+@pytest.mark.parametrize("bind", [False, True])
+@pytest.mark.parametrize("backend", ["exact", "mxu_int8", "approx_lut",
+                                     "approx_oracle", "approx_onehot",
+                                     "approx_delta"])
+def test_paged_kernel_all_backends_streams_pinned(backend, bind):
+    """The acceptance matrix: six gemm backends x bound/unbound — the fused
+    kernel matches the gather engine's streams bit-for-bit on each."""
+    from repro.core import gemm
+
+    cfg = _dense()
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    pol = gemm.GemmPolicy(backend=backend, k=4)
+    p = model.bind_params(params, pol) if bind else params
+    lens = [(5, 5), (4, 6), (6, 4)]
+    kw = dict(max_slots=3, max_len=16, block_size=4, prefill_chunk=4,
+              policy=pol)
+    fin_g = E.ServeEngine(cfg, p, **kw).run(_requests(cfg, lens))
+    fin_k = E.ServeEngine(cfg, p, paged_kernel=1,
+                          **kw).run(_requests(cfg, lens))
+    for rid in fin_g:
+        np.testing.assert_array_equal(fin_g[rid].tokens, fin_k[rid].tokens)
