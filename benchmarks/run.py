@@ -706,6 +706,31 @@ def roofline_summary():
         print(f"roofline_worst_cell,0,{worst[0]}@{worst[1]:.1%}")
 
 
+def analysis_bench(fast=False):
+    """Static-analysis wall time: full-repo lint + kernel audit (<10s budget).
+
+    The CLI gate runs on every tier-1 push, so the whole pass must stay
+    interactive-fast; the budget is asserted, not just reported.
+    """
+    import pathlib
+    import time
+    from repro import analysis
+
+    root = pathlib.Path(__file__).resolve().parent.parent
+    t0 = time.perf_counter()
+    report = analysis.run(root=str(root))
+    wall_s = time.perf_counter() - t0
+    budget_s = 10.0
+    assert wall_s < budget_s, (
+        f"static analysis took {wall_s:.1f}s (> {budget_s:.0f}s budget) — "
+        "the tier-1 CLI gate must stay interactive-fast")
+    assert not report.active(), [f.format() for f in report.active()]
+    meta = report.meta
+    print(f"analysis_full_pass,{wall_s * 1e6:.0f},"
+          f"{meta.get('lint_files', 0)}files+{meta.get('audit_cells', 0)}cells "
+          f"in {wall_s:.2f}s (budget {budget_s:.0f}s, 0 findings)")
+
+
 BENCHES = {
     "table1_cells": lambda fast: table1_cells(),
     "table2_cells": lambda fast: table2_cells(),
@@ -721,6 +746,7 @@ BENCHES = {
     "serve_bound_bench": serve_bound_bench,
     "serve_engine_bench": serve_engine_bench,
     "abft_guard_bench": abft_guard_bench,
+    "analysis_bench": analysis_bench,
     "roofline_summary": lambda fast: roofline_summary(),
 }
 

@@ -1,0 +1,43 @@
+"""Static analysis for the repro stack: kernel contracts + repo invariants.
+
+Two engines, one finding stream (see docs/analysis.md):
+
+* `kernel_audit` — every Pallas `pallas_call` entry point, abstractly
+  evaluated (shape/dtype only) over the autotune/engine-reachable geometry
+  grid against the TPU lowering rules (tiling, divisibility, VMEM, SMEM
+  dtypes, index-map bounds). Its planners (`gemm_block_plan`,
+  `prune_paged_plan`) are consumed by `launch.autotune` and `kernels.ops`
+  so the TPU path never launches an auditor-rejected geometry.
+* `lint` — AST rules over ``src/repro/`` for the serving-stack invariants:
+  no GEMM bypass, ``layer=`` on model `dot` calls, no host syncs in jit
+  steps, no global RNG, PRNG key discipline.
+
+CLI: ``python -m repro.analysis`` (nonzero exit on new findings).
+"""
+from __future__ import annotations
+
+import pathlib
+from typing import Optional
+
+from .findings import Finding, Report  # noqa: F401 (public API)
+
+
+def run(root=".", *, vmem_budget: Optional[int] = None,
+        tools: str = "lint,audit") -> Report:
+    """Run the selected engines over the repo at ``root``; one merged Report."""
+    from . import kernel_audit, lint
+
+    root = pathlib.Path(root)
+    report = Report(meta={"root": str(root), "tools": tools})
+    wanted = {t.strip() for t in tools.split(",") if t.strip()}
+    if "lint" in wanted:
+        findings, _ = lint.lint_tree(root)
+        report.extend(findings)
+        report.meta["lint_files"] = len(
+            list((root / "src" / "repro").rglob("*.py")))
+    if "audit" in wanted:
+        audit_report = kernel_audit.audit(vmem_budget)
+        report.extend(audit_report.findings)
+        report.meta["audit_cells"] = audit_report.meta["cells"]
+        report.meta["vmem_budget"] = audit_report.meta["vmem_budget"]
+    return report

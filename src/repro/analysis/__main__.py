@@ -1,0 +1,63 @@
+"""CLI: ``python -m repro.analysis`` — lint + kernel audit, gate on new findings.
+
+Exit status 0 when every finding is suppressed or baselined, 1 otherwise
+(the tier-1 ``analysis`` CI job runs ``--format json`` and relies on the
+exit code). ``--write-baseline`` snapshots current unsuppressed findings as
+accepted debt — review that diff like code.
+"""
+from __future__ import annotations
+
+import argparse
+import pathlib
+import sys
+
+from . import baseline as baseline_mod
+from . import run
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static kernel-contract audit + repo invariant lint.")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--root", default=".", help="repo root (default: cwd)")
+    ap.add_argument("--baseline", default=None,
+                    help="baseline path (default: <root>/analysis_baseline.json)")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="snapshot current unsuppressed findings and exit 0")
+    ap.add_argument("--vmem-budget", type=int, default=None, metavar="BYTES",
+                    help="per-core VMEM budget for the audit (default 16 MiB)")
+    ap.add_argument("--only", choices=("lint", "audit"), default=None,
+                    help="run a single engine")
+    args = ap.parse_args(argv)
+
+    root = pathlib.Path(args.root)
+    tools = args.only or "lint,audit"
+    report = run(root, vmem_budget=args.vmem_budget, tools=tools)
+
+    baseline_path = pathlib.Path(
+        args.baseline) if args.baseline else root / baseline_mod.DEFAULT_NAME
+    if args.write_baseline:
+        fps = baseline_mod.save(baseline_path, report)
+        print(f"wrote {len(fps)} fingerprint(s) to {baseline_path}")
+        return 0
+
+    base = baseline_mod.load(baseline_path)
+    new = report.active(base)
+
+    if args.format == "json":
+        print(report.to_json(base))
+    else:
+        for f in report.findings:
+            print(f.format())
+        n_sup = sum(f.suppressed for f in report.findings)
+        n_base = len(report.active()) - len(new)
+        print(f"{len(report.findings)} finding(s): {len(new)} new, "
+              f"{n_sup} suppressed, {n_base} baselined "
+              f"(lint files: {report.meta.get('lint_files', '-')}, "
+              f"audit cells: {report.meta.get('audit_cells', '-')})")
+    return 1 if new else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

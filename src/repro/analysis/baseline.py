@@ -1,0 +1,45 @@
+"""Checked-in finding baseline.
+
+The baseline is the set of *accepted* finding fingerprints: the CLI gate
+fails only on findings that are neither suppressed at the site nor present
+here, so adopting a new rule on a tree with known debt doesn't block every
+PR while the debt is paid down. The shipped tree's baseline is empty (zero
+unsuppressed findings) and the workflow keeps it honest:
+
+* ``python -m repro.analysis --write-baseline`` snapshots the current
+  unsuppressed findings (run it when intentionally accepting debt, with the
+  diff reviewed like code);
+* fingerprints hash (tool, rule, path, site) — not line numbers — so the
+  baseline survives unrelated edits, and a *fixed* finding leaves a stale
+  entry that ``--prune`` (or the next --write-baseline) removes.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import List
+
+from .findings import SCHEMA_VERSION, Report
+
+DEFAULT_NAME = "analysis_baseline.json"
+
+
+def load(path) -> List[str]:
+    path = pathlib.Path(path)
+    if not path.exists():
+        return []
+    d = json.loads(path.read_text())
+    if d.get("schema_version") != SCHEMA_VERSION:
+        raise ValueError(
+            f"unsupported baseline schema {d.get('schema_version')!r} in "
+            f"{path}; regenerate with --write-baseline")
+    return list(d.get("fingerprints", []))
+
+
+def save(path, report: Report) -> List[str]:
+    """Snapshot the report's unsuppressed findings as the new baseline."""
+    fps = sorted({f.fingerprint for f in report.active()})
+    pathlib.Path(path).write_text(json.dumps(
+        {"schema_version": SCHEMA_VERSION, "fingerprints": fps},
+        indent=1) + "\n")
+    return fps

@@ -1,0 +1,268 @@
+"""Abstract TPU-lowering contracts for Pallas kernel geometries.
+
+This is a *leaf* module: pure Python, no jax / repro imports, so kernel
+modules can build contract descriptions for the auditor without dragging in
+the analysis package at kernel-import time (and the auditor can evaluate
+thousands of geometry cells in milliseconds — shapes and dtypes only, no
+tracing, no execution).
+
+A `KernelGeometry` mirrors one concrete `pallas_call` invocation: the grid,
+every operand's full shape / dtype / BlockSpec block + index map, the
+scalar-prefetch operands, and scratch allocations. `check_geometry` decides,
+per the Mosaic lowering rules in the TPU Pallas guide, whether that cell can
+lower:
+
+* ``grid-empty`` — a grid dimension is zero or negative.
+* ``tile-misaligned`` — a VMEM block's (sublane, lane) dims are neither a
+  multiple of the dtype's minimum tile — (8,128) f32/i32, (16,128) bf16,
+  (32,128) int8 — nor the full array extent in that axis (Mosaic pads one
+  trailing edge tile; arbitrary interior misalignment does not lower).
+* ``block-divisibility`` — the array extent is not a multiple of the block
+  extent in an axis the kernel does not mask in-kernel (``masked_axes``),
+  so the remainder cells would read/write out of range.
+* ``vmem-overflow`` — the per-cell footprint (streamed operands are
+  double-buffered, ×2; grid-invariant operands are resident, ×1; scratch ×1)
+  exceeds the VMEM budget.
+* ``smem-illegal-dtype`` — a scalar-prefetch operand is not int32 (the only
+  dtype the stack puts in SMEM).
+* ``index-oob`` — an index map, enumerated over the grid (or its corners
+  when the grid is large), returns a block index outside
+  ``ceil(shape/block)`` in some axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+import itertools
+import math
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+from .findings import Finding
+
+# Minimum (sublane, lane) tile per dtype, from the TPU Pallas guide.
+MIN_TILE: Dict[str, Tuple[int, int]] = {
+    "float32": (8, 128),
+    "int32": (8, 128),
+    "uint32": (8, 128),
+    "bfloat16": (16, 128),
+    "float16": (16, 128),
+    "int8": (32, 128),
+    "uint8": (32, 128),
+    "float8_e4m3fn": (32, 128),
+    "float8_e5m2": (32, 128),
+}
+
+ITEMSIZE: Dict[str, int] = {
+    "float32": 4, "int32": 4, "uint32": 4,
+    "bfloat16": 2, "float16": 2,
+    "int8": 1, "uint8": 1, "float8_e4m3fn": 1, "float8_e5m2": 1,
+}
+
+DEFAULT_VMEM_BUDGET = 16 * 1024 * 1024  # bytes per core
+
+# Exhaustive index-map enumeration up to this many grid cells; beyond it the
+# check falls back to the grid's corner cells.
+_ENUM_CAP = 4096
+
+SMEM_LEGAL_DTYPES = ("int32",)
+
+
+@dataclasses.dataclass(frozen=True)
+class OperandSpec:
+    """One input/output of a `pallas_call`, as the BlockSpec sees it.
+
+    ``block=None`` means the operand rides in whole (``memory_space='any'``,
+    manually DMA'd by the kernel) and is exempt from VMEM blocking checks —
+    its working-set cost must instead appear in ``KernelGeometry.scratch``.
+    """
+    name: str
+    shape: Tuple[int, ...]
+    dtype: str
+    block: Optional[Tuple[int, ...]] = None
+    index_map: Optional[Callable] = None
+    memory_space: str = "vmem"          # 'vmem' | 'any' | 'smem'
+    masked_axes: Tuple[int, ...] = ()   # remainder handled by in-kernel masking
+
+    def block_bytes(self) -> int:
+        if self.block is None:
+            return 0
+        return math.prod(self.block) * ITEMSIZE[self.dtype]
+
+
+@dataclasses.dataclass(frozen=True)
+class ScalarSpec:
+    """A scalar-prefetch operand (lives in SMEM)."""
+    name: str
+    shape: Tuple[int, ...]
+    dtype: str
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelGeometry:
+    """One concrete kernel launch geometry, ready for static checking."""
+    kernel: str                              # dotted module-level name
+    grid: Tuple[int, ...]
+    operands: Tuple[OperandSpec, ...]        # inputs then outputs
+    scalar_prefetch: Tuple[ScalarSpec, ...] = ()
+    scratch_bytes: int = 0                   # VMEM scratch, already summed
+    tag: str = ""                            # human-readable geometry id
+    suppress: Dict[str, str] = dataclasses.field(default_factory=dict)
+
+    @property
+    def site(self) -> str:
+        return f"{self.kernel}[{self.tag}]" if self.tag else self.kernel
+
+
+class _ZeroRef:
+    """Abstract stand-in for a scalar-prefetch ref inside an index map.
+
+    Index maps may read scalar operands (``ref[i]``); statically we model
+    every such read as 0, which matches the checks' conservative needs (the
+    real values only *select* among in-range blocks in this codebase).
+    """
+
+    def __getitem__(self, _):
+        return 0
+
+    def __index__(self):
+        return 0
+
+
+def _call_index_map(index_map: Callable, cell: Tuple[int, ...]):
+    try:
+        params = inspect.signature(index_map).parameters
+    except (TypeError, ValueError):
+        return index_map(*cell)
+    n_pos = 0
+    has_var = False
+    for p in params.values():
+        if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD):
+            n_pos += 1
+        elif p.kind == p.VAR_POSITIONAL:
+            has_var = True
+    if has_var or n_pos <= len(cell):
+        return index_map(*cell)
+    return index_map(*cell, *(_ZeroRef() for _ in range(n_pos - len(cell))))
+
+
+def _grid_cells(grid: Sequence[int]):
+    if math.prod(grid) <= _ENUM_CAP:
+        return itertools.product(*(range(g) for g in grid))
+    corners = [sorted({0, g - 1}) for g in grid]
+    return itertools.product(*corners)
+
+
+def _normalize(idx) -> Tuple[int, ...]:
+    if isinstance(idx, tuple):
+        return tuple(int(i) for i in idx)
+    return (int(idx),)
+
+
+def check_geometry(geom: KernelGeometry,
+                   vmem_budget: int = DEFAULT_VMEM_BUDGET) -> list:
+    """Statically check one geometry; returns a list of Findings.
+
+    Each (rule, operand) pair yields at most one finding, so fixture tests
+    and baselines stay stable as grids grow.
+    """
+    out = []
+
+    def emit(rule, message, severity="error"):
+        reason = geom.suppress.get(rule, "")
+        out.append(Finding(
+            tool="audit", rule=rule, severity=severity,
+            path=geom.kernel, line=0, site=f"{geom.site}:{message_site}",
+            message=message, suppressed=bool(reason),
+            suppress_reason=reason))
+
+    message_site = "grid"
+    if any(g <= 0 for g in geom.grid) or not geom.grid:
+        emit("grid-empty", f"grid {geom.grid} has a non-positive dimension")
+        return out  # nothing else is meaningful on an empty grid
+
+    resident: Dict[str, bool] = {}
+    for op in geom.operands:
+        message_site = op.name
+        if op.block is None or op.memory_space != "vmem":
+            continue
+        if len(op.block) != len(op.shape):
+            emit("block-divisibility",
+                 f"block rank {len(op.block)} != array rank {len(op.shape)}")
+            continue
+
+        # --- (sublane, lane) tiling alignment -------------------------------
+        tile = MIN_TILE.get(op.dtype)
+        if tile is not None:
+            checks = []
+            if len(op.block) >= 2:
+                checks = [(-2, tile[0]), (-1, tile[1])]
+            elif len(op.block) == 1:
+                checks = [(-1, tile[1])]
+            bad = []
+            for axis, t in checks:
+                b, full = op.block[axis], op.shape[axis]
+                if b % t != 0 and b != full:
+                    bad.append(f"dim {axis}: {b} (min tile {t}, extent {full})")
+            if bad:
+                emit("tile-misaligned",
+                     f"block {op.block} {op.dtype} not aligned to min tile "
+                     f"{tile}: " + "; ".join(bad))
+
+        # --- grid/block divisibility (unless masked in-kernel) --------------
+        bad = [a for a in range(len(op.block))
+               if op.shape[a] % op.block[a] != 0 and a not in op.masked_axes]
+        if bad:
+            emit("block-divisibility",
+                 f"shape {op.shape} not divisible by block {op.block} in "
+                 f"axes {bad} and kernel does not mask the remainder")
+
+        # --- index-map bounds ----------------------------------------------
+        if op.index_map is not None:
+            n_blocks = tuple(-(-s // b) for s, b in zip(op.shape, op.block))
+            seen = set()
+            oob = None
+            for cell in _grid_cells(geom.grid):
+                idx = _normalize(_call_index_map(op.index_map, cell))
+                seen.add(idx)
+                if len(idx) != len(op.block):
+                    oob = (cell, idx, "rank mismatch")
+                    break
+                if any(not (0 <= i < nb) for i, nb in zip(idx, n_blocks)):
+                    oob = (cell, idx, f"limits {n_blocks}")
+                    break
+            if oob is not None:
+                cell, idx, why = oob
+                emit("index-oob",
+                     f"index map returns block {idx} at grid cell {cell} "
+                     f"({why})")
+            resident[op.name] = len(seen) <= 1
+
+    # --- per-cell VMEM footprint -------------------------------------------
+    message_site = "vmem"
+    footprint = geom.scratch_bytes
+    parts = [f"scratch={geom.scratch_bytes}"] if geom.scratch_bytes else []
+    for op in geom.operands:
+        if op.block is None or op.memory_space != "vmem":
+            continue
+        mult = 1 if resident.get(op.name, op.index_map is None) else 2
+        footprint += op.block_bytes() * mult
+        parts.append(f"{op.name}={op.block_bytes()}x{mult}")
+    if footprint > vmem_budget:
+        emit("vmem-overflow",
+             f"per-cell footprint {footprint}B exceeds VMEM budget "
+             f"{vmem_budget}B ({', '.join(parts)})")
+
+    # --- scalar prefetch dtypes --------------------------------------------
+    for sp in geom.scalar_prefetch:
+        message_site = sp.name
+        if sp.dtype not in SMEM_LEGAL_DTYPES:
+            emit("smem-illegal-dtype",
+                 f"scalar-prefetch operand '{sp.name}' is {sp.dtype}; SMEM "
+                 f"operands must be one of {SMEM_LEGAL_DTYPES}")
+
+    return out
+
+
+def scratch_bytes(*shapes_dtypes) -> int:
+    """Sum VMEM scratch bytes for (shape, dtype) pairs."""
+    return sum(math.prod(s) * ITEMSIZE[d] for s, d in shapes_dtypes)

@@ -1,0 +1,117 @@
+"""Typed findings shared by the kernel auditor and the AST linter.
+
+A `Finding` is one violation of one rule at one site. Both engines emit the
+same shape so the CLI, the baseline, and CI consume a single stream:
+
+* ``tool`` — which engine produced it (``"audit"`` | ``"lint"``).
+* ``rule`` — stable kebab-case rule id (the catalog lives in docs/analysis.md).
+* ``path`` — repo-relative source file (lint) or dotted kernel module (audit).
+* ``line`` — 1-based source line (lint); 0 for geometry findings, which have
+  no meaningful line.
+* ``site`` — stable site id: the offending source snippet (lint) or the
+  kernel + geometry cell (audit). Fingerprints hash (tool, rule, path, site)
+  and deliberately *exclude* the line number, so a checked-in baseline
+  survives unrelated edits that shift lines.
+* ``suppressed`` — the finding matched an explicit per-site suppression
+  (``# lint: allow(rule): reason`` comment, or a registry-level
+  ``suppress={rule: reason}`` on a kernel contract). Suppressed findings are
+  reported for transparency but never gate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+from typing import Any, Dict, Iterable, List
+
+SCHEMA_VERSION = 1
+
+SEVERITIES = ("error", "warn")
+TOOLS = ("audit", "lint")
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    tool: str
+    rule: str
+    severity: str
+    path: str
+    line: int
+    site: str
+    message: str
+    suppressed: bool = False
+    suppress_reason: str = ""
+
+    def __post_init__(self):
+        assert self.tool in TOOLS, self.tool
+        assert self.severity in SEVERITIES, self.severity
+
+    @property
+    def fingerprint(self) -> str:
+        h = hashlib.blake2b(digest_size=8)
+        for part in (self.tool, self.rule, self.path, self.site):
+            h.update(part.encode())
+            h.update(b"\0")
+        return h.hexdigest()
+
+    def to_dict(self) -> Dict[str, Any]:
+        d = dataclasses.asdict(self)
+        d["fingerprint"] = self.fingerprint
+        return d
+
+    @classmethod
+    def from_dict(cls, d: Dict[str, Any]) -> "Finding":
+        fields = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: v for k, v in d.items() if k in fields})
+
+    def format(self) -> str:
+        loc = f"{self.path}:{self.line}" if self.line else self.path
+        tag = " [suppressed]" if self.suppressed else ""
+        return (f"{loc}: {self.severity}: {self.tool}/{self.rule}{tag}: "
+                f"{self.message}  ({self.site})")
+
+
+@dataclasses.dataclass
+class Report:
+    """One analysis run: every finding (suppressed included) plus run metadata.
+
+    ``active()`` is the gating stream: findings that are neither suppressed
+    at the site nor present in the baseline.
+    """
+    findings: List[Finding] = dataclasses.field(default_factory=list)
+    meta: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def extend(self, fs: Iterable[Finding]) -> None:
+        self.findings.extend(fs)
+
+    def active(self, baseline_fingerprints: Iterable[str] = ()) -> List[Finding]:
+        base = set(baseline_fingerprints)
+        return [f for f in self.findings
+                if not f.suppressed and f.fingerprint not in base]
+
+    def to_dict(self, baseline_fingerprints: Iterable[str] = ()) -> Dict[str, Any]:
+        new = self.active(baseline_fingerprints)
+        return {
+            "schema_version": SCHEMA_VERSION,
+            "meta": dict(self.meta),
+            "counts": {
+                "total": len(self.findings),
+                "suppressed": sum(f.suppressed for f in self.findings),
+                "new": len(new),
+            },
+            "findings": [f.to_dict() for f in self.findings],
+            "new_fingerprints": sorted(f.fingerprint for f in new),
+        }
+
+    def to_json(self, baseline_fingerprints: Iterable[str] = ()) -> str:
+        return json.dumps(self.to_dict(baseline_fingerprints), indent=1,
+                          sort_keys=True)
+
+    @classmethod
+    def from_json(cls, text: str) -> "Report":
+        d = json.loads(text)
+        if d.get("schema_version") != SCHEMA_VERSION:
+            raise ValueError(f"unsupported report schema: "
+                             f"{d.get('schema_version')!r}")
+        return cls(findings=[Finding.from_dict(f) for f in d["findings"]],
+                   meta=d.get("meta", {}))

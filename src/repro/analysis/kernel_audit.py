@@ -1,0 +1,289 @@
+"""Kernel contract auditor: every `pallas_call` entry point, statically.
+
+The four Pallas kernel modules each expose a ``tpu_contract`` hook that
+mirrors their `pallas_call` geometry (grid, BlockSpecs, scalar prefetch,
+scratch) as a pure-Python `contracts.KernelGeometry`. This module owns:
+
+* **the registry** (`AUDITS`) — one geometry generator per kernel, spanning
+  the grid `launch/autotune.py` and the serve engine can actually request
+  (`audit()` runs every cell through `contracts.check_geometry`);
+* **`gemm_block_plan`** — the TPU block picker for the GEMM kernels:
+  `kernels.ops`' preference/alignment arithmetic, then shrink-until-clean
+  through the lowering contract, so the TPU path never launches blocks the
+  auditor rejects;
+* **`prune_paged_plan`** — the same pruning for `autotune.paged_kernel_plan`
+  (shrinks ``kv_chunk`` until the decode-geometry cell is statically clean).
+
+Everything here is shape/dtype arithmetic — no tracing, no arrays — so a
+full-repo audit is a tier-1-budget operation (see benchmarks `analysis_bench`).
+"""
+from __future__ import annotations
+
+import math
+from typing import Iterable, List, Optional, Tuple
+
+from . import contracts
+from .findings import Finding, Report
+
+DEFAULT_VMEM_BUDGET = contracts.DEFAULT_VMEM_BUDGET
+
+# MXU tile edge; mirrors kernels.ops._blocks' TPU alignment (a test pins the
+# two against each other so they cannot drift)
+MXU_ALIGN = 128
+
+
+class ContractViolation(Exception):
+    """A planner could not reach a statically-clean geometry."""
+
+    def __init__(self, findings: List[Finding]):
+        self.findings = findings
+        super().__init__("; ".join(f.format() for f in findings))
+
+
+def _blocks(dim: int, pref: int, align: int = MXU_ALIGN) -> int:
+    if dim <= align:
+        return dim if dim > 0 else align
+    b = min(pref, dim)
+    return max(align, (b // align) * align)
+
+
+def _pad(dim: int, mult: int) -> int:
+    return dim + (-dim) % mult
+
+
+def _clean(geom, vmem_budget: int) -> List[Finding]:
+    return [f for f in contracts.check_geometry(geom, vmem_budget)
+            if not f.suppressed]
+
+
+# ---------------------------------------------------------------------------
+# GEMM block planning (delta / systolic / LUT kernels)
+# ---------------------------------------------------------------------------
+
+def _gemm_module(kernel: str):
+    from repro.kernels import approx_gemm, delta_gemm, systolic_gemm
+    return {
+        "delta": delta_gemm, "approx_delta": delta_gemm,
+        "systolic": systolic_gemm, "mxu_int8": systolic_gemm,
+        "lut": approx_gemm, "approx_lut": approx_gemm,
+    }[kernel]
+
+
+def _gemm_contract(mod, m: int, n: int, k: int, bm: int, bn: int, bk: int,
+                   rank: int, span: int):
+    mp, np_, kp = _pad(m, bm), _pad(n, bn), _pad(k, bk)
+    if mod.__name__.endswith("delta_gemm"):
+        return mod.tpu_contract(mp, np_, kp, rank=rank, span=span,
+                                bm=bm, bn=bn, bk=bk)
+    if mod.__name__.endswith("approx_gemm"):
+        return mod.tpu_contract(mp, np_, kp, span=span, bm=bm, bn=bn, bk=bk)
+    return mod.tpu_contract(mp, np_, kp, bm=bm, bn=bn, bk=bk)
+
+
+def gemm_block_plan(m: int, n: int, k: int, *, kernel: str = "delta",
+                    rank: int = 21, span: int = 256,
+                    prefs: Optional[Tuple[int, int, int]] = None,
+                    vmem_budget: Optional[int] = None
+                    ) -> Tuple[int, int, int]:
+    """Pick TPU (bm, bn, bk) for a GEMM kernel, pruned through its contract.
+
+    Starts from `kernels.ops`' preference/alignment arithmetic (``prefs``
+    overrides the kernel's DEFAULT_B* preferences) and halves the largest
+    MXU-aligned block until `contracts.check_geometry` reports the cell
+    clean. Raises ContractViolation if even the minimum blocks cannot lower
+    (misaligned-by-construction inputs — never the wrappers' output).
+    """
+    mod = _gemm_module(kernel)
+    budget = vmem_budget or DEFAULT_VMEM_BUDGET
+    pm, pn, pk = prefs or (mod.DEFAULT_BM, mod.DEFAULT_BN, mod.DEFAULT_BK)
+    bm = _blocks(m, pm)
+    bn = _blocks(n, pn)
+    bk = _blocks(k, pk)
+    while True:
+        fs = _clean(_gemm_contract(mod, m, n, k, bm, bn, bk, rank, span),
+                    budget)
+        if not fs:
+            return bm, bn, bk
+        # shrink the largest still-shrinkable block (stay MXU-aligned);
+        # blocks at or below one MXU tile have nothing left to give
+        cands = [(b, i) for i, b in enumerate((bm, bn, bk))
+                 if b > MXU_ALIGN and b % MXU_ALIGN == 0]
+        if not cands:
+            raise ContractViolation(fs)
+        _, which = max(cands)
+        new = [bm, bn, bk]
+        half = new[which] // 2
+        new[which] = max(MXU_ALIGN, (half // MXU_ALIGN) * MXU_ALIGN)
+        bm, bn, bk = new
+
+
+# ---------------------------------------------------------------------------
+# Paged-attention plan pruning (consumed by autotune.paged_kernel_plan)
+# ---------------------------------------------------------------------------
+
+def check_paged_geometry(kv_chunk: int, n_splits: int, *, max_len: int,
+                         block_size: int, batch: int, kv_heads: int,
+                         head_dim: int, q_per_kv: int = 1, q_len: int = 1,
+                         n_pool: Optional[int] = None,
+                         kv_dtype: str = "float32",
+                         vmem_budget: Optional[int] = None) -> List[Finding]:
+    """Findings for one paged-attention launch geometry (decode by default)."""
+    from repro.kernels import paged_attention
+    width = -(-max_len // block_size)
+    n_pool = n_pool if n_pool is not None else width * batch + 1
+    geom = paged_attention.tpu_contract(
+        batch=batch, q_len=q_len, kv_heads=kv_heads, q_per_kv=q_per_kv,
+        head_dim=head_dim, n_pool=n_pool, block_size=block_size,
+        table_width=width, chunk=kv_chunk, q_chunk=max(q_len, 1),
+        n_splits=n_splits, kv_dtype=kv_dtype)
+    return _clean(geom, vmem_budget or DEFAULT_VMEM_BUDGET)
+
+
+def prune_paged_plan(kv_chunk: int, n_splits: int, *, max_len: int,
+                     block_size: int, batch: int, kv_heads: int,
+                     head_dim: int, q_per_kv: int = 1,
+                     n_pool: Optional[int] = None, kv_dtype: str = "float32",
+                     vmem_budget: Optional[int] = None) -> Tuple[int, int]:
+    """Shrink (kv_chunk, n_splits) until the decode cell is statically clean.
+
+    The post-DMA-staging kernel's VMEM footprint is driven by the chunk-sized
+    K/V scratch, so halving ``kv_chunk`` (kept a multiple of ``block_size``)
+    strictly shrinks the cell; termination at ``kv_chunk == block_size``
+    raises ContractViolation (a geometry no chunk size can lower — e.g. a
+    single KV block over the budget).
+    """
+    width = -(-max_len // block_size)
+    skv = width * block_size
+    while True:
+        fs = check_paged_geometry(
+            kv_chunk, n_splits, max_len=max_len, block_size=block_size,
+            batch=batch, kv_heads=kv_heads, head_dim=head_dim,
+            q_per_kv=q_per_kv, n_pool=n_pool, kv_dtype=kv_dtype,
+            vmem_budget=vmem_budget)
+        if not fs:
+            return kv_chunk, n_splits
+        if kv_chunk <= block_size:
+            raise ContractViolation(fs)
+        half = kv_chunk // 2
+        kv_chunk = max(block_size, half - half % block_size)
+        nk = -(-skv // kv_chunk)
+        n_splits = max(1, min(n_splits, nk))
+
+
+def flash_kv_envelope(head_dim: int, *, dtype: str = "float32",
+                      vmem_budget: Optional[int] = None) -> int:
+    """Largest padded S_kv (multiple of 128) flash_attention can lower.
+
+    The flash kernel holds a row's whole padded KV in VMEM per grid cell, so
+    its context envelope is VMEM-bounded; beyond it callers must go through
+    the paged kernel (whose footprint is chunk-sized). Documented in
+    docs/analysis.md.
+    """
+    from repro.kernels import flash_attention
+    budget = vmem_budget or DEFAULT_VMEM_BUDGET
+    skv = 128
+    while True:
+        nxt = skv * 2
+        geom = flash_attention.tpu_contract(1, 1, 128, nxt, head_dim,
+                                            dtype=dtype)
+        if _clean(geom, budget):
+            return skv
+        skv = nxt
+
+
+# ---------------------------------------------------------------------------
+# Audit registry: the autotune/engine-reachable geometry grids
+# ---------------------------------------------------------------------------
+
+# (M, N, K) operating points the GEMM wrappers see: decode token rows,
+# app-batch shapes (DCT/im2col pads), model layer shapes, the benchmark 512^3
+# and 4096^3 ceilings
+_GEMM_SHAPES = (
+    (1, 256, 64), (8, 512, 256), (100, 100, 100), (256, 1024, 256),
+    (512, 512, 512), (2048, 4096, 1024), (4096, 4096, 4096),
+)
+_DELTA_RANKS = (0, 1, 10, 21)
+
+
+def _audit_gemm(kernel: str, vmem_budget: int) -> Iterable:
+    mod = _gemm_module(kernel)
+    ranks = _DELTA_RANKS if kernel == "delta" else (0,)
+    for m, n, k in _GEMM_SHAPES:
+        for rank in ranks:
+            bm, bn, bk = gemm_block_plan(m, n, k, kernel=kernel, rank=rank,
+                                         vmem_budget=vmem_budget)
+            yield _gemm_contract(mod, m, n, k, bm, bn, bk, rank, 256)
+
+
+# (B, H, Sq, Skv, D, dtype) cells for the flash prefill kernel, inside the
+# VMEM envelope (see flash_kv_envelope); callers pad Sq/Skv to block multiples
+_FLASH_GEOMS = (
+    (1, 8, 128, 128, 64, "float32"),
+    (4, 8, 512, 1024, 64, "float32"),
+    (2, 16, 1024, 1024, 128, "float32"),
+    (1, 32, 4096, 4096, 128, "float32"),
+    (1, 8, 2048, 2048, 256, "float32"),
+    (2, 16, 1024, 2048, 128, "bfloat16"),
+)
+
+
+def _audit_flash(vmem_budget: int) -> Iterable:
+    from repro.kernels import flash_attention
+    for b, h, sq, skv, d, dtype in _FLASH_GEOMS:
+        yield flash_attention.tpu_contract(b, h, sq, skv, d, dtype=dtype)
+
+
+# Paged serving operating points: (max_len, block_size, batch, kv_heads,
+# q_per_kv, head_dim, q_len, kv_dtype, allow_splits). First row is the
+# ServeEngine default geometry (max_slots=4, max_len=64, block_size=8); the
+# rest cover the config families (gemma2/qwen GQA, 27B head widths) and the
+# long-context split-KV mode at production pool sizes.
+_PAGED_GEOMS = (
+    (64, 8, 4, 4, 2, 64, 1, "float32", False),
+    (64, 8, 4, 1, 8, 64, 16, "float32", False),     # chunked-prefill cell
+    (1024, 16, 8, 8, 4, 128, 1, "float32", False),
+    (4096, 16, 8, 8, 4, 128, 1, "float32", True),
+    (4096, 16, 8, 16, 2, 128, 1, "int8", True),
+    (8192, 32, 4, 8, 6, 256, 1, "float32", True),
+    (32768, 16, 1, 8, 4, 128, 1, "float32", True),  # long-context single slot
+)
+
+
+def _audit_paged(vmem_budget: int) -> Iterable:
+    from repro.kernels import paged_attention
+    from repro.launch.autotune import paged_kernel_plan
+    for (max_len, bs, batch, kh, g, d, q_len, kv_dtype,
+         allow_splits) in _PAGED_GEOMS:
+        kv_chunk, n_splits = paged_kernel_plan(
+            max_len, bs, batch=batch, kv_heads=kh,
+            allow_splits=allow_splits, head_dim=d, q_per_kv=g,
+            kv_dtype=kv_dtype, vmem_budget=vmem_budget)
+        width = -(-max_len // bs)
+        yield paged_attention.tpu_contract(
+            batch=batch, q_len=q_len, kv_heads=kh, q_per_kv=g, head_dim=d,
+            n_pool=width * batch + 1, block_size=bs, table_width=width,
+            chunk=kv_chunk, q_chunk=max(q_len, 1), n_splits=n_splits,
+            kv_dtype=kv_dtype)
+
+
+AUDITS = {
+    "systolic_gemm": lambda budget: _audit_gemm("systolic", budget),
+    "approx_gemm": lambda budget: _audit_gemm("lut", budget),
+    "delta_gemm": lambda budget: _audit_gemm("delta", budget),
+    "flash_attention": _audit_flash,
+    "paged_attention": _audit_paged,
+}
+
+
+def audit(vmem_budget: Optional[int] = None) -> Report:
+    """Audit every registered kernel over its reachable geometry grid."""
+    budget = vmem_budget or DEFAULT_VMEM_BUDGET
+    report = Report(meta={"tool": "audit", "vmem_budget": budget,
+                          "kernels": sorted(AUDITS)})
+    cells = 0
+    for name in sorted(AUDITS):
+        for geom in AUDITS[name](budget):
+            cells += 1
+            report.extend(contracts.check_geometry(geom, budget))
+    report.meta["cells"] = cells
+    return report

@@ -1,0 +1,365 @@
+"""AST invariant linter over ``src/repro/``.
+
+Subsumes (and retires) the regex grep guard that used to live in
+``tests/test_no_gemm_bypass.py``. Rules:
+
+* ``gemm-bypass`` — in ``models/``, every GEMM over parameter leaves must
+  route through ``core.gemm.dot``. ``jnp.matmul`` is banned outright;
+  ``jnp.einsum`` only for the sanctioned activation/state contractions in
+  ``SANCTIONED_EINSUMS``; ``@`` / ``jnp.dot`` / ``lax.dot_general`` only
+  for the sanctioned gating projections in ``SANCTIONED_OPERATOR_GEMMS``.
+* ``dot-layer`` — in ``models/``, every ``dot(...)`` / ``gemm.dot(...)``
+  call must pass ``layer=`` so per-layer policy overrides can target it.
+* ``host-sync-in-step`` — inside the jit-step functions built by
+  ``launch/steps.py`` / ``launch/engine.py`` (the nested defs of
+  ``make_*_step`` / ``_build_steps`` / ``_build_paged_steps``, plus any
+  function passed to ``jax.jit``), no host transfers: ``.item()``,
+  ``np.asarray``/``np.array``, ``jax.device_get``, ``.block_until_ready()``,
+  or ``float()``/``int()``/``bool()`` on non-literal values.
+* ``global-random`` — no stdlib ``random`` and no ``np.random.*`` module
+  calls anywhere in ``src/repro/``; the one sanctioned idiom is an
+  explicitly seeded generator (``np.random.default_rng(seed)`` /
+  ``Generator`` / ``SeedSequence`` with at least one argument).
+* ``prng-discipline`` — outside ``launch/sampling.py`` (home of the
+  per-request fold-in idiom): ``jax.random.PRNGKey`` must take a literal
+  seed, and one key expression must not feed two sampler calls in the same
+  function (reuse correlates the streams).
+
+Per-site suppression: append ``# lint: allow(rule): reason`` on the
+offending line (or the line directly above). Suppressed findings are still
+reported, flagged, and never gate.
+"""
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from .findings import Finding
+
+# ---------------------------------------------------------------------------
+# Allowlists migrated verbatim from the retired grep guard
+# (tests/test_no_gemm_bypass.py). Same semantics: (file name, equation) for
+# einsums over activations/recurrent state, (file name, source fragment) for
+# gating projections whose outputs select/modulate rather than carry the
+# GEMM workload.
+# ---------------------------------------------------------------------------
+SANCTIONED_EINSUMS = {
+    # flash attention scores / values (activation x activation)
+    ("layers.py", "bkgqd,bkcd->bkgqc"),
+    ("layers.py", "bkgqc,bkcd->bkgqd"),
+    # Mamba2 SSD chunked recurrence (activations x recurrent state)
+    ("ssm.py", "bihn,bjhn->bijh"),
+    ("ssm.py", "bijh,bijh,bjh,bjhp->bihp"),
+    ("ssm.py", "bihn,bhpn,bih->bihp"),
+    ("ssm.py", "bjh,bjh,bjhp,bjhn->bhpn"),
+    ("ssm.py", "bh,bhp,bhn->bhpn"),
+    ("ssm.py", "bhn,bhpn->bhp"),
+    # mLSTM chunked matrix-memory recurrence
+    ("xlstm.py", "bihd,bjhd->bijh"),
+    ("xlstm.py", "bijh,bijh,bjhd->bihd"),
+    ("xlstm.py", "bihe,bhde,bih->bihd"),
+    ("xlstm.py", "bijh,bijh->bih"),
+    ("xlstm.py", "bihd,bhd,bih->bih"),
+    ("xlstm.py", "bjh,bjhd,bjhe->bhde"),
+    ("xlstm.py", "bjh,bjhd->bhd"),
+}
+
+SANCTIONED_OPERATOR_GEMMS = {
+    ("moe.py", '@ p["router"]'),          # expert-routing logits
+    ("xlstm.py", '@ p["w_if"]'),          # mLSTM input/forget gate pre-acts
+    ("xlstm.py", "@ r_in.astype"),        # sLSTM recurrent gate pre-acts
+}
+
+# jit-step builder functions whose nested defs are the host-sync scope
+_STEP_BUILDER_RE = re.compile(r"^(make_\w*_step|_build_steps|_build_paged_steps)$")
+_HOST_SYNC_FILES = ("launch/steps.py", "launch/engine.py")
+
+_SAMPLER_FNS = {
+    "normal", "uniform", "categorical", "bernoulli", "gumbel", "randint",
+    "truncated_normal", "exponential", "laplace", "beta", "gamma", "choice",
+    "permutation",
+}
+
+_SEEDED_NP_RANDOM = {"default_rng", "Generator", "SeedSequence"}
+
+_ALLOW_RE = re.compile(r"#\s*lint:\s*allow\(([\w-]+)\)(?::\s*(.*))?")
+
+
+def _dotted(node: ast.AST) -> str:
+    """Best-effort dotted name of a call target ('jnp.matmul', 'dot', ...)."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _snippet(src_lines: List[str], node: ast.AST) -> str:
+    line = src_lines[node.lineno - 1].strip() if node.lineno <= len(src_lines) else ""
+    return line[:160]
+
+
+class _FileCtx:
+    def __init__(self, root: pathlib.Path, path: pathlib.Path):
+        self.path = path
+        self.rel = path.relative_to(root).as_posix()
+        self.name = path.name
+        self.text = path.read_text()
+        self.lines = self.text.splitlines()
+        self.tree = ast.parse(self.text, filename=str(path))
+
+    def suppression(self, line: int, rule: str) -> Optional[str]:
+        """Reason string if `# lint: allow(rule)` covers this line, else None."""
+        for ln in (line, line - 1):
+            if 1 <= ln <= len(self.lines):
+                m = _ALLOW_RE.search(self.lines[ln - 1])
+                if m and m.group(1) == rule:
+                    return (m.group(2) or "").strip() or "allowed"
+        return None
+
+    def finding(self, rule: str, node: ast.AST, message: str,
+                site: Optional[str] = None) -> Finding:
+        reason = self.suppression(node.lineno, rule)
+        return Finding(
+            tool="lint", rule=rule, severity="error", path=self.rel,
+            line=node.lineno, site=site or _snippet(self.lines, node),
+            message=message, suppressed=reason is not None,
+            suppress_reason=reason or "")
+
+
+# ---------------------------------------------------------------------------
+# gemm-bypass + dot-layer (models/)
+# ---------------------------------------------------------------------------
+
+def _lint_models(ctx: _FileCtx, used_sanctions: set) -> Iterable[Finding]:
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.BinOp) and isinstance(node.op, ast.MatMult):
+            line = ctx.lines[node.lineno - 1]
+            hit = next((frag for fn, frag in SANCTIONED_OPERATOR_GEMMS
+                        if fn == ctx.name and frag in line), None)
+            if hit is not None:
+                used_sanctions.add((ctx.name, hit))
+                continue
+            yield ctx.finding(
+                "gemm-bypass", node,
+                "`@` GEMM bypasses GemmPolicy/bind — route through "
+                "core.gemm.dot, or sanction a genuine gating projection in "
+                "lint.SANCTIONED_OPERATOR_GEMMS")
+            continue
+        if not isinstance(node, ast.Call):
+            continue
+        target = _dotted(node.func)
+        if target == "jnp.matmul":
+            yield ctx.finding(
+                "gemm-bypass", node,
+                "jnp.matmul bypasses GemmPolicy/bind — route through "
+                "core.gemm.dot(a, b, policy, layer=...)")
+        elif target in ("jnp.dot", "lax.dot_general", "lax.dot"):
+            line = ctx.lines[node.lineno - 1]
+            hit = next((frag for fn, frag in SANCTIONED_OPERATOR_GEMMS
+                        if fn == ctx.name and frag in line), None)
+            if hit is not None:
+                used_sanctions.add((ctx.name, hit))
+                continue
+            yield ctx.finding(
+                "gemm-bypass", node,
+                f"{target} bypasses GemmPolicy/bind — route through "
+                "core.gemm.dot")
+        elif target == "jnp.einsum":
+            eq = None
+            if node.args and isinstance(node.args[0], ast.Constant) \
+                    and isinstance(node.args[0].value, str):
+                eq = node.args[0].value
+            if eq is not None and (ctx.name, eq) in SANCTIONED_EINSUMS:
+                used_sanctions.add((ctx.name, eq))
+                continue
+            yield ctx.finding(
+                "gemm-bypass", node,
+                f"unsanctioned jnp.einsum({eq!r}) — parameter-leaf GEMMs "
+                "must use core.gemm.dot; genuinely activation-only "
+                "contractions go in lint.SANCTIONED_EINSUMS with "
+                "justification",
+                site=f"einsum:{eq}")
+        elif target in ("dot", "gemm.dot") and not any(
+                kw.arg == "layer" for kw in node.keywords):
+            yield ctx.finding(
+                "dot-layer", node,
+                "dot(...) without layer= — per-layer GemmPolicy overrides "
+                "cannot target an unnamed call site")
+
+
+# ---------------------------------------------------------------------------
+# host-sync-in-step (launch/steps.py, launch/engine.py)
+# ---------------------------------------------------------------------------
+
+def _jit_wrapped_names(tree: ast.Module) -> set:
+    """Names of functions passed to jax.jit anywhere in the module."""
+    names = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Call) and \
+                _dotted(node.func) in ("jax.jit", "jit"):
+            for arg in node.args[:1]:
+                if isinstance(arg, ast.Name):
+                    names.add(arg.id)
+    return names
+
+
+def _lint_host_sync(ctx: _FileCtx) -> Iterable[Finding]:
+    jit_names = _jit_wrapped_names(ctx.tree)
+
+    def step_defs(node, inside_builder):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                is_step = (inside_builder or child.name in jit_names)
+                is_builder = bool(_STEP_BUILDER_RE.match(child.name))
+                if is_step:
+                    yield child
+                yield from step_defs(child, inside_builder or is_builder)
+            else:
+                yield from step_defs(child, inside_builder)
+
+    for fn in step_defs(ctx.tree, False):
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            target = _dotted(node.func)
+            attr = node.func.attr if isinstance(node.func, ast.Attribute) else ""
+            msg = None
+            if attr == "item":
+                msg = ".item() forces a device sync inside a jit step"
+            elif target in ("np.asarray", "np.array", "numpy.asarray",
+                            "numpy.array"):
+                msg = f"{target} pulls the array to host inside a jit step"
+            elif target in ("jax.device_get", "device_get"):
+                msg = "jax.device_get inside a jit step"
+            elif attr == "block_until_ready":
+                msg = ".block_until_ready() inside a jit step"
+            elif target in ("float", "int", "bool") and node.args and not \
+                    isinstance(node.args[0], ast.Constant):
+                msg = (f"{target}() on a traced value concretizes it "
+                       "(host sync) inside a jit step")
+            if msg:
+                yield ctx.finding(
+                    "host-sync-in-step", node,
+                    f"{msg} — keep jit-step bodies device-only "
+                    f"(step fn '{fn.name}')")
+
+
+# ---------------------------------------------------------------------------
+# global-random (all of src/repro/)
+# ---------------------------------------------------------------------------
+
+def _lint_global_random(ctx: _FileCtx) -> Iterable[Finding]:
+    imports_stdlib_random = any(
+        (isinstance(n, ast.Import) and any(a.name == "random" for a in n.names))
+        or (isinstance(n, ast.ImportFrom) and n.module == "random")
+        for n in ast.walk(ctx.tree))
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        target = _dotted(node.func)
+        if imports_stdlib_random and target.startswith("random."):
+            yield ctx.finding(
+                "global-random", node,
+                f"stdlib {target} draws from hidden global state — "
+                "determinism requires an explicit seeded generator")
+        elif target.startswith("np.random.") or target.startswith("numpy.random."):
+            fn = target.rsplit(".", 1)[1]
+            if fn in _SEEDED_NP_RANDOM and node.args:
+                continue  # seeded generator construction: the sanctioned idiom
+            if fn in _SEEDED_NP_RANDOM:
+                yield ctx.finding(
+                    "global-random", node,
+                    f"np.random.{fn}() without a seed is entropy-seeded — "
+                    "pass an explicit seed")
+            else:
+                yield ctx.finding(
+                    "global-random", node,
+                    f"{target} uses the global numpy RNG — use a seeded "
+                    "np.random.default_rng(seed) instead")
+
+
+# ---------------------------------------------------------------------------
+# prng-discipline (src/repro/ minus launch/sampling.py)
+# ---------------------------------------------------------------------------
+
+def _lint_prng(ctx: _FileCtx) -> Iterable[Finding]:
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Call) and _dotted(node.func) in (
+                "jax.random.PRNGKey", "random.PRNGKey", "jrandom.PRNGKey"):
+            seed = node.args[0] if node.args else None
+            literal = isinstance(seed, ast.Constant) or (
+                isinstance(seed, ast.UnaryOp)
+                and isinstance(seed.operand, ast.Constant))
+            if not literal:
+                yield ctx.finding(
+                    "prng-discipline", node,
+                    "PRNGKey with a non-literal seed — derive per-use keys "
+                    "from a fixed root via fold_in/split "
+                    "(launch/sampling.py idiom) so runs stay replayable")
+
+    # key reuse: one key expression feeding >= 2 sampler calls in a function
+    for fn in [n for n in ast.walk(ctx.tree)
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]:
+        seen: Dict[str, ast.Call] = {}
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            target = _dotted(node.func)
+            if not (target.startswith("jax.random.")
+                    or target.startswith("jrandom.")):
+                continue
+            if target.rsplit(".", 1)[1] not in _SAMPLER_FNS or not node.args:
+                continue
+            key_src = ast.dump(node.args[0])
+            if key_src in seen:
+                yield ctx.finding(
+                    "prng-discipline", node,
+                    "PRNG key reused by a second sampler call in "
+                    f"'{fn.name}' — split/fold_in a fresh key per draw "
+                    "(reuse correlates the streams)")
+            else:
+                seen[key_src] = node
+
+
+# ---------------------------------------------------------------------------
+# driver
+# ---------------------------------------------------------------------------
+
+def lint_file(root: pathlib.Path, path: pathlib.Path,
+              used_sanctions: Optional[set] = None) -> List[Finding]:
+    ctx = _FileCtx(root, path)
+    rel = ctx.rel
+    used = used_sanctions if used_sanctions is not None else set()
+    out: List[Finding] = []
+    if "/models/" in f"/{rel}":
+        out.extend(_lint_models(ctx, used))
+    if any(rel.endswith(f) for f in _HOST_SYNC_FILES):
+        out.extend(_lint_host_sync(ctx))
+    out.extend(_lint_global_random(ctx))
+    if not rel.endswith("launch/sampling.py"):
+        out.extend(_lint_prng(ctx))
+    return out
+
+
+def lint_tree(root: pathlib.Path,
+              subdir: str = "src/repro") -> Tuple[List[Finding], set]:
+    """Lint every .py under root/subdir. Returns (findings, used_sanctions)."""
+    root = pathlib.Path(root)
+    used: set = set()
+    findings: List[Finding] = []
+    files = sorted((root / subdir).rglob("*.py"))
+    assert files, f"no sources under {root / subdir}"
+    for path in files:
+        findings.extend(lint_file(root, path, used))
+    return findings, used
+
+
+def stale_sanctions(used: set) -> set:
+    """Allowlist entries no longer matched by any source — prune with the code."""
+    return (SANCTIONED_EINSUMS | SANCTIONED_OPERATOR_GEMMS) - used

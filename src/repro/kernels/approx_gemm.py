@@ -28,6 +28,35 @@ DEFAULT_BN = 256
 DEFAULT_BK = 128
 
 
+def tpu_contract(m: int, n: int, k: int, *, span: int = 256,
+                 bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                 bk: int = DEFAULT_BK):
+    """Static lowering contract mirroring `approx_matmul_lut`'s pallas_call.
+
+    Shape/dtype geometry only (no tracing, no jax) — evaluated by
+    `repro.analysis.kernel_audit`. Operands ride as int32 bit patterns (the
+    wrapper masks to span) and the (span*span,) table is VMEM-resident.
+    """
+    from repro.analysis import contracts as C
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    grid = (-(-m // bm), -(-n // bn), -(-k // bk))
+    return C.KernelGeometry(
+        kernel="kernels.approx_gemm.approx_matmul_lut",
+        grid=grid,
+        operands=(
+            C.OperandSpec("a", (m, k), "int32", (bm, bk),
+                          lambda i, j, kk: (i, kk)),
+            C.OperandSpec("b", (k, n), "int32", (bk, bn),
+                          lambda i, j, kk: (kk, j)),
+            C.OperandSpec("table", (span * span,), "int32", (span * span,),
+                          lambda i, j, kk: (0,)),
+            C.OperandSpec("o", (m, n), "int32", (bm, bn),
+                          lambda i, j, kk: (i, j)),
+        ),
+        tag=f"m{m}n{n}k{k}s{span}bm{bm}bn{bn}bk{bk}",
+    )
+
+
 def _kernel(a_ref, b_ref, lut_ref, o_ref, *, span: int):
     k_idx = pl.program_id(2)
 

@@ -35,6 +35,39 @@ DEFAULT_BN = 256
 DEFAULT_BK = 256
 
 
+def tpu_contract(m: int, n: int, k: int, *, rank: int, span: int = 256,
+                 bm: int = DEFAULT_BM, bn: int = DEFAULT_BN,
+                 bk: int = DEFAULT_BK):
+    """Static lowering contract mirroring `delta_matmul_fused`'s pallas_call.
+
+    Shape/dtype geometry only (no tracing, no jax) — evaluated by
+    `repro.analysis.kernel_audit`; `autotune.gemm_block_plan` prunes block
+    candidates through it so the TPU path never launches a geometry the
+    auditor rejects.
+    """
+    from repro.analysis import contracts as C
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    tab = span * max(rank, 1)
+    grid = (-(-m // bm), -(-n // bn), -(-k // bk))
+    return C.KernelGeometry(
+        kernel="kernels.delta_gemm.delta_matmul_fused",
+        grid=grid,
+        operands=(
+            C.OperandSpec("a", (m, k), "int8", (bm, bk),
+                          lambda i, j, kk: (i, kk)),
+            C.OperandSpec("b", (k, n), "int8", (bk, bn),
+                          lambda i, j, kk: (kk, j)),
+            C.OperandSpec("f", (tab,), "float32", (tab,),
+                          lambda i, j, kk: (0,)),
+            C.OperandSpec("g", (tab,), "float32", (tab,),
+                          lambda i, j, kk: (0,)),
+            C.OperandSpec("o", (m, n), "int32", (bm, bn),
+                          lambda i, j, kk: (i, j)),
+        ),
+        tag=f"m{m}n{n}k{k}r{rank}bm{bm}bn{bn}bk{bk}",
+    )
+
+
 def _kernel(a_ref, b_ref, f_ref, g_ref, o_ref, *, rank: int, span: int):
     k_idx = pl.program_id(2)
 

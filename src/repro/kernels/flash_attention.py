@@ -35,6 +35,37 @@ DEFAULT_BK = 128
 BIG_NEG = -2.3819763e38
 
 
+def tpu_contract(b: int, h: int, sq: int, skv: int, d: int, *,
+                 dtype: str = "float32", bq: int = DEFAULT_BQ,
+                 bk: int = DEFAULT_BK):
+    """Static lowering contract mirroring `flash_attention`'s pallas_call.
+
+    Shape/dtype geometry only (no tracing, no jax). Note the kernel holds a
+    row's *entire* padded KV in VMEM per grid cell (the K scan is an
+    in-kernel fori_loop, not a grid axis), so the auditable envelope is
+    bounded by ``2 * 2 * skv * d * itemsize <= VMEM`` — the auditor flags
+    longer contexts as vmem-overflow (see docs/analysis.md).
+    """
+    from repro.analysis import contracts as C
+    bh = b * h
+    return C.KernelGeometry(
+        kernel="kernels.flash_attention.flash_attention",
+        grid=(bh, -(-sq // bq)),
+        operands=(
+            C.OperandSpec("q", (bh, sq, d), dtype, (1, bq, d),
+                          lambda bhi, qi, *_: (bhi, qi, 0)),
+            C.OperandSpec("k", (bh, skv, d), dtype, (1, skv, d),
+                          lambda bhi, qi, *_: (bhi, 0, 0)),
+            C.OperandSpec("v", (bh, skv, d), dtype, (1, skv, d),
+                          lambda bhi, qi, *_: (bhi, 0, 0)),
+            C.OperandSpec("o", (bh, sq, d), dtype, (1, bq, d),
+                          lambda bhi, qi, *_: (bhi, qi, 0)),
+        ),
+        scalar_prefetch=(C.ScalarSpec("kv_valid_len", (b,), "int32"),),
+        tag=f"b{b}h{h}sq{sq}skv{skv}d{d}{dtype}bq{bq}bk{bk}",
+    )
+
+
 def _kernel(kvl_ref, q_ref, k_ref, v_ref, o_ref, *, h: int, bq: int, bk: int,
             skv: int, causal: bool, window: int, softcap: float,
             scale: float):

@@ -42,6 +42,14 @@ def _blocks(dim: int, pref: int, align: int) -> int:
     return max(align, (b // align) * align)
 
 
+def _tpu_blocks(m: int, n: int, k: int, kernel: str, prefs, *, rank: int = 0):
+    """TPU block picker: `_blocks` alignment arithmetic pruned through the
+    static lowering contract, so the non-interpret path never launches a
+    geometry `repro.analysis.kernel_audit` rejects."""
+    from repro.analysis.kernel_audit import gemm_block_plan
+    return gemm_block_plan(m, n, k, kernel=kernel, rank=rank, prefs=prefs)
+
+
 def systolic_matmul(a: jnp.ndarray, b: jnp.ndarray, *, bm: int | None = None,
                     bn: int | None = None, bk: int | None = None,
                     interpret: bool | None = None) -> jnp.ndarray:
@@ -52,10 +60,13 @@ def systolic_matmul(a: jnp.ndarray, b: jnp.ndarray, *, bm: int | None = None,
     bm = bm or systolic_gemm.DEFAULT_BM
     bn = bn or systolic_gemm.DEFAULT_BN
     bk = bk or systolic_gemm.DEFAULT_BK
-    # in interpret mode alignment is irrelevant; on TPU stay MXU-aligned
-    align = 8 if interpret else 128
-    bm_, bn_, bk_ = (_blocks(m, bm, align), _blocks(n, bn, align),
-                     _blocks(k, bk, align))
+    # in interpret mode alignment is irrelevant; on TPU the block plan is
+    # MXU-aligned and contract-pruned
+    if interpret:
+        bm_, bn_, bk_ = (_blocks(m, bm, 8), _blocks(n, bn, 8),
+                         _blocks(k, bk, 8))
+    else:
+        bm_, bn_, bk_ = _tpu_blocks(m, n, k, "systolic", (bm, bn, bk))
     a_p = _pad_to(a, bm_, bk_)
     b_p = _pad_to(b, bk_, bn_)
     out = systolic_gemm.systolic_matmul(a_p, b_p, bm=bm_, bn=bn_, bk=bk_,
@@ -81,9 +92,11 @@ def approx_matmul(a: jnp.ndarray, b: jnp.ndarray, *, k: int = 4, n_bits: int = 8
     bm = bm or approx_gemm.DEFAULT_BM
     bn = bn or approx_gemm.DEFAULT_BN
     bk = bk or approx_gemm.DEFAULT_BK
-    align = 8 if interpret else 128
-    bm_, bn_, bk_ = (_blocks(m, bm, align), _blocks(n, bn, align),
-                     _blocks(kd, bk, align))
+    if interpret:
+        bm_, bn_, bk_ = (_blocks(m, bm, 8), _blocks(n, bn, 8),
+                         _blocks(kd, bk, 8))
+    else:
+        bm_, bn_, bk_ = _tpu_blocks(m, n, kd, "lut", (bm, bn, bk))
     a_p = _pad_to(a_u, bm_, bk_)
     b_p = _pad_to(b_u, bk_, bn_)
     out = approx_gemm.approx_matmul_lut(a_p, b_p, table, span=span, bm=bm_,
@@ -136,9 +149,12 @@ def approx_delta_matmul(a: jnp.ndarray, b: jnp.ndarray, *, k: int = 4,
     bm = bm or delta_gemm.DEFAULT_BM
     bn = bn or delta_gemm.DEFAULT_BN
     bk = bk or delta_gemm.DEFAULT_BK
-    align = 8 if interpret else 128
-    bm_, bn_, bk_ = (_blocks(m, bm, align), _blocks(n, bn, align),
-                     _blocks(kd, bk, align))
+    if interpret:
+        bm_, bn_, bk_ = (_blocks(m, bm, 8), _blocks(n, bn, 8),
+                         _blocks(kd, bk, 8))
+    else:
+        bm_, bn_, bk_ = _tpu_blocks(m, n, kd, "delta", (bm, bn, bk),
+                                    rank=fac.rank)
     a_p = _pad_to(a_s, bm_, bk_)
     b_p = _pad_to(b_s, bk_, bn_)
     exact_cancel = apply_residual and not fac.exact

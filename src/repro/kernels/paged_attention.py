@@ -52,11 +52,81 @@ from jax.experimental.pallas import tpu as pltpu
 BIG_NEG = -2.3819763e38  # min bf16 (matches layers.BIG_NEG)
 
 
+def tpu_contract(*, batch: int, q_len: int, kv_heads: int, q_per_kv: int,
+                 head_dim: int, n_pool: int, block_size: int,
+                 table_width: int, chunk: int = 1024, q_chunk: int = 1024,
+                 n_splits: int = 1, kv_dtype: str = "float32",
+                 q_dtype: str = "float32"):
+    """Static lowering contract mirroring `paged_attention`'s pallas_call.
+
+    Shape/dtype geometry only (no tracing, no jax). Mirrors the wrapper's
+    chunk narrowing / table+query padding arithmetic exactly, so
+    `autotune.paged_kernel_plan` can pre-prune (kv_chunk, n_splits) plans
+    that cannot lower. The pools ride in ANY space and are DMA-staged chunk
+    by chunk, so VMEM scales with ``chunk`` and not with ``n_pool``.
+    """
+    from repro.analysis import contracts as C
+    b, kh, g, d = batch, kv_heads, q_per_kv, head_dim
+    skv = table_width * block_size
+    chunk = min(chunk, skv)
+    if chunk % block_size:
+        raise ValueError(f"attention chunk {chunk} must be a multiple of "
+                         f"the KV block size {block_size}")
+    nbpc = chunk // block_size
+    nk = -(-skv // chunk)
+    n_splits = max(1, min(int(n_splits), nk))
+    width_p = nk * nbpc                     # table padded with the dump row
+    qc = min(q_chunk, q_len)
+    nq = -(-q_len // qc)
+    sq_p = nq * qc
+    pool_shape = (n_pool, block_size, kh, d)
+    q_map = lambda bi, qi, si, *_: (bi, qi, 0, 0, 0, 0)
+    operands = [
+        C.OperandSpec("q", (b, nq, kh, g, qc, d), q_dtype,
+                      (1, 1, kh, g, qc, d), q_map),
+        C.OperandSpec("k_pool", pool_shape, kv_dtype, memory_space="any"),
+        C.OperandSpec("v_pool", pool_shape, kv_dtype, memory_space="any"),
+    ]
+    if n_splits == 1:
+        operands.append(C.OperandSpec(
+            "o", (b, nq, kh, g, qc, d), q_dtype, (1, 1, kh, g, qc, d), q_map))
+    else:
+        s_map = lambda bi, qi, si, *_: (bi, qi, si, 0, 0, 0, 0)
+        r_map = lambda bi, qi, si, *_: (bi, qi, si, 0, 0, 0)
+        operands += [
+            C.OperandSpec("acc", (b, nq, n_splits, kh, g, qc, d), "float32",
+                          (1, 1, 1, kh, g, qc, d), s_map),
+            C.OperandSpec("m", (b, nq, n_splits, kh, g, qc), "float32",
+                          (1, 1, 1, kh, g, qc), r_map),
+            C.OperandSpec("l", (b, nq, n_splits, kh, g, qc), "float32",
+                          (1, 1, 1, kh, g, qc), r_map),
+        ]
+    return C.KernelGeometry(
+        kernel="kernels.paged_attention.paged_attention",
+        grid=(b, nq, n_splits),
+        operands=tuple(operands),
+        scalar_prefetch=(
+            C.ScalarSpec("block_tables", (b, width_p), "int32"),
+            C.ScalarSpec("kv_valid_len", (b,), "int32"),
+            C.ScalarSpec("q_positions", (b, sq_p), "int32"),
+            C.ScalarSpec("window", (1,), "int32"),
+        ),
+        scratch_bytes=C.scratch_bytes(
+            ((nbpc, block_size, kh, d), kv_dtype),
+            ((nbpc, block_size, kh, d), kv_dtype)),
+        tag=(f"b{b}q{q_len}kh{kh}g{g}d{d}pool{n_pool}x{block_size}"
+             f"w{table_width}c{chunk}s{n_splits}{kv_dtype}"),
+    )
+
+
 def _kernel(tables_ref, kvlen_ref, qpos_ref, win_ref,      # scalar prefetch
-            q_ref, k_ref, v_ref, *out_refs,
+            q_ref, k_ref, v_ref, *rest,
             kh: int, g: int, qc: int, chunk: int, blk_sz: int, nk: int,
             n_splits: int, causal: bool, softcap: float, int8_scale: float,
             quant: bool):
+    # rest = out refs (1 or 3 depending on n_splits) + VMEM staging scratch
+    # for one K chunk and one V chunk + the DMA semaphore
+    out_refs, (k_scr, v_scr, dma_sem) = rest[:-3], rest[-3:]
     b = pl.program_id(0)
     qi = pl.program_id(1)
     si = pl.program_id(2)
@@ -69,23 +139,30 @@ def _kernel(tables_ref, kvlen_ref, qpos_ref, win_ref,      # scalar prefetch
     window_eff = jnp.where(win > 0, win,
                            jnp.iinfo(jnp.int32).max).astype(jnp.int32)
 
-    def gather(ref, ci):
-        # in-kernel table walk: one pool-block DMA per table entry — the
-        # chunk's contiguous layout is assembled in VMEM, never in HBM
-        parts = []
+    def gather(ref, scr, ci):
+        # in-kernel table walk: one pool-block DMA per table entry, HBM (ANY
+        # space) -> VMEM scratch — the chunk's contiguous layout is assembled
+        # in VMEM, never in HBM, and the pools themselves are never blocked
+        # into VMEM (a pool is 10-100x the VMEM budget at production sizes)
+        copies = []
         for j in range(nbpc):
             blk = tables_ref[b, ci * nbpc + j]
-            pj = pl.load(ref, (pl.dslice(blk, 1), slice(None),
-                               slice(None), slice(None)))
-            parts.append(pj.reshape(blk_sz, kh, d))
-        blk_v = parts[0] if nbpc == 1 else jnp.concatenate(parts, axis=0)
+            cp = pltpu.make_async_copy(ref.at[pl.dslice(blk, 1)],
+                                       scr.at[pl.dslice(j, 1)], dma_sem)
+            cp.start()
+            copies.append(cp)
+        for cp in copies:
+            cp.wait()
+        # (nbpc, blk_sz, kh, d) -> (chunk, kh, d): identical element order to
+        # concatenating the per-block loads, so bits match the gather path
+        blk_v = scr[...].reshape(nbpc * blk_sz, kh, d)
         blk_f = blk_v.astype(jnp.float32).swapaxes(0, 1)    # (KH, chunk, D)
         return blk_f / int8_scale if quant else blk_f
 
     def body(ci, state):
         acc, m, l = state
-        k_blk = gather(k_ref, ci)
-        v_blk = gather(v_ref, ci)
+        k_blk = gather(k_ref, k_scr, ci)
+        v_blk = gather(v_ref, v_scr, ci)
         # (KH, G*qc, D) x (KH, chunk, D), batched over the head dim: the
         # per-(b, kh) contraction is bit-identical to the reference batched
         # einsum (tests pin this)
@@ -204,8 +281,11 @@ def paged_attention(q, k_pool, v_pool, block_tables, kv_valid_len,
         _kernel, kh=kh, g=g, qc=qc, chunk=chunk, blk_sz=blk_sz, nk=nk,
         n_splits=n_splits, causal=causal, softcap=float(softcap),
         int8_scale=float(int8_scale), quant=k_pool.dtype == jnp.int8)
-    pool_spec = pl.BlockSpec((n_pool, blk_sz, kh, d),
-                             lambda bi, qi, si, *_: (0, 0, 0, 0))
+    # pools stay in ANY space (HBM): the kernel DMAs table blocks into the
+    # chunk-sized VMEM scratch itself, so the VMEM footprint is O(chunk) and
+    # independent of the pool size — blocking a whole pool into VMEM cannot
+    # lower at production pool sizes (the kernel auditor pins this)
+    pool_spec = pl.BlockSpec(memory_space=pltpu.ANY)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=4,
         grid=(b, nq, n_splits),
@@ -214,6 +294,11 @@ def paged_attention(q, k_pool, v_pool, block_tables, kv_valid_len,
                          lambda bi, qi, si, *_: (bi, qi, 0, 0, 0, 0)),
             pool_spec,
             pool_spec,
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((nbpc, blk_sz, kh, d), k_pool.dtype),
+            pltpu.VMEM((nbpc, blk_sz, kh, d), v_pool.dtype),
+            pltpu.SemaphoreType.DMA,
         ],
         out_specs=(
             pl.BlockSpec((1, 1, kh, g, qc, d),

@@ -24,6 +24,31 @@ DEFAULT_BN = 256
 DEFAULT_BK = 256
 
 
+def tpu_contract(m: int, n: int, k: int, *, bm: int = DEFAULT_BM,
+                 bn: int = DEFAULT_BN, bk: int = DEFAULT_BK):
+    """Static lowering contract mirroring `systolic_matmul`'s pallas_call.
+
+    Shape/dtype geometry only (no tracing, no jax) — evaluated by
+    `repro.analysis.kernel_audit` over the autotune-reachable grid.
+    """
+    from repro.analysis import contracts as C
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    grid = (-(-m // bm), -(-n // bn), -(-k // bk))
+    return C.KernelGeometry(
+        kernel="kernels.systolic_gemm.systolic_matmul",
+        grid=grid,
+        operands=(
+            C.OperandSpec("a", (m, k), "int8", (bm, bk),
+                          lambda i, j, kk: (i, kk)),
+            C.OperandSpec("b", (k, n), "int8", (bk, bn),
+                          lambda i, j, kk: (kk, j)),
+            C.OperandSpec("o", (m, n), "int32", (bm, bn),
+                          lambda i, j, kk: (i, j)),
+        ),
+        tag=f"m{m}n{n}k{k}bm{bm}bn{bn}bk{bk}",
+    )
+
+
 def _kernel(a_ref, b_ref, o_ref):
     k_idx = pl.program_id(2)
 

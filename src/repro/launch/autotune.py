@@ -20,8 +20,11 @@ _MXU_LANE = 128                   # MXU tile edge: KV chunks below this waste it
 
 def paged_kernel_plan(max_len: int, block_size: int, *, batch: int = 1,
                       kv_heads: int = 1, attn_chunk: int = 1024,
-                      target_cells: int = 8,
-                      allow_splits: bool = False) -> Tuple[int, int]:
+                      target_cells: int = 8, allow_splits: bool = False,
+                      head_dim: Optional[int] = None, q_per_kv: int = 1,
+                      n_pool: Optional[int] = None,
+                      kv_dtype: str = "float32",
+                      vmem_budget: Optional[int] = None) -> Tuple[int, int]:
     """Pick (kv_chunk, n_splits) for `kernels.paged_attention`.
 
     ``kv_chunk``: the widest multiple of ``block_size`` that is <= the
@@ -36,6 +39,12 @@ def paged_kernel_plan(max_len: int, block_size: int, *, batch: int = 1,
     throughput mode), split so the grid reaches ~``target_cells`` cells
     (cores / MXU pipelines to fill), bounded by the chunk count — each split
     must keep >= 1 chunk.
+
+    With ``head_dim`` given the plan is additionally pruned through the
+    static lowering contract (`analysis.kernel_audit.prune_paged_plan`):
+    ``kv_chunk`` shrinks until the decode grid cell fits the TPU's tiling
+    and VMEM rules, so the planner never proposes a geometry Mosaic would
+    reject — a property test pins this (tests/test_analysis_audit.py).
     """
     width = -(-max_len // block_size)
     skv = width * block_size
@@ -44,10 +53,26 @@ def paged_kernel_plan(max_len: int, block_size: int, *, batch: int = 1,
     kv_chunk = max(kv_chunk, block_size)
     nk = -(-skv // kv_chunk)
     if not allow_splits or skv <= _MXU_LANE:
-        return kv_chunk, 1
-    cells = batch * kv_heads                      # decode: nq == 1
-    n_splits = max(1, min(nk, -(-target_cells // max(cells, 1))))
-    return kv_chunk, n_splits
+        n_splits = 1
+    else:
+        cells = batch * kv_heads                  # decode: nq == 1
+        n_splits = max(1, min(nk, -(-target_cells // max(cells, 1))))
+    if head_dim is None:
+        return kv_chunk, n_splits
+    from repro.analysis.kernel_audit import prune_paged_plan
+    return prune_paged_plan(kv_chunk, n_splits, max_len=max_len,
+                            block_size=block_size, batch=batch,
+                            kv_heads=kv_heads, head_dim=head_dim,
+                            q_per_kv=q_per_kv, n_pool=n_pool,
+                            kv_dtype=kv_dtype, vmem_budget=vmem_budget)
+
+
+def gemm_block_plan(m: int, n: int, k: int, **kw) -> Tuple[int, int, int]:
+    """TPU GEMM block picker, contract-pruned — see
+    `analysis.kernel_audit.gemm_block_plan` (re-exported here so launch-side
+    callers and `kernels.ops`' TPU path share one planner)."""
+    from repro.analysis.kernel_audit import gemm_block_plan as _plan
+    return _plan(m, n, k, **kw)
 
 
 def _mem_estimate(cfg: ModelConfig, shape: ShapeSpec, n_chips: int,

@@ -1,0 +1,41 @@
+"""Linter fixture: a model module with deliberately planted violations.
+
+NOT part of the shipping tree (lives under tests/fixtures/, outside the
+``src/repro`` lint root) — tests/test_no_gemm_bypass.py lints this file
+directly to pin the retired grep guard's coverage: every bypass the grep
+caught must still produce a lint finding, so rule regressions surface as
+test failures rather than silently-passing CI.
+"""
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def bad_lm_head(x, p):
+    return jnp.matmul(x, p["lm_head"])          # planted: jnp.matmul bypass
+
+
+def bad_einsum(x, p):
+    return jnp.einsum("btd,dv->btv", x, p["w"])  # planted: unsanctioned einsum
+
+
+def bad_operator(x, p):
+    return x @ p["w_up"]                         # planted: @ operator bypass
+
+
+def bad_dot_general(x, p):
+    return lax.dot_general(x, p["w"], (((1,), (0,)), ((), ())))
+
+
+def bad_unnamed_dot(x, p, dot, policy):
+    return dot(x, p["w"], policy)                # planted: dot without layer=
+
+
+def bad_prng(x):
+    return jax.random.PRNGKey(x.shape[0])        # planted: non-literal seed
+
+
+def sanctioned_lookalike(x, p):
+    # same equation as a sanctioned layers.py einsum — but this is NOT
+    # layers.py, so the (file, equation) allowlist must still flag it
+    return jnp.einsum("bkgqd,bkcd->bkgqc", x, p["probe"])

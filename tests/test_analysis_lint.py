@@ -1,0 +1,193 @@
+"""AST linter rules, suppression mechanics, baseline workflow, CLI gate
+(repro.analysis.lint / baseline / __main__).
+
+Each rule is exercised on planted sources in a throwaway tree; the shipped
+tree must lint clean (tests/test_analysis_audit.py pins the combined run,
+tests/test_no_gemm_bypass.py pins the gemm-bypass rule specifically).
+"""
+import json
+import pathlib
+import textwrap
+
+import pytest
+
+from repro.analysis import baseline, lint
+from repro.analysis.__main__ import main as cli_main
+from repro.analysis.findings import Report
+
+pytestmark = pytest.mark.analysis
+
+
+def _tree(tmp_path, files):
+    root = tmp_path / "repo"
+    for rel, src in files.items():
+        p = root / "src" / "repro" / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    return root
+
+
+def _rules(findings, suppressed=False):
+    return sorted(f.rule for f in findings if f.suppressed == suppressed)
+
+
+# ---------------------------------------------------------------------------
+# per-rule units
+# ---------------------------------------------------------------------------
+
+def test_host_sync_scope_is_jit_steps_only(tmp_path):
+    root = _tree(tmp_path, {"launch/steps.py": """
+        import jax
+        import numpy as np
+
+        def make_train_step(cfg):
+            def train_step(state, batch):
+                loss = float(state["loss"])          # flagged
+                host = np.asarray(batch["x"])        # flagged
+                tok = state["tok"].item()            # flagged
+                state["x"].block_until_ready()       # flagged
+                n = int(8)                           # literal: fine
+                return loss, host, tok, n
+            return jax.jit(train_step)
+
+        def host_helper(x):
+            return float(x), np.asarray(x)           # outside a step: fine
+
+        def directly_jitted(x):
+            return x.item()                          # flagged via jax.jit(...)
+        step = jax.jit(directly_jitted)
+        """})
+    fs, _ = lint.lint_tree(root)
+    host = [f for f in fs if f.rule == "host-sync-in-step"]
+    assert len(host) == 5, [f.format() for f in fs]
+    assert all("host_helper" not in f.message for f in host)
+
+
+def test_global_random_rule(tmp_path):
+    root = _tree(tmp_path, {"launch/trace.py": """
+        import random
+        import numpy as np
+
+        def bad():
+            a = random.random()                      # flagged: stdlib global
+            b = np.random.rand(3)                    # flagged: global np RNG
+            c = np.random.default_rng()              # flagged: unseeded
+            return a, b, c
+
+        def good(seed):
+            rng = np.random.default_rng(seed)        # sanctioned idiom
+            return rng.random(3)
+        """})
+    fs, _ = lint.lint_tree(root)
+    assert _rules(fs) == ["global-random"] * 3, [f.format() for f in fs]
+
+
+def test_prng_discipline_rule(tmp_path):
+    src = """
+        import jax
+
+        def bad_seed(step):
+            return jax.random.PRNGKey(step)          # flagged: non-literal
+
+        def reuse(key, shape):
+            a = jax.random.normal(key, shape)
+            b = jax.random.uniform(key, shape)       # flagged: key reuse
+            return a + b
+
+        def good(key, shape):
+            k1, k2 = jax.random.split(key)
+            return jax.random.normal(k1, shape) + jax.random.uniform(k2, shape)
+
+        def root():
+            return jax.random.PRNGKey(0)             # literal: fine
+        """
+    root = _tree(tmp_path, {"models/mod.py": src,
+                            "launch/sampling.py": src})
+    fs, _ = lint.lint_tree(root)
+    prng = [f for f in fs if f.rule == "prng-discipline"]
+    # sampling.py (the fold-in idiom's home) is out of scope for this rule
+    assert len(prng) == 2 and all("sampling" not in f.path for f in prng), \
+        [f.format() for f in fs]
+
+
+def test_suppression_comment_same_line_and_above(tmp_path):
+    root = _tree(tmp_path, {"models/m.py": """
+        import jax.numpy as jnp
+
+        def f(x, p):
+            a = jnp.matmul(x, p["w"])  # lint: allow(gemm-bypass): unit fixture
+            # lint: allow(gemm-bypass): line-above form
+            b = jnp.matmul(x, p["w"])
+            c = jnp.matmul(x, p["w"])  # lint: allow(dot-layer): wrong rule
+            return a, b, c
+        """})
+    fs, _ = lint.lint_tree(root)
+    assert _rules(fs, suppressed=True) == ["gemm-bypass"] * 2
+    active = [f for f in fs if not f.suppressed]
+    assert _rules(active) == ["gemm-bypass"]         # wrong-rule allow ignored
+    assert fs[0].suppress_reason == "unit fixture"
+
+
+def test_suppressed_findings_do_not_gate():
+    rep = Report()
+    from repro.analysis.findings import Finding
+    sup = Finding("lint", "gemm-bypass", "error", "a.py", 3, "s", "m",
+                  suppressed=True, suppress_reason="why")
+    new = Finding("lint", "gemm-bypass", "error", "a.py", 9, "s2", "m")
+    rep.extend([sup, new])
+    assert rep.active() == [new]
+    assert rep.active([new.fingerprint]) == []
+
+
+# ---------------------------------------------------------------------------
+# baseline workflow + CLI gate
+# ---------------------------------------------------------------------------
+
+def _bad_repo(tmp_path):
+    root = _tree(tmp_path, {"models/m.py": """
+        import jax.numpy as jnp
+
+        def f(x, p):
+            return jnp.matmul(x, p["w"])
+        """})
+    return root
+
+
+def test_cli_gate_and_baseline_roundtrip(tmp_path, capsys):
+    root = _bad_repo(tmp_path)
+    args = ["--root", str(root), "--only", "lint"]
+    # new finding -> exit 1
+    assert cli_main(args + ["--format", "json"]) == 1
+    out = json.loads(capsys.readouterr().out)
+    assert out["counts"]["new"] == 1
+    assert out["findings"][0]["rule"] == "gemm-bypass"
+
+    # accept as baseline -> exit 0, fingerprints persisted
+    assert cli_main(args + ["--write-baseline"]) == 0
+    capsys.readouterr()
+    fps = baseline.load(root / baseline.DEFAULT_NAME)
+    assert fps == [out["findings"][0]["fingerprint"]]
+    assert cli_main(args) == 0
+
+    # a *second* violation still gates: baseline covers only accepted debt
+    m = root / "src" / "repro" / "models" / "m.py"
+    m.write_text(m.read_text() +
+                 "\ndef g(x, p):\n    return jnp.matmul(x, p['v'])\n")
+    assert cli_main(args) == 1
+
+    # fixing the original finding: stale fingerprint is pruned on rewrite
+    assert cli_main(args + ["--write-baseline"]) == 0
+    capsys.readouterr()
+    assert len(baseline.load(root / baseline.DEFAULT_NAME)) == 2
+
+
+def test_shipped_baseline_is_empty():
+    repo = pathlib.Path(__file__).parent.parent
+    assert baseline.load(repo / baseline.DEFAULT_NAME) == []
+
+
+def test_baseline_rejects_unknown_schema(tmp_path):
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps({"schema_version": 99, "fingerprints": []}))
+    with pytest.raises(ValueError):
+        baseline.load(p)

@@ -1,127 +1,69 @@
 """Tier-1 guard: no GEMM over parameter leaves may bypass `core.gemm.dot`.
 
-Every weight matmul in `src/repro/models/` must route through the unified
-`dot` entry point so per-layer `GemmPolicy` overrides (and `gemm.bind`
-weight-stationary preparation) can target it. This test greps the model
-sources and fails fast when a new bypass appears:
+PR 8 migrated the original regex grep to the AST linter
+(`repro.analysis.lint`, rule ``gemm-bypass`` — allowlists moved there
+verbatim); this module now pins two things:
 
-* `jnp.matmul` is banned outright — after PR 3 none remain (lm_head,
-  patch_proj, and the MoE expert einsums all went through `dot`).
-* `jnp.einsum` is allowed only for the *sanctioned* attention / SSM / xLSTM
-  inner contractions, which act on activations and recurrent state — never on
-  parameter leaves. The allowlist pins the exact equations; a new einsum
-  (or repurposing an existing equation for weights) must either move to
-  `dot` or be explicitly sanctioned here with justification.
-
-* `@` / `jnp.dot` / `lax.dot_general` over parameter leaves are likewise
-  banned, with a short sanction list for gating projections (MoE router,
-  xLSTM gate pre-activations) whose outputs select/modulate rather than
-  carry the GEMM workload — approximating them would change routing, not
-  arithmetic.
+* the shipping ``models/`` tree lints clean (zero unsuppressed findings),
+  and the allowlists are not stale (every sanctioned entry still matched);
+* **no false-negative regression**: a fixture module with every bypass shape
+  the grep used to catch (``jnp.matmul``, unsanctioned einsum, ``@``,
+  ``lax.dot_general``, unnamed ``dot``) still produces the expected
+  findings — including an einsum whose *equation* is sanctioned but whose
+  *file* is not.
 """
 import pathlib
-import re
 
-import pytest
+from repro.analysis import lint
 
-MODELS_DIR = pathlib.Path(__file__).parent.parent / "src" / "repro" / "models"
-
-# (file, equation) pairs of sanctioned activation/state einsums
-SANCTIONED_EINSUMS = {
-    # flash attention scores / values (activation x activation)
-    ("layers.py", "bkgqd,bkcd->bkgqc"),
-    ("layers.py", "bkgqc,bkcd->bkgqd"),
-    # Mamba2 SSD chunked recurrence (activations x recurrent state)
-    ("ssm.py", "bihn,bjhn->bijh"),
-    ("ssm.py", "bijh,bijh,bjh,bjhp->bihp"),
-    ("ssm.py", "bihn,bhpn,bih->bihp"),
-    ("ssm.py", "bjh,bjh,bjhp,bjhn->bhpn"),
-    ("ssm.py", "bh,bhp,bhn->bhpn"),
-    ("ssm.py", "bhn,bhpn->bhp"),
-    # mLSTM chunked matrix-memory recurrence
-    ("xlstm.py", "bihd,bjhd->bijh"),
-    ("xlstm.py", "bijh,bijh,bjhd->bihd"),
-    ("xlstm.py", "bihe,bhde,bih->bihd"),
-    ("xlstm.py", "bijh,bijh->bih"),
-    ("xlstm.py", "bihd,bhd,bih->bih"),
-    ("xlstm.py", "bjh,bjhd,bjhe->bhde"),
-    ("xlstm.py", "bjh,bjhd->bhd"),
-}
-
-EINSUM_RE = re.compile(r"jnp\.einsum\(\s*\"([^\"]+)\"", re.MULTILINE)
-
-# `@` / dot_general expressions that are sanctioned gating computations
-# (substring match against the offending source line)
-SANCTIONED_OPERATOR_GEMMS = {
-    ("moe.py", '@ p["router"]'),          # expert-routing logits
-    ("xlstm.py", '@ p["w_if"]'),          # mLSTM input/forget gate pre-acts
-    ("xlstm.py", "@ r_in.astype"),        # sLSTM recurrent gate pre-acts
-}
-
-OPERATOR_GEMM_MARKERS = (" @ ", "jnp.dot(", "lax.dot_general(")
+REPO_ROOT = pathlib.Path(__file__).parent.parent
+FIXTURE = REPO_ROOT / "tests" / "fixtures" / "models" / "planted_bypass.py"
 
 
-def _model_sources():
-    files = sorted(MODELS_DIR.glob("*.py"))
-    assert files, f"no model sources found under {MODELS_DIR}"
-    return files
+def _rules(findings):
+    return [f.rule for f in findings if not f.suppressed]
 
 
-def test_no_jnp_matmul_in_models():
-    offenders = []
-    for f in _model_sources():
-        for i, line in enumerate(f.read_text().splitlines(), 1):
-            if "jnp.matmul" in line:
-                offenders.append(f"{f.name}:{i}: {line.strip()}")
+def test_shipping_models_lint_clean():
+    findings, _ = lint.lint_tree(REPO_ROOT)
+    offenders = [f.format() for f in findings
+                 if not f.suppressed and f.rule in ("gemm-bypass", "dot-layer")]
     assert not offenders, (
-        "jnp.matmul GEMMs bypass GemmPolicy/bind — route them through "
-        "core.gemm.dot(a, b, policy, layer=...):\n" + "\n".join(offenders))
+        "GEMM bypass / unnamed dot in models/ — route through "
+        "core.gemm.dot(a, b, policy, layer=...) or sanction in "
+        "repro.analysis.lint:\n" + "\n".join(offenders))
 
 
-def test_no_operator_gemms_in_models():
-    offenders = []
-    for f in _model_sources():
-        for i, line in enumerate(f.read_text().splitlines(), 1):
-            if not any(m in line for m in OPERATOR_GEMM_MARKERS):
-                continue
-            if any(f.name == fn and frag in line
-                   for fn, frag in SANCTIONED_OPERATOR_GEMMS):
-                continue
-            offenders.append(f"{f.name}:{i}: {line.strip()}")
-    assert not offenders, (
-        "`@`/jnp.dot/lax.dot_general GEMM bypasses GemmPolicy/bind — route "
-        "it through core.gemm.dot, or sanction a genuine gating projection "
-        "in SANCTIONED_OPERATOR_GEMMS:\n" + "\n".join(offenders))
+def test_sanction_lists_not_stale():
+    """Every allowlist entry still matches code — prune the list with the code."""
+    _, used = lint.lint_tree(REPO_ROOT)
+    stale = lint.stale_sanctions(used)
+    assert not stale, f"sanctioned entries no longer in the code: {stale}"
 
 
-def test_operator_sanction_list_not_stale():
-    present = []
-    for f in _model_sources():
-        text = f.read_text()
-        for fn, frag in SANCTIONED_OPERATOR_GEMMS:
-            if f.name == fn and frag in text:
-                present.append((fn, frag))
-    stale = SANCTIONED_OPERATOR_GEMMS - set(present)
-    assert not stale, f"sanctioned operator GEMMs no longer in the code: {stale}"
+def test_linter_flags_planted_bypasses():
+    findings = lint.lint_file(REPO_ROOT, FIXTURE)
+    by_line = {}
+    for f in findings:
+        by_line.setdefault(f.rule, []).append(f)
+
+    bypass = by_line.get("gemm-bypass", [])
+    msgs = " | ".join(f.message for f in bypass)
+    assert any("jnp.matmul" in f.message for f in bypass), msgs
+    assert any("einsum('btd,dv->btv')" in f.message for f in bypass), msgs
+    assert any("`@`" in f.message for f in bypass), msgs
+    assert any("lax.dot_general" in f.message for f in bypass), msgs
+    # sanctioned equation in the WRONG file must still be flagged
+    assert any("bkgqd,bkcd->bkgqc" in f.site for f in bypass), msgs
+    assert len(bypass) == 5, msgs
+
+    assert len(by_line.get("dot-layer", [])) == 1
+    assert len(by_line.get("prng-discipline", [])) == 1
 
 
-def test_all_einsums_sanctioned():
-    offenders = []
-    for f in _model_sources():
-        for eq in EINSUM_RE.findall(f.read_text()):
-            if (f.name, eq) not in SANCTIONED_EINSUMS:
-                offenders.append(f"{f.name}: einsum({eq!r})")
-    assert not offenders, (
-        "unsanctioned jnp.einsum in models/ — parameter-leaf GEMMs must use "
-        "core.gemm.dot; genuinely activation-only contractions must be added "
-        "to SANCTIONED_EINSUMS with justification:\n" + "\n".join(offenders))
-
-
-def test_sanctioned_list_not_stale():
-    """Every sanctioned entry still exists — prune the allowlist with the code."""
-    present = set()
-    for f in _model_sources():
-        for eq in EINSUM_RE.findall(f.read_text()):
-            present.add((f.name, eq))
-    stale = SANCTIONED_EINSUMS - present
-    assert not stale, f"sanctioned einsums no longer in the code: {stale}"
+def test_planted_matmul_is_line_accurate():
+    """Findings point at the offending line (fixture pins line stability)."""
+    findings = lint.lint_file(REPO_ROOT, FIXTURE)
+    matmul = next(f for f in findings if "jnp.matmul" in f.message)
+    src_line = FIXTURE.read_text().splitlines()[matmul.line - 1]
+    assert "jnp.matmul" in src_line
