@@ -371,8 +371,11 @@ def serve_engine_bench(fast: bool = False):
     fixed KV budget, paged block pool vs contiguous per-slot regions) and
     **chunked_prefill** (useful tokens/s on a bursty arrival trace, chunked
     prefill vs the contiguous engine's one-request-per-dispatch prefill).
+    The PR-9 **multi_step_n{4,8}** cells measure fused decode horizons
+    (`ServeEngine(multi_step=n)`) against the per-step engine on a
+    decode-heavy trace, recording syncs-per-token alongside throughput.
     The scheduled CI job diffs this file against the committed baseline and
-    fails on a >20% drop in the same-run relative metrics — engine-vs-lockstep speedup, concurrency ratio, chunked-prefill speedup (benchmarks/compare.py).
+    fails on a >20% drop in the same-run relative metrics — engine-vs-lockstep speedup, concurrency ratio, chunked-prefill speedup, multi-step speedup (benchmarks/compare.py).
     """
     import json
     import os
@@ -584,6 +587,58 @@ def serve_engine_bench(fast: bool = False):
           f"{row['per_request_tok_per_s']} tok/s cold; warm "
           f"{row['warm_chunked_tok_per_s']} vs "
           f"{row['warm_per_request_tok_per_s']})")
+    # --- multi-step cell: fused decode horizons, syncs-per-token ------------
+    # Decode-heavy trace (long generations, short prompts): the regime where
+    # the per-token host sync dominates the scheduler. n=1 is the per-step
+    # engine; n in {4, 8} dispatch fused lax.scan horizons with on-device
+    # retirement (one (n, B) token sync per horizon). `speedup` (useful
+    # tok/s vs the same-run n=1 row) is gated by benchmarks/compare.py like
+    # every relative metric; syncs_per_token records the 1/n sync bound.
+    n_ms = 8 if fast else 12
+    ms_trace = engine_mod.make_poisson_trace(
+        n_ms, rate=4.0, vocab_size=cfg.vocab_size, prompt_lens=(4, 6),
+        gen_lens=(48, 64, 96), seed=3)
+    useful_ms = sum(r.max_new_tokens for r in ms_trace)
+    ms_len = (max(len(r.prompt) for r in ms_trace)
+              + max(r.max_new_tokens for r in ms_trace))
+    pol_ms = gemm.GemmPolicy(backend="mxu_int8", k=4)
+    p_ms = model.bind_params(params, pol_ms)
+
+    def run_ms(n):
+        eng = engine_mod.ServeEngine(cfg, p_ms, policy=pol_ms,
+                                     max_slots=slots, max_len=ms_len,
+                                     multi_step=n)
+        fin = eng.run(list(ms_trace))
+        return eng.stats, {rid: f.tokens for rid, f in fin.items()}
+
+    base_ms, base_streams = None, None
+    for n in (1, 4, 8):
+        run_ms(n)                                       # warm compile caches
+        ms_s, st_ms, streams = np.inf, None, None
+        for _ in range(reps):
+            (st_i, str_i), dt = engine_mod.elapsed(lambda: run_ms(n))
+            if dt < ms_s:
+                ms_s, st_ms, streams = dt, st_i, str_i
+        assert st_ms["generated_tokens"] == useful_ms, (st_ms, useful_ms)
+        if n == 1:
+            base_ms, base_streams = ms_s, streams
+        else:                                           # parity is the gate
+            for rid in base_streams:
+                np.testing.assert_array_equal(base_streams[rid], streams[rid])
+        row = {"cell": f"multi_step_n{n}", "backend": "mxu_int8",
+               "bound": True, "n": n, "slots": slots, "requests": n_ms,
+               "useful_tokens": useful_ms,
+               "engine_tok_per_s": round(useful_ms / ms_s, 1),
+               "per_step_tok_per_s": round(useful_ms / base_ms, 1),
+               "host_syncs": st_ms["host_syncs"],
+               "syncs_per_token": st_ms["syncs_per_token"],
+               "speedup": round(base_ms / ms_s, 2)}
+        results.append(row)
+        print(f"serve_multi_step_n{n},{ms_s / useful_ms * 1e6:.0f},"
+              f"speedup={row['speedup']}x vs per-step "
+              f"({row['engine_tok_per_s']} vs {row['per_step_tok_per_s']} "
+              f"tok/s), {row['syncs_per_token']} syncs/token")
+
     path = os.path.join(os.path.dirname(__file__), "..",
                         "BENCH_serve_engine.json")
     with open(path, "w") as f:

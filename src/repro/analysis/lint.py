@@ -12,8 +12,10 @@ Subsumes (and retires) the regex grep guard that used to live in
   call must pass ``layer=`` so per-layer policy overrides can target it.
 * ``host-sync-in-step`` — inside the jit-step functions built by
   ``launch/steps.py`` / ``launch/engine.py`` (the nested defs of
-  ``make_*_step`` / ``_build_steps`` / ``_build_paged_steps``, plus any
-  function passed to ``jax.jit``), no host transfers: ``.item()``,
+  ``make_*_step`` / ``_build_steps`` / ``_build_paged_steps`` /
+  ``_build_multi_step`` — which includes the multi-step dispatcher and its
+  ``lax.scan`` horizon body — plus any function passed to ``jax.jit`` or
+  used as a ``jax.lax.scan`` body), no host transfers: ``.item()``,
   ``np.asarray``/``np.array``, ``jax.device_get``, ``.block_until_ready()``,
   or ``float()``/``int()``/``bool()`` on non-literal values.
 * ``global-random`` — no stdlib ``random`` and no ``np.random.*`` module
@@ -73,7 +75,9 @@ SANCTIONED_OPERATOR_GEMMS = {
 }
 
 # jit-step builder functions whose nested defs are the host-sync scope
-_STEP_BUILDER_RE = re.compile(r"^(make_\w*_step|_build_steps|_build_paged_steps)$")
+# (make_multi_step — the fused-horizon dispatcher — matches make_\w*_step)
+_STEP_BUILDER_RE = re.compile(
+    r"^(make_\w*_step|_build_steps|_build_paged_steps|_build_multi_step)$")
 _HOST_SYNC_FILES = ("launch/steps.py", "launch/engine.py")
 
 _SAMPLER_FNS = {
@@ -198,11 +202,14 @@ def _lint_models(ctx: _FileCtx, used_sanctions: set) -> Iterable[Finding]:
 # ---------------------------------------------------------------------------
 
 def _jit_wrapped_names(tree: ast.Module) -> set:
-    """Names of functions passed to jax.jit anywhere in the module."""
+    """Names of functions passed to jax.jit anywhere in the module, plus
+    functions used as ``jax.lax.scan`` bodies — a scan body traced from
+    inside a jit step (the multi-step horizon) is jit-step scope even when
+    it is defined outside a recognized builder."""
     names = set()
     for node in ast.walk(tree):
-        if isinstance(node, ast.Call) and \
-                _dotted(node.func) in ("jax.jit", "jit"):
+        if isinstance(node, ast.Call) and _dotted(node.func) in (
+                "jax.jit", "jit", "jax.lax.scan", "lax.scan"):
             for arg in node.args[:1]:
                 if isinstance(arg, ast.Name):
                     names.add(arg.id)
@@ -223,9 +230,12 @@ def _lint_host_sync(ctx: _FileCtx) -> Iterable[Finding]:
             else:
                 yield from step_defs(child, inside_builder)
 
-    for fn in step_defs(ctx.tree, False):
+    seen_sites = set()                       # a nested step def is walked by
+    for fn in step_defs(ctx.tree, False):    # its parent too: report once
         for node in ast.walk(fn):
             if not isinstance(node, ast.Call):
+                continue
+            if (node.lineno, node.col_offset) in seen_sites:
                 continue
             target = _dotted(node.func)
             attr = node.func.attr if isinstance(node.func, ast.Attribute) else ""
@@ -244,6 +254,7 @@ def _lint_host_sync(ctx: _FileCtx) -> Iterable[Finding]:
                 msg = (f"{target}() on a traced value concretizes it "
                        "(host sync) inside a jit step")
             if msg:
+                seen_sites.add((node.lineno, node.col_offset))
                 yield ctx.finding(
                     "host-sync-in-step", node,
                     f"{msg} — keep jit-step bodies device-only "

@@ -46,6 +46,7 @@ device sync and runs its quarantine/restore/replay protocol. Eager callers
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import functools
 from typing import Any, Dict, List, Optional, Sequence, Tuple
@@ -76,15 +77,22 @@ class AbftFaultError(RuntimeError):
 
 @dataclasses.dataclass(frozen=True)
 class Fault:
-    """One detected integrity violation."""
+    """One detected integrity violation.
+
+    ``substep`` attributes a fault recorded inside a fused multi-step
+    horizon (`launch.steps.make_multi_step`) to the scan sub-step that
+    produced it; ``None`` for per-step detections.
+    """
     layer: str
     kind: str            # "weight" | "table" | "output" | "memory" | "aux"
     deviation: float
     threshold: float
+    substep: Optional[int] = None
 
     def __str__(self) -> str:
+        sub = f" substep={self.substep}" if self.substep is not None else ""
         return (f"[{self.kind}] layer={self.layer!r} deviation={self.deviation}"
-                f" > threshold={self.threshold}")
+                f" > threshold={self.threshold}{sub}")
 
 
 # --------------------------------------------------------------------------
@@ -93,11 +101,33 @@ class Fault:
 
 _LEDGER: List[Fault] = []
 
+# Stack of active sub-step tags (traced or concrete) — see `substep`.
+_SUBSTEP: List[Any] = []
 
-def _record_cb(dev, *, layer: str, kind: str, threshold: float) -> None:
+
+@contextlib.contextmanager
+def substep(idx):
+    """Tag every fault recorded in this scope with a horizon sub-step index.
+
+    ``idx`` may be a *traced* value (the multi-step dispatcher's scan
+    iteration index): it rides into the fault ledger through the same
+    ``jax.debug.callback`` as the deviation, so a fault detected inside a
+    fused ``n``-step dispatch is attributed to the exact sub-step that
+    produced it (`Fault.substep`).
+    """
+    _SUBSTEP.append(idx)
+    try:
+        yield
+    finally:
+        _SUBSTEP.pop()
+
+
+def _record_cb(dev, sub=None, *, layer: str, kind: str,
+               threshold: float) -> None:
     d = float(dev)
     if d > threshold:
-        _LEDGER.append(Fault(layer, kind, d, threshold))
+        _LEDGER.append(Fault(layer, kind, d, threshold,
+                             substep=None if sub is None else int(sub)))
 
 
 def record(dev, *, layer: str, kind: str, threshold: float = 0.0) -> None:
@@ -105,14 +135,19 @@ def record(dev, *, layer: str, kind: str, threshold: float = 0.0) -> None:
 
     Traced values are routed through ``jax.debug.callback`` (the host-side
     append happens when the step actually executes); concrete values append
-    immediately.
+    immediately. An active `substep` tag is forwarded alongside the
+    deviation.
     """
-    if isinstance(dev, jax.core.Tracer):
-        jax.debug.callback(functools.partial(_record_cb, layer=layer,
-                                             kind=kind, threshold=threshold),
-                           dev)
+    sub = _SUBSTEP[-1] if _SUBSTEP else None
+    if isinstance(dev, jax.core.Tracer) or isinstance(sub, jax.core.Tracer):
+        cb = functools.partial(_record_cb, layer=layer, kind=kind,
+                               threshold=threshold)
+        if sub is None:
+            jax.debug.callback(cb, dev)
+        else:
+            jax.debug.callback(cb, dev, sub)
     else:
-        _record_cb(dev, layer=layer, kind=kind, threshold=threshold)
+        _record_cb(dev, sub, layer=layer, kind=kind, threshold=threshold)
 
 
 def drain_faults() -> List[Fault]:

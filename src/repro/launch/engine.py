@@ -101,7 +101,7 @@ def _build_steps(cfg: ModelConfig, policy: GemmPolicy):
     model = model_api.get_model(cfg)
 
     def admit(params, batch, big_cache, zero_cache1, slot, start_pos, state,
-              new_temp, new_topk, new_topp, new_key):
+              new_temp, new_topk, new_topp, new_key, new_eos, new_budget):
         logits, cache1 = model.prefill(params, batch, zero_cache1,
                                        policy=policy)
         axes = model_api.cache_batch_axes(big_cache)
@@ -126,7 +126,9 @@ def _build_steps(cfg: ModelConfig, policy: GemmPolicy):
             temperature=state["temperature"].at[slot].set(new_temp),
             top_k=state["top_k"].at[slot].set(new_topk),
             top_p=state["top_p"].at[slot].set(new_topp),
-            keys=state["keys"].at[slot].set(new_key))
+            keys=state["keys"].at[slot].set(new_key),
+            eos=state["eos"].at[slot].set(new_eos),
+            budget=state["budget"].at[slot].set(new_budget))
         return first, big_cache, state
 
     def decode(params, cache, state):
@@ -182,7 +184,8 @@ def _build_paged_steps(cfg: ModelConfig, policy: GemmPolicy,
             last_tok=jnp.where(emit, tok, state["last_tok"][:, 0])[:, None])
         return tok, cache, state
 
-    def admit(cache, state, slot, new_temp, new_topk, new_topp, new_key):
+    def admit(cache, state, slot, new_temp, new_topk, new_topp, new_key,
+              new_eos, new_budget):
         cache = model_api.reset_slot(cache, slot)
         state = dict(
             state,
@@ -192,7 +195,9 @@ def _build_paged_steps(cfg: ModelConfig, policy: GemmPolicy,
             temperature=state["temperature"].at[slot].set(new_temp),
             top_k=state["top_k"].at[slot].set(new_topk),
             top_p=state["top_p"].at[slot].set(new_topp),
-            keys=state["keys"].at[slot].set(new_key))
+            keys=state["keys"].at[slot].set(new_key),
+            eos=state["eos"].at[slot].set(new_eos),
+            budget=state["budget"].at[slot].set(new_budget))
         return cache, state
 
     def retire(state, slot):
@@ -201,8 +206,29 @@ def _build_paged_steps(cfg: ModelConfig, policy: GemmPolicy,
     return jax.jit(chunk), jax.jit(admit), jax.jit(retire)
 
 
+def _build_multi_step(cfg: ModelConfig, policy: GemmPolicy, n: int,
+                      paged_kernel=None):
+    """Jitted fixed-horizon dispatcher (`steps.make_multi_step`): one scan
+    covers ``n`` decode sub-steps with device-resident EOS/budget
+    retirement; the scheduler syncs one ``(n, B)`` token block per horizon
+    instead of one token vector per step."""
+    return jax.jit(steps_mod.make_multi_step(cfg, policy, n,
+                                             paged_kernel=paged_kernel))
+
+
 _cached_build_steps = functools.lru_cache(maxsize=64)(_build_steps)
 _cached_build_paged = functools.lru_cache(maxsize=64)(_build_paged_steps)
+_cached_build_multi = functools.lru_cache(maxsize=64)(_build_multi_step)
+
+
+def cached_multi_step(cfg: ModelConfig, policy: GemmPolicy, n: int,
+                      paged_kernel=None):
+    """`_build_multi_step` memoized by (cfg, policy, n, paged_kernel) — same
+    executable-sharing contract as `cached_steps`."""
+    try:
+        return _cached_build_multi(cfg, policy, n, paged_kernel=paged_kernel)
+    except TypeError:
+        return _build_multi_step(cfg, policy, n, paged_kernel=paged_kernel)
 
 
 def cached_steps(cfg: ModelConfig, policy: GemmPolicy, paged: bool = False,
@@ -282,6 +308,15 @@ class ServeEngine:
     an int > 1 enables split-KV flash decoding with that many splits
     (log-sum-exp combine — tolerance-level parity, long contexts only).
     See `launch.autotune.paged_kernel_plan` for picking the split count.
+
+    ``multi_step=n`` (n > 1) fuses ``n`` decode sub-steps into one
+    device-resident ``lax.scan`` horizon (`steps.make_multi_step`): EOS and
+    budget retirement run on device, the host syncs one ``(n, B)`` token
+    block per horizon instead of one vector per token, and scheduler
+    bookkeeping (admission, deadlines, retirement) runs at horizon
+    boundaries only. Streams stay bit-identical to ``multi_step=1`` and to
+    solo lockstep; mixed prefill/decode steps fall back to the per-step
+    path automatically. See docs/serving.md "Multi-step dispatch".
     """
 
     def __init__(self, cfg: ModelConfig, params: PyTree, *,
@@ -291,12 +326,15 @@ class ServeEngine:
                  n_blocks: Optional[int] = None, prefill_chunk: int = 8,
                  paged_kernel=None, queue_limit: Optional[int] = None,
                  validate_pool: Optional[bool] = None,
-                 max_step_retries: int = 2, retry_backoff_s: float = 0.0):
+                 max_step_retries: int = 2, retry_backoff_s: float = 0.0,
+                 retry_backoff_cap_s: float = 1.0, multi_step: int = 1):
         if cfg.family == "audio":
             raise ValueError("encoder-only arch has no decode step")
         if paged_kernel and not paged:
             raise ValueError("paged_kernel requires paged=True (the fused "
                              "kernel reads through block tables)")
+        if multi_step < 1:
+            raise ValueError(f"multi_step must be >= 1, got {multi_step}")
         self.cfg = cfg
         self.params = params
         self.policy = policy
@@ -305,6 +343,8 @@ class ServeEngine:
                               else validate_pool)
         self.max_step_retries = max_step_retries
         self.retry_backoff_s = retry_backoff_s
+        self.retry_backoff_cap_s = retry_backoff_cap_s
+        self.multi_step = multi_step
         self.model = model_api.get_model(cfg)
         self.n_slots = max_slots
         self.max_len = max_len
@@ -347,6 +387,11 @@ class ServeEngine:
             "top_k": jnp.zeros(b, jnp.int32),
             "top_p": jnp.ones(b, jnp.float32),
             "keys": jnp.zeros((b, 2), jnp.uint32),
+            # device-resident retirement (multi-step horizons): per-slot EOS
+            # id (-1 = none) and clamped token budget — the scan flips
+            # `active` itself when a slot finishes mid-horizon
+            "eos": jnp.full(b, -1, jnp.int32),
+            "budget": jnp.zeros(b, jnp.int32),
         }
         self.active = np.zeros(b, bool)            # host mirror
         self.slot_req: List[Optional[Request]] = [None] * b
@@ -358,6 +403,8 @@ class ServeEngine:
         self.step_count = 0
         self.decode_steps = 0
         self.peak_active = 0                 # measured, both engine modes
+        self.host_syncs = 0                  # token-block device->host syncs
+        self.backoff_s_total = 0.0           # measured retry wait (stats)
         # reliability counters, surfaced through `stats` and serve.py
         self.events = {REJECTED_QUEUE_FULL: 0, "cancelled": 0,
                        "deadline_ttft": 0, "deadline_total": 0,
@@ -370,6 +417,10 @@ class ServeEngine:
         else:
             self._admit_step, self._decode, self._retire = cached_steps(cfg,
                                                                         policy)
+        if multi_step > 1:
+            self._multi = cached_multi_step(
+                cfg, policy, multi_step,
+                paged_kernel=paged_kernel if paged else None)
 
         # ABFT scrub state: pristine params reference (JAX arrays are
         # immutable, so an injected flip *replaces* leaves on self.params and
@@ -426,6 +477,13 @@ class ServeEngine:
             n += req.input_embeds.shape[0]
         return n
 
+    def _eos_of(self, req: Request) -> int:
+        """Effective EOS token id, ``-1`` = none. The host-side retirement
+        check and the device-resident retirement mask (multi-step horizons)
+        are both driven by this value, so their decisions provably agree."""
+        eos = req.eos_id if req.eos_id is not None else self.eos_id
+        return -1 if eos is None else int(eos)
+
     def _reserved_blocks(self, req: Request) -> int:
         """Worst-case block footprint: prompt + clamped budget, minus the
         final token whose KV is never written."""
@@ -442,7 +500,8 @@ class ServeEngine:
         self.cache, self.state = self._admit_paged_step(
             self.cache, self.state, slot, jnp.float32(sp.temperature),
             jnp.int32(sp.top_k), jnp.float32(sp.top_p),
-            sampling.request_key(sp.seed, req.rid))
+            sampling.request_key(sp.seed, req.rid),
+            jnp.int32(self._eos_of(req)), jnp.int32(self._budget(req)))
         self.active[slot] = True
         self.slot_req[slot] = req
         self.slot_out[slot] = []
@@ -465,10 +524,12 @@ class ServeEngine:
         first, self.cache, self.state = self._admit_step(
             self.params, batch, self.cache, self._zero_cache1, slot, start,
             self.state, jnp.float32(sp.temperature), jnp.int32(sp.top_k),
-            jnp.float32(sp.top_p), sampling.request_key(sp.seed, req.rid))
+            jnp.float32(sp.top_p), sampling.request_key(sp.seed, req.rid),
+            jnp.int32(self._eos_of(req)), jnp.int32(self._budget(req)))
         self.active[slot] = True
         self.slot_req[slot] = req
         self.slot_out[slot] = [int(first)]
+        self.host_syncs += 1                 # the fused admit syncs `first`
         self.slot_admitted[slot] = self.step_count
         if self._guard:                      # admit wrote the slot's cache
             self._cache_fp = abft.tree_fingerprint(self._scrub_view())
@@ -508,8 +569,8 @@ class ServeEngine:
     def _maybe_retire(self, slot: int) -> None:
         req = self.slot_req[slot]
         out = self.slot_out[slot]
-        eos = req.eos_id if req.eos_id is not None else self.eos_id
-        if eos is not None and out and out[-1] == eos:
+        eos = self._eos_of(req)
+        if eos >= 0 and out and out[-1] == eos:
             self._retire_slot(slot, "eos")
         elif len(out) >= self._budget(req):
             self._retire_slot(slot, "length")
@@ -718,6 +779,7 @@ class ServeEngine:
             return
         tok, self.cache, self.state = dispatched
         tok_np = np.asarray(tok)             # the one per-step device sync
+        self.host_syncs += 1
         if self._guard:
             self._cache_fp = abft.tree_fingerprint(self._scrub_view())
         self.step_count += 1
@@ -741,6 +803,68 @@ class ServeEngine:
             if emit[s]:
                 self.slot_out[s].append(int(tok_np[s]))
                 self._maybe_retire(s)
+
+    def _multi_horizon(self) -> None:
+        """One fused ``multi_step``-sub-step decode horizon (single dispatch).
+
+        The device runs ``n`` chained decode sub-steps under ``lax.scan``
+        (`steps.make_multi_step`): sampling streams fold per-token inside the
+        scan, and the device-resident retirement mask (EOS / budget) freezes
+        a slot that finishes mid-horizon so its cache and position stop
+        advancing with no host involvement. The host syncs exactly one
+        ``(n, B)`` token block per horizon, then replays its per-sub-step
+        bookkeeping from it — ``-1`` marks sub-steps on which a slot emitted
+        nothing, so trim-past-EOS holds by construction. Admission,
+        deadlines, and retirement run at horizon boundaries only
+        (``step_count`` advances by ``n``; see docs/serving.md for the
+        retirement-lag semantics).
+        """
+        n = self.multi_step
+        live = np.flatnonzero(self.active)
+        if self.paged:
+            # horizon-aware alloc-on-write: cover the worst case (all n
+            # sub-steps live) up front; ensure_horizon clamps to the
+            # admit-time reservation, which the device-side budget mask
+            # provably never writes past
+            tables_dirty = self._tables_dev is None
+            for s in live:
+                tables_dirty |= self.pool.ensure_horizon(
+                    s, int(self.slot_pos[s]) + n)
+            if tables_dirty:
+                self._tables_dev = jnp.asarray(self.pool.tables)
+            self.cache = dict(self.cache, block_tables=self._tables_dev)
+        # recovery composes unchanged: cache/state are only assigned on
+        # success, so a retry replays the whole horizon from the pre-horizon
+        # snapshot and the replay is bit-identical
+        dispatched = self._dispatch(
+            lambda: self._multi(self.params, self.cache, self.state))
+        if dispatched is None:               # quarantined: horizon consumed
+            self.step_count += n
+            return
+        toks, self.cache, self.state = dispatched
+        tok_np = np.asarray(toks)            # the one per-*horizon* sync
+        self.host_syncs += 1
+        if self._guard:
+            self._cache_fp = abft.tree_fingerprint(self._scrub_view())
+        self.step_count += n
+        b = self.n_slots
+        for j in range(n):
+            live_j = int((tok_np[j] >= 0).sum())
+            if live_j:
+                self.decode_steps += 1
+            if self.paged:
+                self.occ["slot_steps"] += b
+                self.occ["slot_active_steps"] += live_j
+                self.occ["block_steps"] += self.pool.spec.n_blocks
+                self.occ["block_alloc_steps"] += self.pool.allocated_blocks
+                self.occ["decode_tokens"] += live_j
+        for s in live:
+            emitted = tok_np[:, s]
+            emitted = emitted[emitted >= 0]
+            self.slot_out[s].extend(int(t) for t in emitted)
+            if self.paged:
+                self.slot_pos[s] += len(emitted)
+            self._maybe_retire(s)
 
     # --- fault detection & recovery (policy.guard != "none") ----------------
 
@@ -802,6 +926,29 @@ class ServeEngine:
         self._tables_dev = None
         self._cache_fp = abft.tree_fingerprint(self._scrub_view())
 
+    def _backoff_wait(self, attempts: int) -> None:
+        """Retry backoff as a monotonic-deadline wait.
+
+        The old implementation blocked in one uncapped ``time.sleep`` — a
+        high attempt count (or a large ``retry_backoff_s``) could stall the
+        scheduler far past the step budget. The wait is now capped by
+        ``retry_backoff_cap_s``, sleeps in short slices against a
+        ``time.monotonic`` deadline (immune to wall-clock jumps), and the
+        time actually spent is surfaced in ``stats["backoff_s_total"]``.
+        """
+        if not self.retry_backoff_s:
+            return
+        want = self.retry_backoff_s * attempts
+        if self.retry_backoff_cap_s is not None:
+            want = min(want, self.retry_backoff_cap_s)
+        t0 = time.monotonic()
+        deadline = t0 + want
+        remaining = want
+        while remaining > 0:
+            time.sleep(min(remaining, 0.02))
+            remaining = deadline - time.monotonic()
+        self.backoff_s_total += time.monotonic() - t0
+
     def _dispatch(self, step_fn):
         """Run one jitted step under the recovery protocol.
 
@@ -833,8 +980,7 @@ class ServeEngine:
                 self.events["step_retries"] += 1
                 if attempts > self.max_step_retries:
                     raise
-                if self.retry_backoff_s:
-                    time.sleep(self.retry_backoff_s * attempts)
+                self._backoff_wait(attempts)
             except abft.AbftFaultError as e:
                 self.events["faults_detected"] += len(e.faults)
                 if not self.paged:
@@ -848,8 +994,7 @@ class ServeEngine:
                 if attempts > self.max_step_retries:
                     raise
                 self._restore_known_good({f.kind for f in e.faults})
-                if self.retry_backoff_s:
-                    time.sleep(self.retry_backoff_s * attempts)
+                self._backoff_wait(attempts)
 
     def step(self) -> None:
         """Enforce deadlines, admit what fits, run one batched ragged step."""
@@ -874,12 +1019,25 @@ class ServeEngine:
             self.step_count += 1             # idle tick (waiting on arrivals)
             return
         if self.paged:
-            self._paged_step()
+            # fused horizons only apply while every live slot is decoding:
+            # a prefilling slot needs per-chunk host orchestration, and
+            # falling back to the per-step path keeps streams bit-identical
+            # (token values are batch-composition independent)
+            if self.multi_step > 1 and all(
+                    self.slot_prefill_off[s] is None
+                    for s in np.flatnonzero(self.active)):
+                self._multi_horizon()
+            else:
+                self._paged_step()
+            return
+        if self.multi_step > 1:
+            self._multi_horizon()
             return
         next_tok, cache, state = self._dispatch(
             lambda: self._decode(self.params, self.cache, self.state))
         self.cache, self.state = cache, state
         next_np = np.asarray(next_tok)       # the one per-step device sync
+        self.host_syncs += 1
         if self._guard:
             self._cache_fp = abft.tree_fingerprint(self._scrub_view())
         self.step_count += 1
@@ -904,7 +1062,13 @@ class ServeEngine:
         out: Dict[str, Any] = {
             "steps": self.step_count, "decode_steps": self.decode_steps,
             "generated_tokens": gen, "finished": len(self.finished),
-            "peak_active_slots": self.peak_active}
+            "peak_active_slots": self.peak_active,
+            # host-overhead telemetry: device->host token syncs (admit +
+            # per-step / per-horizon blocks) and measured retry backoff
+            "multi_step": self.multi_step,
+            "host_syncs": self.host_syncs,
+            "syncs_per_token": round(self.host_syncs / max(1, gen), 4),
+            "backoff_s_total": round(self.backoff_s_total, 6)}
         out.update(self.events)              # reliability counters
         if self.paged:
             occ = self.occ

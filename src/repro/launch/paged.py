@@ -120,6 +120,21 @@ class BlockPool:
         self.peak_allocated = max(self.peak_allocated, self.allocated_blocks)
         return True
 
+    def ensure_horizon(self, slot: int, upto_tokens: int) -> bool:
+        """Horizon-aware alloc-on-write: like :meth:`ensure`, but clamps the
+        target to the slot's admit-time reservation.
+
+        A multi-step horizon conservatively asks for coverage of ``pos + n``
+        tokens before dispatch; near the end of a request that overshoots
+        the reservation (the final token's KV is never written, and the
+        device-side retirement mask stops all writes at the budget), so the
+        overshoot is provably never touched and clamping is safe. The
+        reserve-on-admit invariant — a live request can never fail
+        alloc-on-write — carries over unchanged.
+        """
+        cap = int(self._reserved[slot]) * self.spec.block_size
+        return self.ensure(slot, min(int(upto_tokens), cap))
+
     def release(self, slot: int) -> None:
         """Free-on-retire: return the slot's blocks, clear its table row."""
         self._free.extend(reversed(self._owned[slot]))

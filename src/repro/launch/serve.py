@@ -160,6 +160,11 @@ def main(argv=None):
                          "paged-attention kernel; N=1 keeps the bit-exact "
                          "sequential KV scan, N>1 enables split-KV flash "
                          "decoding with N splits (0 = gather path)")
+    ap.add_argument("--multi-step", type=int, default=1, metavar="N",
+                    help="engine: fuse N decode sub-steps into one "
+                         "device-resident lax.scan horizon (on-device "
+                         "EOS/budget retirement, one host sync per horizon; "
+                         "1 = per-step dispatch)")
     ap.add_argument("--queue-limit", type=int, default=0,
                     help="engine: bound the admission queue — overflow is "
                          "rejected with status 'rejected_queue_full' "
@@ -222,6 +227,7 @@ def main(argv=None):
                                      max_slots=args.batch, max_len=max_len,
                                      eos_id=args.eos_id, paged=args.paged,
                                      queue_limit=args.queue_limit or None,
+                                     multi_step=args.multi_step,
                                      **kw)
         t0 = time.time()
         finished = eng.run(requests)
@@ -231,6 +237,9 @@ def main(argv=None):
               f"{st['generated_tokens']} tokens in {dt:.2f}s "
               f"({st['generated_tokens'] / dt:.1f} tok/s) over "
               f"{st['decode_steps']} decode steps")
+        print(f"host syncs: {st['host_syncs']} "
+              f"({st['syncs_per_token']:.3f}/token, "
+              f"multi_step={st['multi_step']})")
         if args.paged:
             tok_total = max(1, st["prefill_tokens"] + st["decode_tokens"])
             print(f"occupancy: slots {st['slot_utilization']:.1%} "

@@ -18,10 +18,13 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeSpec
+from repro.core import abft
 from repro.core.gemm import EXACT, GemmPolicy
 from repro.models import api as model_api
 from repro.optim import adamw, schedule
 from repro.sharding import specs as sh
+
+from . import sampling
 
 PyTree = Any
 
@@ -151,6 +154,91 @@ def make_chunk_step(cfg: ModelConfig, policy: GemmPolicy = EXACT,
                                 policy=policy, batch_axes=batch_axes, **kw)
 
     return chunk_step
+
+
+def make_multi_step(cfg: ModelConfig, policy: GemmPolicy = EXACT, n: int = 8,
+                    batch_axes=(), paged_kernel=None):
+    """Device-resident multi-step decode: a fixed-``n`` ``lax.scan`` over the
+    unified chunk step, so one dispatch covers ``n`` decode sub-steps and the
+    host syncs a single ``(n, B)`` token block per horizon instead of one
+    token vector per step.
+
+    Everything the per-step scheduler used to do between decode dispatches
+    moves inside the scan:
+
+    * **sampling streams** — each sub-step folds the per-slot counters into
+      the request keys (``fold_in(base_key, i)`` for token ``i``), exactly
+      the per-step engine's stream.
+    * **positions / paged write cursors** — advance by the per-slot active
+      mask; paged writes land through the block tables the engine ensured to
+      cover the whole horizon before dispatch.
+    * **retirement** — EOS detection (per-slot id, ``-1`` = none) and
+      max-new-tokens accounting run on device: a slot that finishes
+      mid-horizon flips its own ``active`` bit, and its remaining sub-steps
+      are ``q_len == 0`` no-ops (dump-block / where-frozen writes, no
+      position advance) — tokens past an in-horizon EOS are reported as
+      ``-1`` and can never reach a served stream.
+    * **early exit** — an ``n_splits``-style mask: once every slot has
+      retired, the remaining sub-steps skip the model entirely via
+      ``lax.cond``.
+
+    ABFT integration: each sub-step's traced fault records are tagged with
+    the scan index (``core.abft.substep``), so a fault detected inside the
+    fused horizon is attributed to the exact sub-step that produced it; the
+    engine scrubs fingerprints at horizon boundaries (around the dispatch).
+
+    Requires ``state`` to carry the device-retirement leaves ``eos`` and
+    ``budget`` (``(B,) int32``) alongside the per-step engine state. Returns
+    ``(tok_block, cache, state)`` with ``tok_block: (n, B) int32`` where
+    ``-1`` marks sub-steps on which a slot emitted nothing."""
+    if n < 1:
+        raise ValueError(f"multi-step horizon must be >= 1, got {n}")
+    step_fn = make_chunk_step(cfg, policy, batch_axes=batch_axes,
+                              paged_kernel=paged_kernel)
+
+    def multi_step(params, cache, state):
+        def sub_step(carry, i):
+            cache, state = carry
+
+            def live(cache, state):
+                active = state["active"]
+                q_len = active.astype(jnp.int32)
+                with abft.substep(i):
+                    logits, cache = step_fn(params, state["last_tok"], cache,
+                                            state["positions"], q_len)
+                # token i of a request samples with fold_in(base_key, i) —
+                # bit-identical to the per-step engine's stream
+                keys = jax.vmap(jax.random.fold_in)(state["keys"],
+                                                    state["counters"])
+                tok = sampling.sample_tokens(logits[:, 0].astype(jnp.float32),
+                                             state["temperature"],
+                                             state["top_k"], state["top_p"],
+                                             keys)
+                # device-resident retirement: the EOS-producing sub-step is
+                # the slot's last (its input token's KV is already written);
+                # later sub-steps freeze it via q_len == 0
+                done = (tok == state["eos"]) | (state["counters"] + 1
+                                                >= state["budget"])
+                state = dict(
+                    state,
+                    positions=state["positions"] + q_len,
+                    counters=state["counters"] + q_len,
+                    last_tok=jnp.where(active, tok,
+                                       state["last_tok"][:, 0])[:, None],
+                    active=active & ~done)
+                return (cache, state), jnp.where(active, tok, -1)
+
+            def idle(cache, state):
+                return (cache, state), jnp.full_like(state["counters"], -1)
+
+            return jax.lax.cond(jnp.any(state["active"]), live, idle,
+                                cache, state)
+
+        (cache, state), toks = jax.lax.scan(sub_step, (cache, state),
+                                            jnp.arange(n))
+        return toks, cache, state
+
+    return multi_step
 
 
 def bind_serving_params(cfg: ModelConfig, params, policy: GemmPolicy, **kw):

@@ -63,6 +63,38 @@ def test_host_sync_scope_is_jit_steps_only(tmp_path):
     assert all("host_helper" not in f.message for f in host)
 
 
+def test_host_sync_covers_scan_bodies(tmp_path):
+    # the multi-step dispatcher traces its horizon body via jax.lax.scan —
+    # a scan body is jit-step scope even when defined outside a builder
+    root = _tree(tmp_path, {"launch/steps.py": """
+        import jax
+        import numpy as np
+
+        def body(carry, x):
+            tok = np.asarray(carry["tok"])           # flagged
+            n = float(carry["n"])                    # flagged
+            return carry, tok + n
+
+        def make_multi_step(cfg):
+            def multi_step(state):
+                def sub_step(carry, i):
+                    carry["x"].block_until_ready()   # flagged: builder scope
+                    return carry, i
+                return jax.lax.scan(sub_step, state, None, length=4)
+            return jax.jit(multi_step)
+
+        def drive(state):
+            return jax.lax.scan(body, state, None, length=8)
+
+        def host_side(state):
+            return np.asarray(state)                 # outside a step: fine
+        """})
+    fs, _ = lint.lint_tree(root)
+    host = [f for f in fs if f.rule == "host-sync-in-step"]
+    assert len(host) == 3, [f.format() for f in fs]
+    assert all("host_side" not in f.message for f in host)
+
+
 def test_global_random_rule(tmp_path):
     root = _tree(tmp_path, {"launch/trace.py": """
         import random

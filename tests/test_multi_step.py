@@ -1,0 +1,295 @@
+"""Multi-step fused-horizon dispatch (PR 9): parity + device retirement.
+
+Pins the `ServeEngine(multi_step=n)` contract (`steps.make_multi_step`):
+
+* **Bit-parity**: multi-step streams equal `multi_step=1` and the solo
+  lockstep reference — all six backends, bound/unbound, paged gather +
+  paged kernel, contiguous, mixed prefill/decode traces, and a hypothesis
+  property over random Poisson traces.
+* **Device-resident retirement / trim-past-EOS**: tokens a slot would have
+  produced after its in-horizon EOS never reach `slot_out`, for every
+  horizon n in {1, 2, 4, 8} with EOS landing on each sub-step offset.
+* **Host-overhead telemetry**: `multi_step=8` bounds host syncs per
+  generated token to <= 1/8 on a decode-heavy trace (`stats` counters).
+* **Reliability**: capped monotonic retry backoff (`backoff_s_total`),
+  per-sub-step ABFT fault attribution (`core.abft.substep`), guard-clean
+  horizons, and params-fault recovery replaying a whole horizon.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # deterministic fallback, see _hypothesis_fallback.py
+    from _hypothesis_fallback import given, settings, strategies as st
+
+from repro.configs import ARCHS, reduced
+from repro.core import abft, gemm
+from repro.launch import engine as E
+from repro.launch import faults as F
+from repro.launch import sampling
+from repro.launch.serve import lockstep_generate
+from repro.models import get_model
+
+CFG = reduced(ARCHS["smollm-360m"])
+PARAMS = get_model(CFG).init_params(jax.random.PRNGKey(0))
+LENS = ((5, 4), (8, 6), (3, 5), (6, 3))
+SHORT_LENS = ((4, 3), (6, 4), (3, 3))
+BACKENDS = ("exact", "mxu_int8", "approx_lut", "approx_onehot", "approx_delta")
+
+
+def _requests(cfg, lens, *, arrivals=None, seed=0, params=sampling.GREEDY):
+    rng = np.random.default_rng(seed)
+    return [E.Request(
+        rid=rid, prompt=rng.integers(0, cfg.vocab_size, pl).astype(np.int32),
+        max_new_tokens=gl, params=params,
+        arrival=0 if arrivals is None else arrivals[rid])
+        for rid, (pl, gl) in enumerate(lens)]
+
+
+def _engine(params=PARAMS, policy=gemm.EXACT, cfg=CFG, **kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_len", 16)
+    return E.ServeEngine(cfg, params, policy=policy, **kw)
+
+
+def _assert_streams(fin_a, fin_b):
+    assert sorted(fin_a) == sorted(fin_b)
+    for rid in fin_a:
+        np.testing.assert_array_equal(fin_a[rid].tokens, fin_b[rid].tokens,
+                                      err_msg=f"rid={rid} stream diverged")
+
+
+# --- bit-parity grid ---------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("bound", (False, True))
+def test_multi_step_parity_all_backends(backend, bound):
+    """multi_step=4 paged streams == multi_step=1 == solo lockstep, every
+    backend, raw and `gemm.bind`-bound params."""
+    if bound and backend == "exact":
+        pytest.skip("binding is a no-op for exact — identical to unbound")
+    model = get_model(CFG)
+    pol = gemm.GemmPolicy(backend=backend, k=4)
+    p = model.bind_params(PARAMS, pol) if bound else PARAMS
+    lens = SHORT_LENS if backend in ("approx_lut", "approx_onehot") else LENS
+    fin1 = _engine(p, pol).run(_requests(CFG, lens))
+    fin4 = _engine(p, pol, multi_step=4).run(_requests(CFG, lens))
+    _assert_streams(fin1, fin4)
+    for r in _requests(CFG, lens):
+        ref = lockstep_generate(CFG, model, p, jnp.asarray(r.prompt[None]),
+                                r.max_new_tokens, policy=pol)
+        np.testing.assert_array_equal(fin4[r.rid].tokens, ref[0],
+                                      err_msg=f"rid={r.rid} != lockstep")
+
+
+@pytest.mark.parametrize("bound", (False, True))
+def test_multi_step_parity_oracle(bound):
+    # the bit-level oracle is slow: 1 layer, tiny vocab, short streams
+    import dataclasses
+    cfg = dataclasses.replace(CFG, n_layers=1, vocab_size=64)
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    pol = gemm.GemmPolicy(backend="approx_oracle", k=4)
+    p = model.bind_params(params, pol) if bound else params
+    lens = ((3, 2), (4, 3), (2, 2))
+    fin1 = _engine(p, pol, cfg=cfg, max_len=8, block_size=2).run(
+        _requests(cfg, lens))
+    fin2 = _engine(p, pol, cfg=cfg, max_len=8, block_size=2,
+                   multi_step=2).run(_requests(cfg, lens))
+    _assert_streams(fin1, fin2)
+
+
+def test_multi_step_parity_paged_kernel():
+    """Fused Pallas paged-attention reads inside the horizon scan: streams
+    bit-identical to the gather path at n_splits == 1."""
+    fin_gather = _engine(multi_step=4).run(_requests(CFG, LENS))
+    fin_kernel = _engine(multi_step=4, paged_kernel=1).run(
+        _requests(CFG, LENS))
+    _assert_streams(fin_gather, fin_kernel)
+
+
+def test_multi_step_parity_contiguous():
+    """multi_step on the contiguous engine (fused whole-prompt admit +
+    per-slot max_len regions) matches its own per-step mode and paged."""
+    fin_c1 = _engine(paged=False).run(_requests(CFG, LENS))
+    fin_c4 = _engine(paged=False, multi_step=4).run(_requests(CFG, LENS))
+    fin_p4 = _engine(multi_step=4).run(_requests(CFG, LENS))
+    _assert_streams(fin_c1, fin_c4)
+    _assert_streams(fin_c4, fin_p4)
+
+
+def test_multi_step_mixed_prefill_decode():
+    """Staggered arrivals force horizons to interleave with chunked-prefill
+    fallback steps; streams stay batch-composition independent (and the
+    sampled ones stay a function of (seed, rid, token index) only)."""
+    sp = sampling.SamplingParams(temperature=0.9, top_k=40, top_p=0.95,
+                                 seed=7)
+    for params in (sampling.GREEDY, sp):
+        reqs = lambda: _requests(CFG, LENS, arrivals=[0, 2, 5, 9],
+                                 params=params)
+        fin1 = _engine(prefill_chunk=3).run(reqs())
+        fin4 = _engine(prefill_chunk=3, multi_step=4).run(reqs())
+        _assert_streams(fin1, fin4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10 ** 6), n=st.sampled_from([2, 4, 8]))
+def test_multi_step_random_trace_property(seed, n):
+    """Hypothesis property: any random Poisson trace streams bit-identically
+    under multi_step=n and multi_step=1."""
+    reqs = lambda: E.make_poisson_trace(
+        5, rate=2.0, vocab_size=CFG.vocab_size, prompt_lens=(3, 5, 7),
+        gen_lens=(2, 4, 6, 9), seed=seed)
+    fin1 = _engine().run(reqs())
+    finn = _engine(multi_step=n).run(reqs())
+    _assert_streams(fin1, finn)
+
+
+# --- device-resident retirement / trim-past-EOS ------------------------------
+
+def test_trim_past_eos_every_offset():
+    """Tokens past an in-horizon EOS never reach `slot_out`: for every
+    horizon n and every sub-step offset, retiring on the token at that
+    offset yields exactly the per-step engine's trimmed stream."""
+    sp = sampling.SamplingParams(temperature=0.9, top_k=0, top_p=1.0, seed=3)
+    [probe] = _requests(CFG, [(5, 8)], params=sp)
+    tokens = _engine().run([probe])[0].tokens
+    assert len(tokens) == 8
+    for n in (1, 2, 4, 8):
+        for off in range(len(tokens)):
+            eos = int(tokens[off])
+            cut = int(np.argmax(tokens == eos)) + 1  # first occurrence
+            [req] = _requests(CFG, [(5, 8)], params=sp)
+            fin = _engine(eos_id=eos, multi_step=n).run([req])[0]
+            np.testing.assert_array_equal(
+                fin.tokens, tokens[:cut],
+                err_msg=f"n={n} off={off}: stream not trimmed at EOS")
+            assert fin.finish_reason == "eos", (n, off)
+            # the EOS token itself is the stream's last — nothing after it
+            assert int(fin.tokens[-1]) == eos
+
+
+def test_multi_step_honors_budget_mid_horizon():
+    """A slot whose token budget ends mid-horizon stops exactly there."""
+    for gl in (1, 2, 3, 5, 7):
+        fin1 = _engine().run(_requests(CFG, [(4, gl)]))
+        fin8 = _engine(multi_step=8).run(_requests(CFG, [(4, gl)]))
+        assert len(fin8[0].tokens) == gl
+        _assert_streams(fin1, fin8)
+        assert fin8[0].finish_reason == "length"
+
+
+# --- host-overhead telemetry -------------------------------------------------
+
+def test_multi_step_sync_budget():
+    """Decode-heavy trace: multi_step=8 needs <= 1/8 host syncs per
+    generated token (the acceptance bound) and far fewer than per-step."""
+    lens = ((4, 32), (4, 32))
+    e1 = _engine(max_len=40)
+    e1.run(_requests(CFG, lens))
+    e8 = _engine(max_len=40, multi_step=8)
+    fin = e8.run(_requests(CFG, lens))
+    gen = sum(len(f.tokens) for f in fin.values())
+    assert gen == 64
+    st1, st8 = e1.stats, e8.stats
+    assert st8["host_syncs"] < st1["host_syncs"]
+    assert st8["syncs_per_token"] <= 1 / 8, st8
+    assert st8["multi_step"] == 8 and st1["multi_step"] == 1
+
+
+def test_multi_step_rejects_bad_horizon():
+    with pytest.raises(ValueError, match="multi_step"):
+        _engine(multi_step=0)
+
+
+# --- reliability: backoff, ABFT attribution, recovery ------------------------
+
+def test_retry_backoff_capped_and_counted():
+    """Transient-failure backoff waits against a monotonic deadline, is
+    capped by `retry_backoff_cap_s`, and is surfaced in stats."""
+    inj = F.FaultInjector(0)
+    eng = _engine(retry_backoff_s=0.05, retry_backoff_cap_s=0.08,
+                  max_step_retries=3)
+    reqs = _requests(CFG, LENS)
+    with inj.failing_steps(eng, fail_at=[3], times=2):
+        fin = eng.run(reqs)
+    st = eng.stats
+    assert st["step_retries"] == 2
+    # attempt 1 waits 0.05s, attempt 2 is capped at 0.08s (not 0.10s)
+    assert 0.10 <= st["backoff_s_total"] <= 0.60, st["backoff_s_total"]
+    _assert_streams(fin, _engine().run(_requests(CFG, LENS)))
+
+
+def test_backoff_disabled_is_free():
+    inj = F.FaultInjector(0)
+    eng = _engine()                          # retry_backoff_s defaults to 0
+    with inj.failing_steps(eng, fail_at=[2], times=1):
+        eng.run(_requests(CFG, SHORT_LENS))
+    assert eng.stats["backoff_s_total"] == 0.0
+
+
+def test_abft_substep_attribution():
+    """Faults recorded inside a scan body under `abft.substep(i)` carry the
+    sub-step index through the traced callback."""
+    abft.drain_faults()
+
+    def body(carry, i):
+        with abft.substep(i):
+            abft.record(jnp.float32(2.0) + carry * 0, layer="scan.gemm",
+                        kind="checksum", threshold=1.0)
+        return carry, i
+
+    @jax.jit
+    def run(x):
+        return jax.lax.scan(body, x, jnp.arange(3))[0]
+
+    jax.block_until_ready(run(jnp.zeros(())))
+    faults = abft.drain_faults()
+    assert sorted(f.substep for f in faults) == [0, 1, 2]
+    assert all(f.layer == "scan.gemm" for f in faults)
+    assert "substep=" in str(faults[0])
+    # outside a substep scope the field stays None (per-step path unchanged)
+    abft.record(2.0, layer="plain", kind="checksum", threshold=1.0)
+    [plain] = abft.drain_faults()
+    assert plain.substep is None and "substep=" not in str(plain)
+
+
+DETECT = gemm.GemmPolicy(backend="approx_lut", k=4, guard="detect")
+
+
+def test_multi_step_guard_clean_parity():
+    """Guarded multi-step horizons: scrub at horizon boundaries, zero false
+    positives, streams identical to the unguarded per-step engine."""
+    unguarded = gemm.GemmPolicy(backend="approx_lut", k=4)
+    base = _engine(policy=unguarded).run(_requests(CFG, SHORT_LENS))
+    eng = _engine(policy=DETECT, multi_step=4)
+    fin = eng.run(_requests(CFG, SHORT_LENS))
+    assert eng.events["faults_detected"] == 0
+    assert eng.events["quarantines"] == 0
+    _assert_streams(fin, base)
+
+
+def test_multi_step_params_fault_replays_horizon():
+    """A params fault detected at a horizon boundary restores the pristine
+    snapshot and replays the whole horizon — bit-invisible in the stream."""
+    unguarded = gemm.GemmPolicy(backend="approx_lut", k=4)
+    base = _engine(policy=unguarded).run(_requests(CFG, SHORT_LENS))
+    inj = F.FaultInjector(7)
+    eng = _engine(policy=DETECT, multi_step=4)
+    orig = eng.step
+    struck = []
+
+    def step_fn():
+        if eng.step_count >= 3 and not struck:
+            struck.append(inj.strike_engine(eng, target="params"))
+        orig()
+
+    eng.step = step_fn
+    fin = eng.run(_requests(CFG, SHORT_LENS))
+    assert eng.events["faults_detected"] >= 1
+    assert eng.events["quarantines"] == 0
+    _assert_streams(fin, base)
