@@ -3,8 +3,9 @@
 Compares a freshly produced BENCH_serve_engine.json against the committed
 baseline and fails (exit 1) when any matched **relative** metric drops by
 more than ``--max-drop`` (default 20%). The gated metrics are same-run
-ratios — engine-vs-lockstep speedup, paged-vs-contiguous concurrency, and
-the chunked-vs-per-request prefill speedup — because absolute tokens/s is a
+ratios — engine-vs-lockstep speedup, paged-vs-contiguous and warm-vs-cold
+prefix-cache concurrency, the chunked-vs-per-request prefill speedup, and
+the prefix-cache warm-over-cold speedup — because absolute tokens/s is a
 property of the runner (a CI machine differs from the baseline's machine by
 far more than any real regression), while each row's ratio divides out the
 hardware: a >20% ratio drop means the engine lost ground against its own
@@ -29,7 +30,7 @@ GATED_KEYS = ("speedup", "speedup_vs_per_batch", "concurrency_ratio",
               "guarded_frac")
 # absolute throughputs: printed for context only
 INFO_KEYS = ("engine_tok_per_s", "paged_tok_per_s", "chunked_tok_per_s",
-             "guarded_tok_per_s")
+             "guarded_tok_per_s", "warm_tok_per_s")
 
 
 def row_key(row: dict) -> tuple:

@@ -374,8 +374,12 @@ def serve_engine_bench(fast: bool = False):
     The PR-9 **multi_step_n{4,8}** cells measure fused decode horizons
     (`ServeEngine(multi_step=n)`) against the per-step engine on a
     decode-heavy trace, recording syncs-per-token alongside throughput.
+    The PR-10 **prefix_cache** / **prefix_capacity** cells measure prefix
+    caching on a repeated shared-prefix trace: warm-over-cold useful tok/s
+    and peak concurrency at a fixed block budget, with in-bench stream
+    parity (cached == uncached, bit for bit).
     The scheduled CI job diffs this file against the committed baseline and
-    fails on a >20% drop in the same-run relative metrics — engine-vs-lockstep speedup, concurrency ratio, chunked-prefill speedup, multi-step speedup (benchmarks/compare.py).
+    fails on a >20% drop in the same-run relative metrics — engine-vs-lockstep speedup, concurrency ratio, chunked-prefill speedup, multi-step speedup, prefix-cache speedup and concurrency (benchmarks/compare.py).
     """
     import json
     import os
@@ -638,6 +642,94 @@ def serve_engine_bench(fast: bool = False):
               f"speedup={row['speedup']}x vs per-step "
               f"({row['engine_tok_per_s']} vs {row['per_step_tok_per_s']} "
               f"tok/s), {row['syncs_per_token']} syncs/token")
+
+    # --- prefix-cache cells: repeated shared-prefix traffic (PR 10) ---------
+    # Real serving repeats itself: one system prompt heads every request.
+    # Cell 1 (prefix_cache): warm engine (block sharing on) vs cold (off) on
+    # the same shared-prefix trace — `speedup` is warm-over-cold useful
+    # tok/s, gated by benchmarks/compare.py. Cell 2 (prefix_capacity): at
+    # one fixed small block budget, shared prefixes shrink each request's
+    # fresh-block footprint, so more requests fit concurrently —
+    # `concurrency_ratio` (warm peak / cold peak) is gated the same way.
+    # Both cells assert stream parity in-bench: sharing must not move a bit.
+    n_px = 6 if fast else 8
+    rng_px = np.random.default_rng(11)
+    sys_prompt = rng_px.integers(0, cfg.vocab_size, 48).astype(np.int32)
+    px_trace = []
+    for r in range(n_px):
+        tail = rng_px.integers(0, cfg.vocab_size, 2).astype(np.int32)
+        # the seeder runs alone; followers arrive once its prefill has
+        # published the shared blocks (50 tokens / chunk 8 = 7 steps)
+        px_trace.append(engine_mod.Request(
+            rid=r, prompt=np.concatenate([sys_prompt, tail]),
+            max_new_tokens=4, arrival=0 if r == 0 else 7))
+    useful_px = sum(r.max_new_tokens for r in px_trace)
+
+    def run_px(warm):
+        eng = engine_mod.ServeEngine(
+            cfg, params, max_slots=2, max_len=64, prefix_cache=warm)
+        fin = eng.run([engine_mod.Request(
+            rid=r.rid, prompt=r.prompt.copy(), max_new_tokens=r.max_new_tokens,
+            arrival=r.arrival) for r in px_trace])
+        return eng.stats, {rid: f.tokens for rid, f in fin.items()}
+
+    (st_w, str_w), _ = engine_mod.elapsed(lambda: run_px(True))   # warm jit
+    (st_c, str_c), _ = engine_mod.elapsed(lambda: run_px(False))
+    for rid in str_c:                                   # parity is the gate
+        np.testing.assert_array_equal(str_w[rid], str_c[rid])
+    warm_s = min(engine_mod.elapsed(lambda: run_px(True))[1]
+                 for _ in range(reps))
+    cold_s = min(engine_mod.elapsed(lambda: run_px(False))[1]
+                 for _ in range(reps))
+    row = {"cell": "prefix_cache", "requests": n_px,
+           "shared_prompt_tokens": int(len(sys_prompt)),
+           "prefix_hits": st_w["prefix_hits"],
+           "prefix_tokens_skipped": st_w["prefix_tokens_skipped"],
+           "warm_tok_per_s": round(useful_px / warm_s, 1),
+           "cold_tok_per_s": round(useful_px / cold_s, 1),
+           "speedup": round(cold_s / warm_s, 2)}
+    results.append(row)
+    print(f"serve_prefix_cache,{warm_s / useful_px * 1e6:.0f},"
+          f"speedup={row['speedup']}x warm vs cold "
+          f"({row['warm_tok_per_s']} vs {row['cold_tok_per_s']} tok/s), "
+          f"{row['prefix_hits']} hits / "
+          f"{row['prefix_tokens_skipped']} tokens skipped")
+
+    n_pc = 5 if fast else 7
+    pc_bs, pc_blocks = 4, 12
+    rng_pc = np.random.default_rng(13)
+    pc_head = rng_pc.integers(0, cfg.vocab_size, 16).astype(np.int32)
+    pc_trace = [engine_mod.Request(
+        rid=r,
+        prompt=np.concatenate(
+            [pc_head, rng_pc.integers(0, cfg.vocab_size, 2).astype(np.int32)]),
+        max_new_tokens=4, arrival=0 if r == 0 else 10)
+        for r in range(n_pc)]                           # 6 blocks, 4 shared
+
+    def run_pc(warm):
+        eng = engine_mod.ServeEngine(
+            cfg, params, max_slots=n_pc, max_len=24, block_size=pc_bs,
+            n_blocks=pc_blocks, prefill_chunk=6, prefix_cache=warm)
+        fin = eng.run([engine_mod.Request(
+            rid=r.rid, prompt=r.prompt.copy(), max_new_tokens=r.max_new_tokens,
+            arrival=r.arrival) for r in pc_trace])
+        return (eng.stats["peak_active_slots"],
+                {rid: f.tokens for rid, f in fin.items()})
+
+    peak_w, pcs_w = run_pc(True)
+    peak_c2, pcs_c = run_pc(False)
+    for rid in pcs_c:
+        np.testing.assert_array_equal(pcs_w[rid], pcs_c[rid])
+    row = {"cell": "prefix_capacity", "block_budget": pc_blocks,
+           "block_size": pc_bs, "requests": n_pc,
+           "blocks_per_request": 6, "shared_blocks_per_request": 4,
+           "warm_peak_concurrent": int(peak_w),
+           "cold_peak_concurrent": int(peak_c2),
+           "concurrency_ratio": round(peak_w / peak_c2, 2)}
+    results.append(row)
+    print(f"serve_prefix_capacity,0,"
+          f"warm={peak_w}req vs cold={peak_c2}req at "
+          f"{pc_blocks} blocks ({row['concurrency_ratio']}x concurrency)")
 
     path = os.path.join(os.path.dirname(__file__), "..",
                         "BENCH_serve_engine.json")

@@ -184,12 +184,14 @@ def _build_paged_steps(cfg: ModelConfig, policy: GemmPolicy,
             last_tok=jnp.where(emit, tok, state["last_tok"][:, 0])[:, None])
         return tok, cache, state
 
-    def admit(cache, state, slot, new_temp, new_topk, new_topp, new_key,
-              new_eos, new_budget):
+    def admit(cache, state, slot, start_pos, new_temp, new_topk, new_topp,
+              new_key, new_eos, new_budget):
+        # start_pos > 0 resumes a cached prefix: the slot's table already
+        # maps the shared blocks, so prefill picks up at the boundary
         cache = model_api.reset_slot(cache, slot)
         state = dict(
             state,
-            positions=state["positions"].at[slot].set(0),
+            positions=state["positions"].at[slot].set(start_pos),
             counters=state["counters"].at[slot].set(0),
             active=state["active"].at[slot].set(True),
             temperature=state["temperature"].at[slot].set(new_temp),
@@ -317,6 +319,19 @@ class ServeEngine:
     boundaries only. Streams stay bit-identical to ``multi_step=1`` and to
     solo lockstep; mixed prefill/decode steps fall back to the per-step
     path automatically. See docs/serving.md "Multi-step dispatch".
+
+    ``prefix_cache`` (paged mode, default on) shares KV blocks across
+    requests with equal prompt prefixes: admission matches a rolling-hash
+    key chain against resident blocks, attaches every leading hit to the
+    new slot's table, and prefills only the uncached tail; retirement
+    parks unreferenced cached blocks in an LRU evicted only under pool
+    pressure, and writes into shared blocks copy-on-write. Streams stay
+    bit-identical to an uncached run (the resumed prefill recomputes the
+    last prompt position, and block contents are a pure function of the
+    chain key). Automatically disabled for families with per-slot cache
+    state outside the pool (gemma3 ring buffers, hybrid SSM, xLSTM); VLM
+    requests carrying ``input_embeds`` are skipped per-request. See
+    docs/serving.md "Prefix caching".
     """
 
     def __init__(self, cfg: ModelConfig, params: PyTree, *,
@@ -327,7 +342,8 @@ class ServeEngine:
                  paged_kernel=None, queue_limit: Optional[int] = None,
                  validate_pool: Optional[bool] = None,
                  max_step_retries: int = 2, retry_backoff_s: float = 0.0,
-                 retry_backoff_cap_s: float = 1.0, multi_step: int = 1):
+                 retry_backoff_cap_s: float = 1.0, multi_step: int = 1,
+                 prefix_cache: bool = True):
         if cfg.family == "audio":
             raise ValueError("encoder-only arch has no decode step")
         if paged_kernel and not paged:
@@ -369,7 +385,23 @@ class ServeEngine:
             self.occ = {"slot_steps": 0, "slot_active_steps": 0,
                         "block_steps": 0, "block_alloc_steps": 0,
                         "prefill_tokens": 0, "decode_tokens": 0}
+            # prefix caching is sound only when every cache leaf lives in
+            # the shared pool: families with per-slot state outside it (ring
+            # buffers, SSM/xLSTM recurrent state) can't resume mid-prompt
+            # from shared blocks alone, so the cache degrades to off
+            pool_pure = isinstance(self.cache, dict) and all(
+                key == "block_tables" or key in model_api.PAGED_POOL_LEAVES
+                for key in self.cache)
+            self.prefix_cache = bool(prefix_cache and pool_pure)
+            self._prefix_seed = paged_mod.cache_seed(cfg, policy)
+            self._copy_blocks = steps_mod.make_copy_blocks_step()
+            self.slot_chain: List[Sequence[bytes]] = [()] * max_slots
+            self.slot_cacheable = [False] * max_slots
+            self.prefix_events = {"prefix_hits": 0,
+                                  "prefix_tokens_skipped": 0,
+                                  "prefix_invalidations": 0}
         else:
+            self.prefix_cache = False
             self.cache = self.model.init_cache(max_slots, max_len)
             # a pristine single-slot cache reused (never mutated) by every admit
             self._zero_cache1 = self.model.init_cache(1, max_len)
@@ -490,15 +522,50 @@ class ServeEngine:
         return self.pool.spec.blocks_for(self._start_len(req)
                                          + self._budget(req) - 1)
 
-    def _admit_paged(self, slot: int, req: Request) -> None:
+    def _cacheable(self, req: Request) -> bool:
+        """Per-request prefix-cache eligibility: VLM requests with patch
+        embeds have non-token prompt content the key chain can't identify."""
+        return self.prefix_cache and req.input_embeds is None
+
+    def _prefix_plan(self, req: Request):
+        """(chain keys, hit blocks, extra COW budget, resume offset).
+
+        Resuming at ``min(cached, start - 1)`` — never ``start`` — keeps the
+        first sampled token bit-identical to a cold prefill: the final chunk
+        recomputes at least the last prompt position's logits under the
+        exact per-request stream. When the whole prompt is cached that one
+        recomputed position rewrites the final attached block, the one
+        deterministic COW site admission budgets an extra fresh block for.
+        """
+        if not self._cacheable(req):
+            return (), [], 0, 0
+        start = self._start_len(req)
+        bs = self.pool.spec.block_size
+        keys = paged_mod.chain_keys(self._prefix_seed, req.prompt, bs,
+                                    start // bs)
+        hits = self.pool.match_prefix(keys)
+        cached = len(hits) * bs
+        resume = min(cached, start - 1)
+        extra_cow = 1 if cached >= start else 0
+        return keys, hits, extra_cow, resume
+
+    def _admit_paged(self, slot: int, req: Request, plan=None) -> None:
         start = self._start_len(req)
         if start > self.max_len:
             raise ValueError(f"request {req.rid}: prompt length {start} "
                              f"exceeds max_len {self.max_len}")
-        self.pool.reserve(slot, self._reserved_blocks(req))
+        keys, hits, extra_cow, resume = (self._prefix_plan(req)
+                                         if plan is None else plan)
+        self.pool.reserve(slot, self._reserved_blocks(req), hits=hits,
+                          extra_cow=extra_cow, written=resume)
+        if hits:
+            self._tables_dev = None          # attach rewrote the table row
+            self.prefix_events["prefix_hits"] += 1
+            self.prefix_events["prefix_tokens_skipped"] += resume
         sp = req.params
         self.cache, self.state = self._admit_paged_step(
-            self.cache, self.state, slot, jnp.float32(sp.temperature),
+            self.cache, self.state, slot, jnp.int32(resume),
+            jnp.float32(sp.temperature),
             jnp.int32(sp.top_k), jnp.float32(sp.top_p),
             sampling.request_key(sp.seed, req.rid),
             jnp.int32(self._eos_of(req)), jnp.int32(self._budget(req)))
@@ -506,8 +573,10 @@ class ServeEngine:
         self.slot_req[slot] = req
         self.slot_out[slot] = []
         self.slot_admitted[slot] = self.step_count
-        self.slot_prefill_off[slot] = 0
-        self.slot_pos[slot] = 0
+        self.slot_prefill_off[slot] = resume
+        self.slot_pos[slot] = resume
+        self.slot_chain[slot] = keys
+        self.slot_cacheable[slot] = self._cacheable(req)
         if self._guard:                      # admit wiped the slot's cache
             self._cache_fp = abft.tree_fingerprint(self._scrub_view())
 
@@ -543,15 +612,36 @@ class ServeEngine:
         return max(1, min(req.max_new_tokens,
                           self.max_len - self._start_len(req) + 1))
 
+    def _release_keys(self, slot: int) -> Sequence[bytes]:
+        """Content keys for every block the retiring slot fully wrote —
+        prompt *and* generated tokens, so a multi-turn follow-up whose
+        prompt extends this conversation matches the decode-produced blocks
+        too. KV position ``p`` always holds token ``p`` of the full
+        sequence, so the chain over ``prompt ++ out`` identifies them."""
+        req = self.slot_req[slot]
+        bs = self.pool.spec.block_size
+        full = int(self.slot_pos[slot]) // bs
+        if full == 0:
+            return ()
+        toks = np.concatenate([np.asarray(req.prompt, np.int32),
+                               np.asarray(self.slot_out[slot], np.int32)])
+        full = min(full, len(toks) // bs)
+        return paged_mod.chain_keys(self._prefix_seed, toks[:full * bs], bs)
+
     def _free_slot(self, slot: int) -> None:
         """Clear a slot's device flag, host mirrors, and (paged) blocks."""
+        if self.paged:
+            keys = (self._release_keys(slot)
+                    if self.slot_cacheable[slot] else ())
         self.active[slot] = False
         self.state = self._retire(self.state, slot)
         self.slot_req[slot] = None
         self.slot_out[slot] = []
         if self.paged:
-            self.pool.release(slot)          # free-on-retire
+            self.pool.release(slot, keys=keys)   # free-on-retire (or cache)
             self.slot_prefill_off[slot] = None
+            self.slot_chain[slot] = ()
+            self.slot_cacheable[slot] = False
             self._tables_dev = None          # force re-upload of the tables
             if self.validate_pool:
                 self.pool.check()            # leaks surface at retire time
@@ -601,25 +691,31 @@ class ServeEngine:
                 best = i
         return best
 
-    def _plan_preemption(self, req: Request, need: int) -> Optional[List[int]]:
-        """Victim slots to evict so `req` can reserve `need` blocks, or None.
+    def _plan_preemption(self, req: Request, fresh: int,
+                         hits: Sequence[int]) -> Optional[List[int]]:
+        """Victim slots to evict so `req` can reserve ``fresh`` new blocks
+        (on top of attaching the ``hits`` prefix blocks), or None.
 
         Only strictly-lower-effective-priority slots qualify; victims are
         taken most-recently-admitted first (least progress lost). Pure
-        planning — no side effects until the caller commits."""
+        planning — no side effects until the caller commits. A victim's
+        blocks that the new request's prefix hits cover are *not* counted as
+        gain (`BlockPool.can_admit` pins them right back), and a preempted
+        victim's own cached prefix survives in the index, so its replay
+        resumes from the shared blocks instead of re-prefilling."""
         pri = self._eff_priority(req)
         victims = sorted(
             (s for s in np.flatnonzero(self.active)
              if self._eff_priority(self.slot_req[s]) < pri),
             key=lambda s: (-int(self.slot_admitted[s]), -s))
-        avail = self.pool.spec.n_blocks - self.pool.reserved_blocks
         chosen: List[int] = []
         for s in victims:
-            if avail >= need:
+            if self.pool.can_admit(fresh, hits, exclude=chosen):
                 break
-            avail += int(self.pool._reserved[s])
             chosen.append(s)
-        return chosen if avail >= need else None
+        if not self.pool.can_admit(fresh, hits, exclude=chosen):
+            return None
+        return chosen
 
     def _enforce_deadlines(self) -> None:
         """Retire every live/queued request past its step budget (budgets
@@ -668,8 +764,14 @@ class ServeEngine:
                         f"request {req.rid} needs {need} blocks "
                         f"but the pool holds {self.pool.spec.n_blocks} — "
                         "raise n_blocks or lower max_new_tokens")
-                if not self.pool.can_reserve(need):
-                    victims = self._plan_preemption(req, need)
+                # the prefix plan is committed here: preempting victims may
+                # surface new cached blocks, but re-matching after eviction
+                # could pin more residents than the feasibility check saw
+                plan = self._prefix_plan(req)
+                keys, hits, extra_cow, resume = plan
+                fresh = need - len(hits) + extra_cow
+                if not self.pool.can_admit(fresh, hits):
+                    victims = self._plan_preemption(req, fresh, hits)
                     if victims is None:
                         return               # out of blocks: backpressure
                     del self.queue[idx]
@@ -678,10 +780,10 @@ class ServeEngine:
                     # effective priority for the next admission pass
                     for s in victims:
                         self.queue.appendleft(self._preempt_slot(s))
-                    self._admit_paged(slot, req)
+                    self._admit_paged(slot, req, plan)
                     continue
                 del self.queue[idx]
-                self._admit_paged(slot, req)
+                self._admit_paged(slot, req, plan)
             else:
                 del self.queue[idx]
                 self._admit(slot, req)
@@ -752,6 +854,7 @@ class ServeEngine:
                 emit[s] = True
                 tokens[s, 0] = self.slot_out[s][-1]
                 tables_dirty |= self.pool.ensure(s, int(self.slot_pos[s]) + 1)
+        self._apply_cow()
         if tables_dirty:
             self._tables_dev = jnp.asarray(self.pool.tables)
         self.cache = dict(self.cache, block_tables=self._tables_dev)
@@ -797,12 +900,33 @@ class ServeEngine:
                 self.occ["prefill_tokens"] += clen
                 if self.slot_prefill_off[s] == self._start_len(self.slot_req[s]):
                     self.slot_prefill_off[s] = None
+                    if self.slot_cacheable[s]:
+                        # prompt fully resident: publish its full blocks so
+                        # concurrent same-prefix admissions share them now,
+                        # not only after this request retires
+                        self.pool.publish(s, self.slot_chain[s])
             else:
                 self.slot_pos[s] += 1
                 self.occ["decode_tokens"] += 1
             if emit[s]:
                 self.slot_out[s].append(int(tok_np[s]))
                 self._maybe_retire(s)
+
+    def _apply_cow(self) -> None:
+        """Apply pending copy-on-write block clones on device (one fused
+        call over every pool leaf), then refresh the scrub fingerprint —
+        the clone is a legitimate cache rewrite, exactly like admit's slot
+        wipe, and must not read as corruption. Because the pool is
+        physically shared, the fingerprint covers each block once however
+        many tables map it."""
+        copies = self.pool.drain_copies()
+        if not copies:
+            return
+        src = jnp.asarray([c[0] for c in copies], jnp.int32)
+        dst = jnp.asarray([c[1] for c in copies], jnp.int32)
+        self.cache = self._copy_blocks(self.cache, src, dst)
+        if self._guard:
+            self._cache_fp = abft.tree_fingerprint(self._scrub_view())
 
     def _multi_horizon(self) -> None:
         """One fused ``multi_step``-sub-step decode horizon (single dispatch).
@@ -830,6 +954,7 @@ class ServeEngine:
             for s in live:
                 tables_dirty |= self.pool.ensure_horizon(
                     s, int(self.slot_pos[s]) + n)
+            self._apply_cow()
             if tables_dirty:
                 self._tables_dev = jnp.asarray(self.pool.tables)
             self.cache = dict(self.cache, block_tables=self._tables_dev)
@@ -915,9 +1040,18 @@ class ServeEngine:
         the prompt is bit-identical, so the corruption never reaches a
         stream) and rebuild the block pool and paged cache from scratch."""
         self.events["quarantines"] += 1
+        # invalidate the prefix index FIRST and mark every live slot
+        # non-cacheable: the preemption releases below must not (re)index
+        # blocks whose contents are suspect — a corrupted shared block
+        # served to a later same-prefix request would defeat the whole
+        # quarantine. Requeued victims re-prefill cold against the fresh
+        # pool's empty index.
+        self.pool.invalidate()
+        self.prefix_events["prefix_invalidations"] += 1
         order = sorted(np.flatnonzero(self.active),
                        key=lambda s: (-int(self.slot_admitted[s]), -s))
         for s in order:
+            self.slot_cacheable[s] = False
             self.queue.appendleft(self._preempt_slot(s))
         spec = self.pool.spec
         self.pool = paged_mod.BlockPool(spec, self.n_slots, self.max_len)
@@ -1082,7 +1216,16 @@ class ServeEngine:
                 "peak_allocated_blocks": self.pool.peak_allocated,
                 "prefill_tokens": occ["prefill_tokens"],
                 "decode_tokens": occ["decode_tokens"],
+                # prefix-cache counters: engine-side hit accounting plus the
+                # pool's sharing/COW/eviction totals (pool counters reset on
+                # a quarantine rebuild; hit counters are cumulative)
+                "prefix_cache": self.prefix_cache,
+                "prefix_shared_blocks": self.pool.shared_attached,
+                "prefix_cow_copies": self.pool.cow_copies,
+                "prefix_evicted_blocks": self.pool.evicted_blocks,
+                "prefix_cached_blocks": self.pool.cached_blocks,
             })
+            out.update(self.prefix_events)
         return out
 
 

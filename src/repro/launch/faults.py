@@ -154,6 +154,38 @@ class FaultInjector:
             poisoned = dict(poisoned, block_tables=cache["block_tables"])
         return poisoned, rec
 
+    def flip_cache_block(self, cache: PyTree, block: int, *,
+                         path: Optional[str] = None
+                         ) -> Tuple[PyTree, FaultRecord]:
+        """Flip one bit inside pool row ``block`` of one paged pool leaf —
+        the targeted form of :meth:`flip_cache` for attacking a *shared*
+        prefix block (pool leaves are ``(L, n_blocks + 1, block_size, ...)``
+        with the block axis at 1). The quarantine contract this arms the
+        test for: a corrupted block that several slot tables map must be
+        detected once and never re-served through the prefix index."""
+        from repro.models.api import PAGED_POOL_LEAVES
+        view = ({k: v for k, v in cache.items() if k in PAGED_POOL_LEAVES}
+                if isinstance(cache, dict) else cache)
+        leaves = _array_leaves(view)
+        if path is not None:
+            leaves = [kv for kv in leaves if path in kv[0]]
+            if not leaves:
+                raise ValueError(f"no pool leaf matching {path!r}")
+        key, leaf = leaves[self.rng.integers(len(leaves))]
+        arr = np.asarray(leaf)
+        layer = int(self.rng.integers(arr.shape[0]))
+        inner = int(np.prod(arr.shape[2:]))
+        off = int(self.rng.integers(inner))
+        index = (layer * arr.shape[1] + int(block)) * inner + off
+        bit = int(self.rng.integers(_bit_width(arr.dtype)))
+        flat, treedef = jax.tree_util.tree_flatten_with_path(cache)
+        new_leaves = [flip_bit(lf, index, bit)
+                      if jax.tree_util.keystr(p) == key else lf
+                      for p, lf in flat]
+        rec = FaultRecord("cache", key, index, bit, f"block={int(block)}")
+        self.records.append(rec)
+        return jax.tree_util.tree_unflatten(treedef, new_leaves), rec
+
     def strike_engine(self, engine, *, target: str = "params",
                       path: Optional[str] = None) -> FaultRecord:
         """Inject into a live ``ServeEngine`` between steps: replaces

@@ -160,6 +160,15 @@ def main(argv=None):
                          "paged-attention kernel; N=1 keeps the bit-exact "
                          "sequential KV scan, N>1 enables split-KV flash "
                          "decoding with N splits (0 = gather path)")
+    ap.add_argument("--prefix-cache", dest="prefix_cache",
+                    action="store_true", default=True,
+                    help="engine: share KV blocks across requests with equal "
+                         "prompt prefixes — hash-keyed block index, "
+                         "copy-on-write, LRU eviction (default; paged only)")
+    ap.add_argument("--no-prefix-cache", dest="prefix_cache",
+                    action="store_false",
+                    help="engine: disable prefix caching (every admission "
+                         "re-prefills from token zero)")
     ap.add_argument("--multi-step", type=int, default=1, metavar="N",
                     help="engine: fuse N decode sub-steps into one "
                          "device-resident lax.scan horizon (on-device "
@@ -218,7 +227,8 @@ def main(argv=None):
             kw = {"block_size": args.block_size,
                   "n_blocks": args.n_blocks or None,
                   "prefill_chunk": args.prefill_chunk,
-                  "paged_kernel": args.paged_kernel or None}
+                  "paged_kernel": args.paged_kernel or None,
+                  "prefix_cache": args.prefix_cache}
         if args.ttft_deadline or args.total_deadline:
             for r in requests:
                 r.ttft_deadline = args.ttft_deadline or None
@@ -250,6 +260,13 @@ def main(argv=None):
                   f"token split {st['prefill_tokens']}/{st['decode_tokens']} "
                   f"prefill/decode "
                   f"({st['prefill_tokens'] / tok_total:.0%} prefill)")
+            if eng.prefix_cache:
+                print(f"prefix cache: {st['prefix_hits']} hits, "
+                      f"{st['prefix_tokens_skipped']} prompt tokens skipped, "
+                      f"{st['prefix_shared_blocks']} blocks shared, "
+                      f"{st['prefix_cow_copies']} COW copies, "
+                      f"{st['prefix_evicted_blocks']} evicted, "
+                      f"{st['prefix_cached_blocks']} cached now")
         rel = {k: st[k] for k in (engine_mod.REJECTED_QUEUE_FULL, "cancelled",
                                   "deadline_ttft", "deadline_total",
                                   "preemptions", "faults_detected",

@@ -156,6 +156,24 @@ def make_chunk_step(cfg: ModelConfig, policy: GemmPolicy = EXACT,
     return chunk_step
 
 
+def make_copy_blocks_step():
+    """Jitted pool-block clone for copy-on-write prefix sharing.
+
+    ``(cache, src, dst) -> cache`` with pool rows ``dst`` overwritten by
+    ``src`` on every paged pool leaf (`models.api.copy_pool_blocks`). The
+    engine dispatches this between the host allocator's COW decision
+    (`paged.BlockPool.drain_copies`) and the next chunk/horizon step, so a
+    retargeted table row always reads an exact clone of the block it
+    shared — resumed prefill from a cached prefix stays bit-identical to a
+    cold one. One fused device call regardless of how many copies a step
+    queued (``src``/``dst`` are ``(n,) int32``)."""
+
+    def copy_blocks_step(cache, src, dst):
+        return model_api.copy_pool_blocks(cache, src, dst)
+
+    return jax.jit(copy_blocks_step)
+
+
 def make_multi_step(cfg: ModelConfig, policy: GemmPolicy = EXACT, n: int = 8,
                     batch_axes=(), paged_kernel=None):
     """Device-resident multi-step decode: a fixed-``n`` ``lax.scan`` over the

@@ -234,3 +234,23 @@ def reset_slot(cache, slot):
         out[key] = jax.lax.dynamic_update_slice_in_dim(leaf, slab, slot,
                                                        axis=ax)
     return out
+
+
+def copy_pool_blocks(cache, src, dst):
+    """Clone pool block rows ``src`` into ``dst`` on every paged pool leaf
+    (jit-traceable; ``src``/``dst`` are ``(n,) int32`` block ids).
+
+    The copy-on-write half of prefix caching: the host allocator
+    (`launch.paged.BlockPool.ensure`) retargets a writing slot's table at
+    fresh blocks and queues these copies so the new blocks start as exact
+    clones of the shared ones. Pool leaves put the block axis at 1 —
+    ``(L, n_blocks + 1, block_size, KH, hd)`` — and every non-pool leaf
+    (including ``block_tables``) passes through untouched.
+    """
+    out = {}
+    for key, leaf in cache.items():
+        if key in PAGED_POOL_LEAVES:
+            out[key] = leaf.at[:, dst].set(leaf[:, src])
+        else:
+            out[key] = leaf
+    return out

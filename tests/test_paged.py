@@ -28,7 +28,7 @@ except ImportError:  # deterministic fallback, see _hypothesis_fallback.py
 
 from repro.configs import ARCHS, reduced
 from repro.launch import engine as E
-from repro.launch.paged import BlockPool, PagedSpec, default_spec
+from repro.launch.paged import BlockPool, PagedSpec, chain_keys, default_spec
 from repro.models import get_model
 
 
@@ -103,6 +103,137 @@ def test_default_spec_matches_contiguous_budget():
     assert spec.n_blocks == 4 * 4 and spec.block_size == 8
     assert spec.blocks_for(0) == 0 and spec.blocks_for(1) == 1
     assert spec.blocks_for(8) == 1 and spec.blocks_for(9) == 2
+
+
+# --- prefix-sharing allocator properties (PR 10) -----------------------------
+
+_SEED = b"\x00" * 16                         # any 16-byte chain seed
+
+
+def test_pool_cow_and_eviction_directed():
+    """The full sharing lifecycle on one concrete pool: publish-while-live,
+    attach, whole-prompt-cached COW, tail-first eviction, invalidate."""
+    pool = BlockPool(PagedSpec(6, 2), 3, 12)
+    toks = np.arange(8, dtype=np.int32)      # 4 full blocks at bs=2
+    keys = chain_keys(_SEED, toks, 2)
+    pool.reserve(0, 4)
+    pool.ensure(0, 8)
+    pool.publish(0, keys)
+    assert pool.cached_blocks == 4
+    hits = pool.match_prefix(keys)
+    assert hits == pool._owned[0]            # position-aligned attach order
+    assert pool.match_prefix(keys[:2] + (b"nope",)) == hits[:2], \
+        "match must stop at the first gap (longest *leading* run)"
+    # whole-prompt-cached admission: resume at position 7 inside block 3
+    pool.reserve(1, 5, hits=hits, extra_cow=1, written=7)
+    assert pool.shared_attached == 4
+    pool.ensure(1, 8)                        # rewrite pos 7: block 3 is shared
+    copies = pool.drain_copies()
+    assert copies == [(hits[3], pool._owned[1][3])]
+    assert pool._owned[1][3] != hits[3] and pool.cow_copies == 1
+    pool.check()
+    # both retire: blocks park in the LRU, the COW clone (its key is still
+    # mapped to the original) goes back to the free list
+    pool.release(0, keys=keys)
+    assert pool.evictable_blocks == 1        # slot 1 still pins 3 blocks
+    pool.release(1, keys=keys)
+    assert pool.cached_blocks == 4 and pool.evictable_blocks == 4
+    pool.check()
+    # pressure: 3 fresh needed, 2 truly free — eviction drops exactly one
+    # cached block, and it is the chain *tail* (deepest key), so the
+    # surviving prefix still matches
+    pool.reserve(2, 3)
+    pool.ensure(2, 6)
+    assert pool.evicted_blocks == 1 and pool.cached_blocks == 3
+    assert pool.match_prefix(keys) == hits[:3]
+    pool.check()
+    pool.invalidate()
+    assert pool.cached_blocks == 0 and pool.match_prefix(keys) == []
+    pool.release(2)
+    pool.check()
+    assert pool.free_blocks == 6
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(4, 20), st.integers(1, 4), st.integers(2, 5),
+       st.integers(0, 10 ** 6))
+def test_pool_prefix_sharing_invariants(n_blocks, block_size, n_slots, seed):
+    """Random share/write/publish/release/invalidate workloads against a
+    small universe of prompt heads (so key collisions actually happen):
+    after every event `check()` holds — no double-free, no refcount leak,
+    LRU == the ref-0 keyed set — and after each write the COW contract
+    holds: every block in the written window is exclusively owned and
+    unkeyed (a shared or indexed block is never written in place)."""
+    rng = np.random.default_rng(seed)
+    bs = block_size
+    max_len = n_blocks * bs
+    pool = BlockPool(PagedSpec(n_blocks, bs), n_slots, max_len)
+    heads = [rng.integers(0, 99, bs * int(rng.integers(1, 4))).astype(np.int32)
+             for _ in range(3)]
+    live = {}                                # slot -> workload state
+    for _ in range(250):
+        op = int(rng.integers(0, 5))
+        if op == 0 and len(live) < n_slots:          # admit, matching first
+            slot = next(s for s in range(n_slots) if s not in live)
+            head = heads[int(rng.integers(len(heads)))]
+            tail = rng.integers(0, 99,
+                                int(rng.integers(1, 2 * bs))).astype(np.int32)
+            toks = np.concatenate([head, tail])
+            total = min(len(toks) + int(rng.integers(1, 2 * bs + 1)) - 1,
+                        max_len)
+            if total < len(toks):
+                continue                     # prompt alone overflows a slot
+            keys = chain_keys(_SEED, toks, bs)
+            hits = pool.match_prefix(keys)
+            cached = len(hits) * bs
+            resume = min(cached, len(toks) - 1)
+            extra = 1 if cached >= len(toks) else 0
+            need = pool.spec.blocks_for(total)
+            if not pool.can_admit(need - len(hits) + extra, hits):
+                continue                     # backpressure
+            pool.reserve(slot, need, hits=hits, extra_cow=extra,
+                         written=resume)
+            live[slot] = dict(toks=toks, total=total, keys=keys,
+                              written=resume)
+        elif op == 1 and live:                       # chunk/decode write
+            slot = int(rng.choice(list(live)))
+            w = live[slot]
+            upto = int(rng.integers(w["written"], w["total"] + 1))
+            w_old = w["written"]
+            pool.ensure(slot, upto)
+            w["written"] = max(w_old, upto)
+            for src, dst in pool.drain_copies():
+                assert src != dst, "COW clone onto itself"
+            if upto > w_old:                 # the COW-sweep contract
+                owned = pool._owned[slot]
+                for i in range(w_old // bs, pool.spec.blocks_for(upto)):
+                    assert pool._ref[owned[i]] == 1, \
+                        "written window holds a still-shared block"
+                    assert owned[i] not in pool._key_of, \
+                        "written window holds an index-mapped block"
+        elif op == 2 and live:                       # publish at prefill end
+            slot = int(rng.choice(list(live)))
+            w = live[slot]
+            if w["written"] >= len(w["toks"]):
+                pool.publish(slot, w["keys"])
+        elif op == 3 and live:                       # retire with cache keys
+            slot = int(rng.choice(list(live)))
+            w = live[slot]
+            full = w["written"] // bs
+            gen = (np.arange(w["total"] - len(w["toks"]), dtype=np.int64)
+                   + int(w["toks"].sum())) % 97
+            seq = np.concatenate([w["toks"], gen.astype(np.int32)])
+            pool.release(slot, keys=chain_keys(_SEED, seq[:full * bs], bs))
+            del live[slot]
+        elif op == 4 and int(rng.integers(8)) == 0:  # rare quarantine
+            pool.invalidate()
+        pool.check()
+    for slot in list(live):
+        pool.release(slot)
+    pool.check()
+    assert pool.free_blocks == n_blocks, "full release must restore the pool"
+    pool.invalidate()
+    assert pool.cached_blocks == 0 and len(pool._free) == n_blocks
 
 
 # --- engine-level invariants -------------------------------------------------

@@ -1,0 +1,375 @@
+"""Prefix caching on the paged KV pool: bit-exact block sharing (PR 10).
+
+The contract under test: with ``prefix_cache=True`` (the paged engine's
+default) every request's token stream is **bit-identical** to the same trace
+served with the cache off — sharing, copy-on-write, LRU eviction, preemption
+replay, and quarantine recovery must all be invisible in the streams — while
+the counters prove the sharing actually happened:
+
+* shared-system-prompt traces: later admissions attach the resident prefix
+  blocks and skip their prefill (``prefix_hits`` / ``prefix_tokens_skipped``);
+* multi-turn: a follow-up whose prompt extends a finished conversation
+  matches the *generated* blocks too (release keys cover prompt ++ output);
+* whole-prompt-cached resume rewrites one position of the last attached
+  block — the deterministic copy-on-write site (``prefix_cow_copies``);
+* partial-block boundaries: only full blocks carry keys, tails re-prefill;
+* pool pressure evicts unreferenced cached blocks (never referenced ones)
+  with streams unmoved; preempted victims replay from their cached prefix;
+* a cache fault quarantines AND invalidates the prefix index — a corrupted
+  shared block is never re-served (the PR-10 bugfix ride-along);
+* the bar holds across GEMM backends, bound params, ``multi_step`` horizons,
+  and the fused paged-attention kernel; families with per-slot cache state
+  outside the pool (ring buffers, SSM, xLSTM) auto-disable and still serve
+  bit-identical streams.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.core import gemm
+from repro.launch import engine as E
+from repro.launch import faults as F
+from repro.launch.paged import cache_seed, chain_keys
+from repro.models import get_model
+
+CFG = reduced(ARCHS["smollm-360m"])
+PARAMS = get_model(CFG).init_params(jax.random.PRNGKey(0))
+SYS = np.random.default_rng(7).integers(0, CFG.vocab_size, 16).astype(np.int32)
+
+ENGINE_KW = dict(max_slots=2, max_len=32, block_size=4, prefill_chunk=8)
+
+
+def shared_reqs(n=4, head=None, tail=3, gen=5, stagger=2, seed=0):
+    """n requests sharing a system-prompt head, each with a unique tail —
+    staggered arrivals so early finishers publish before later admissions."""
+    head = SYS if head is None else head
+    out = []
+    for rid in range(n):
+        t = np.random.default_rng(seed * 100 + rid).integers(
+            0, CFG.vocab_size, tail).astype(np.int32)
+        out.append(E.Request(rid=rid, prompt=np.concatenate([head, t]),
+                             max_new_tokens=gen, arrival=rid * stagger))
+    return out
+
+
+def run_pair(reqs_fn, policy=gemm.EXACT, params=PARAMS, cfg=CFG, **kw):
+    """Serve the trace warm (prefix cache on) and cold (off); assert every
+    stream bit-identical; return (finished, warm engine, cold engine)."""
+    merged = dict(ENGINE_KW)
+    merged.update(kw)
+    warm = E.ServeEngine(cfg, params, policy=policy, prefix_cache=True,
+                         **merged)
+    fw = warm.run(reqs_fn())
+    cold = E.ServeEngine(cfg, params, policy=policy, prefix_cache=False,
+                         **merged)
+    fc = cold.run(reqs_fn())
+    assert set(fw) == set(fc)
+    for rid in fw:
+        np.testing.assert_array_equal(
+            fw[rid].tokens, fc[rid].tokens,
+            err_msg=f"rid={rid}: cached stream diverged from uncached")
+    warm.pool.check()
+    cold.pool.check()
+    return fw, warm, cold
+
+
+# --- key chain unit properties -----------------------------------------------
+
+def test_chain_keys_identify_prefixes():
+    seed = cache_seed(CFG, gemm.EXACT)
+    toks = np.arange(16, dtype=np.int32)
+    keys = chain_keys(seed, toks, 4)
+    assert len(keys) == 4                    # full blocks only
+    assert len(chain_keys(seed, toks[:15], 4)) == 3
+    # a chain key identifies the whole prefix behind it, not just its block
+    other = toks.copy()
+    other[0] += 1
+    assert chain_keys(seed, other, 4)[3] != keys[3]
+    # equal leading tokens -> equal leading keys, diverging after
+    half = np.concatenate([toks[:8], toks[8:][::-1]])
+    k2 = chain_keys(seed, half, 4)
+    assert k2[:2] == keys[:2] and k2[2:] != keys[2:]
+    # the seed folds in cfg + policy: another backend can never match
+    seed2 = cache_seed(CFG, gemm.GemmPolicy(backend="mxu_int8"))
+    assert chain_keys(seed2, toks, 4)[0] != keys[0]
+
+
+# --- sharing, counters, boundaries -------------------------------------------
+
+def test_shared_system_prompt_bit_identical_with_hits():
+    fw, warm, cold = run_pair(shared_reqs)
+    st = warm.stats
+    assert st["prefix_cache"] is True
+    assert st["prefix_hits"] >= 2            # every follow-up after the first
+    assert st["prefix_tokens_skipped"] >= 2 * (len(SYS) // 4) * 4 - 8
+    assert st["prefix_shared_blocks"] >= st["prefix_hits"]
+    # skipped prefill is visible in the occupancy split too
+    assert st["prefill_tokens"] < cold.stats["prefill_tokens"]
+    assert cold.stats["prefix_hits"] == 0
+
+
+def test_multi_turn_reuses_generated_blocks():
+    """Turn 2's prompt = turn 1's prompt ++ its output ++ new user tokens:
+    the release-time key chain covers generated blocks, so the follow-up
+    skips past the whole recorded conversation, not just the old prompt."""
+    kw = dict(ENGINE_KW)
+    turn1 = [E.Request(rid=0, prompt=SYS.copy(), max_new_tokens=6)]
+    warm = E.ServeEngine(CFG, PARAMS, policy=gemm.EXACT, **kw)
+    f1 = warm.run(turn1)
+    convo = np.concatenate(
+        [SYS, f1[0].tokens,
+         np.random.default_rng(1).integers(0, CFG.vocab_size, 2)]
+    ).astype(np.int32)
+    f2 = warm.run([E.Request(rid=1, prompt=convo, max_new_tokens=5)])
+    cold = E.ServeEngine(CFG, PARAMS, policy=gemm.EXACT, prefix_cache=False,
+                         **kw)
+    ref = cold.run([E.Request(rid=1, prompt=convo.copy(), max_new_tokens=5)])
+    np.testing.assert_array_equal(f2[1].tokens, ref[1].tokens)
+    # the hit run extends past the old prompt into generated territory
+    assert warm.stats["prefix_tokens_skipped"] > len(SYS)
+    warm.pool.check()
+
+
+@pytest.mark.parametrize("plen", (11, 12, 13))
+def test_partial_block_prefix_boundaries(plen):
+    """Prompt lengths straddling a block boundary (bs=4): only full blocks
+    are keyed, the tail re-prefills, and the length-aligned case resumes
+    one position early through the COW path — streams unmoved in all."""
+    head = SYS[:plen]
+
+    def reqs():
+        return [E.Request(rid=0, prompt=head.copy(), max_new_tokens=4,
+                          arrival=0),
+                E.Request(rid=1, prompt=head.copy(), max_new_tokens=4,
+                          arrival=8)]
+
+    _, warm, _ = run_pair(reqs)
+    st = warm.stats
+    assert st["prefix_hits"] == 1
+    assert st["prefix_tokens_skipped"] == min(plen - plen % 4, plen - 1)
+    # the publisher already retired, so the whole-cached resume rewrites an
+    # exclusively-held block: the pool *detaches* it from the index instead
+    # of cloning (COW is for live sharers — see the concurrent test)
+    assert st["prefix_cow_copies"] == 0
+
+
+def test_concurrent_share_cow_while_publisher_live():
+    """The second request admits while the first is still generating: it
+    attaches blocks published at prefill completion (refcount 2), so its
+    boundary rewrite must clone, never touch the shared block."""
+
+    def reqs():
+        return [E.Request(rid=0, prompt=SYS.copy(), max_new_tokens=8,
+                          arrival=0),
+                E.Request(rid=1, prompt=SYS.copy(), max_new_tokens=8,
+                          arrival=6)]
+
+    _, warm, _ = run_pair(reqs)
+    assert warm.stats["prefix_hits"] == 1
+    assert warm.stats["prefix_cow_copies"] >= 1
+
+
+def test_eviction_under_pressure_streams_unmoved():
+    """Distinct-prefix churn through a pool too small to cache everything:
+    unreferenced cached blocks are evicted (referenced ones never — the
+    allocator asserts), admission never deadlocks on cached residue, and
+    every stream still matches the uncached run."""
+    def reqs():
+        return [E.Request(rid=rid,
+                          prompt=np.random.default_rng(50 + rid).integers(
+                              0, CFG.vocab_size, 8).astype(np.int32),
+                          max_new_tokens=4)
+                for rid in range(6)]
+
+    _, warm, _ = run_pair(reqs, n_blocks=8)
+    assert warm.stats["prefix_evicted_blocks"] > 0
+    assert warm.stats["prefix_hits"] == 0    # all prefixes distinct
+
+
+def test_preempted_request_replays_from_cached_prefix():
+    """A preempted victim's blocks stay in the index: its re-admission
+    attaches them and resumes instead of re-prefilling from scratch,
+    with the replayed stream bit-identical to an undisturbed run."""
+    kw = dict(max_slots=2, max_len=16, block_size=4, n_blocks=6,
+              prefill_chunk=8)
+    low = E.Request(rid=0, prompt=SYS[:8].copy(), max_new_tokens=8,
+                    priority=0, arrival=0)
+    high = E.Request(rid=1, prompt=SYS[4:12].copy(), max_new_tokens=8,
+                     priority=5, arrival=4)
+    warm = E.ServeEngine(CFG, PARAMS, policy=gemm.EXACT, **kw)
+    fin = warm.run([dataclasses.replace(low), dataclasses.replace(high)])
+    assert fin[0].preemptions >= 1
+    assert warm.events["preemptions"] >= 1
+    assert warm.stats["prefix_hits"] >= 1    # the replay resumed from cache
+    ref = E.ServeEngine(CFG, PARAMS, policy=gemm.EXACT, prefix_cache=False,
+                        **kw).run([dataclasses.replace(low),
+                                   dataclasses.replace(high)])
+    for rid in fin:
+        np.testing.assert_array_equal(fin[rid].tokens, ref[rid].tokens,
+                                      err_msg=f"rid={rid}")
+    warm.pool.check()
+
+
+def test_prefix_cache_off_flag():
+    eng = E.ServeEngine(CFG, PARAMS, policy=gemm.EXACT, prefix_cache=False,
+                        **ENGINE_KW)
+    assert eng.prefix_cache is False
+    eng.run(shared_reqs())
+    st = eng.stats
+    assert st["prefix_cache"] is False
+    assert st["prefix_hits"] == 0 and st["prefix_shared_blocks"] == 0
+    assert st["prefix_cached_blocks"] == 0
+    # the contiguous engine has no pool at all: flag is inert, not an error
+    contig = E.ServeEngine(CFG, PARAMS, policy=gemm.EXACT, paged=False,
+                           max_slots=2, max_len=32)
+    assert contig.prefix_cache is False
+
+
+# --- dispatch-path matrix: multi_step, kernel, backends, families ------------
+
+def test_prefix_cache_multi_step_horizons():
+    """Fused decode horizons over attached prefixes: ensure_horizon clamps
+    to the reservation and never sweeps the shared blocks (horizons only
+    run once prefill — including the resumed tail — is complete)."""
+    _, warm, _ = run_pair(shared_reqs, multi_step=4)
+    assert warm.stats["prefix_hits"] >= 2
+
+
+@pytest.mark.kernel
+def test_prefix_cache_paged_kernel():
+    """Fused paged-attention kernel reading through shared block tables."""
+    _, warm, _ = run_pair(shared_reqs, paged_kernel=1)
+    assert warm.stats["prefix_hits"] >= 2
+
+
+@pytest.mark.parametrize("backend", ("exact", "mxu_int8", "approx_delta",
+                                     "approx_lut", "approx_onehot"))
+def test_prefix_cache_backends_bit_identical(backend):
+    """Cached == uncached streams for every GEMM backend on dense, served
+    weight-stationary (bound params) as in production. The chain seed folds
+    the policy in, so backends can never share each other's blocks."""
+    pol = gemm.GemmPolicy(backend=backend, k=4)
+    p = (get_model(CFG).bind_params(PARAMS, pol)
+         if backend != "exact" else PARAMS)
+    short = backend in ("approx_lut", "approx_onehot")
+    n, gen = (3, 3) if short else (4, 5)
+    _, warm, _ = run_pair(lambda: shared_reqs(n=n, gen=gen), policy=pol,
+                          params=p)
+    assert warm.stats["prefix_hits"] >= 1
+
+
+def test_prefix_cache_backend_oracle_bit_identical():
+    """The bit-level oracle backend, tiny config (it is interpret-slow)."""
+    cfg = dataclasses.replace(CFG, n_layers=1, vocab_size=64)
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    pol = gemm.GemmPolicy(backend="approx_oracle", k=4)
+    p = model.bind_params(params, pol)
+    head = np.random.default_rng(7).integers(0, 64, 6).astype(np.int32)
+
+    def reqs():
+        return [E.Request(rid=0, prompt=head.copy(), max_new_tokens=2,
+                          arrival=0),
+                E.Request(rid=1, prompt=head.copy(), max_new_tokens=2,
+                          arrival=5)]
+
+    _, warm, _ = run_pair(reqs, policy=pol, params=p, cfg=cfg, max_slots=2,
+                          max_len=12, block_size=2, prefill_chunk=2)
+    assert warm.stats["prefix_hits"] == 1
+
+
+# families: pool-pure caches share; per-slot-state families auto-disable —
+# either way the streams must not move
+FAMILY_EXPECT = (("qwen3-moe-30b-a3b", True), ("pixtral-12b", True),
+                 ("zamba2-1.2b", False), ("xlstm-350m", False),
+                 ("gemma3-12b", False))
+
+
+@pytest.mark.parametrize("arch,expect_on", FAMILY_EXPECT)
+@pytest.mark.parametrize("mode", ("exact", "delta_bound"))
+def test_prefix_cache_families(arch, mode, expect_on):
+    cfg = reduced(ARCHS[arch])
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    if mode == "exact":
+        pol, p = gemm.EXACT, params
+    else:
+        pol = gemm.GemmPolicy(backend="approx_delta", k=4)
+        p = model.bind_params(params, pol)
+    head = np.random.default_rng(9).integers(0, cfg.vocab_size, 6).astype(
+        np.int32)
+
+    def reqs():
+        out = []
+        for rid in range(3):
+            t = np.random.default_rng(200 + rid).integers(
+                0, cfg.vocab_size, 2).astype(np.int32)
+            out.append(E.Request(rid=rid, prompt=np.concatenate([head, t]),
+                                 max_new_tokens=3, arrival=rid * 2))
+        return out
+
+    _, warm, _ = run_pair(reqs, policy=pol, params=p, cfg=cfg, max_slots=2,
+                          max_len=24, block_size=4, prefill_chunk=4)
+    assert warm.prefix_cache is expect_on
+    if expect_on:
+        assert warm.stats["prefix_hits"] >= 1
+    else:
+        assert warm.stats["prefix_hits"] == 0
+
+
+def test_vlm_embeds_request_skips_cache_per_request():
+    """A VLM request carrying patch embeds has prompt content the token key
+    chain cannot identify — it must neither publish nor match, while pure
+    token requests on the same engine still share."""
+    cfg = reduced(ARCHS["pixtral-12b"])
+    model = get_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    head = np.random.default_rng(9).integers(0, cfg.vocab_size, 8).astype(
+        np.int32)
+    embeds = np.random.default_rng(10).normal(
+        size=(2, cfg.d_model)).astype(np.float32)
+
+    def reqs():
+        return [E.Request(rid=0, prompt=head.copy(), max_new_tokens=3,
+                          arrival=0),
+                E.Request(rid=1, prompt=head.copy(), max_new_tokens=3,
+                          arrival=4, input_embeds=embeds.copy()),
+                E.Request(rid=2, prompt=head.copy(), max_new_tokens=3,
+                          arrival=8)]
+
+    _, warm, _ = run_pair(reqs, cfg=cfg, params=params, max_slots=2,
+                          max_len=24, block_size=4, prefill_chunk=4)
+    # rid=2 hits rid=0's published prefix; rid=1 (embeds) never matches
+    assert warm.stats["prefix_hits"] == 1
+
+
+# --- quarantine: the bugfix ride-along ---------------------------------------
+
+@pytest.mark.faultinject
+def test_quarantine_invalidates_prefix_index():
+    """A cache fault must drop the prefix index before recovery: a later
+    same-prompt request re-prefills cold (zero hits) instead of attaching
+    the corrupted shared block — and its stream is still bit-identical."""
+    pol = gemm.GemmPolicy(backend="exact", guard="detect")
+    eng = E.ServeEngine(CFG, PARAMS, policy=pol, **ENGINE_KW)
+    prompt = SYS.copy()                      # 12 tokens = 3 full blocks
+    eng.run([E.Request(rid=0, prompt=prompt, max_new_tokens=4)])
+    assert eng.stats["prefix_cached_blocks"] >= 3
+    # corrupt one *cached* (index-mapped) pool block, bit-for-bit targeted
+    blk = next(iter(eng.pool._index.values()))
+    inj = F.FaultInjector(3)
+    eng.cache, rec = inj.flip_cache_block(eng.cache, int(blk))
+    assert rec.note == f"block={int(blk)}"
+    fin = eng.run([E.Request(rid=1, prompt=prompt.copy(), max_new_tokens=4)])
+    assert eng.events["quarantines"] == 1
+    assert eng.stats["prefix_invalidations"] == 1
+    assert eng.stats["prefix_hits"] == 0     # replay was cold, never served
+    assert eng.stats["prefix_cached_blocks"] >= 3   # rebuilt cache re-indexed
+    ref = E.ServeEngine(CFG, PARAMS, policy=gemm.EXACT, prefix_cache=False,
+                        **ENGINE_KW).run(
+        [E.Request(rid=1, prompt=prompt.copy(), max_new_tokens=4)])
+    np.testing.assert_array_equal(fin[1].tokens, ref[1].tokens)
+    eng.pool.check()
